@@ -1,0 +1,84 @@
+"""Roofline table from the multi-pod dry-run artifacts (§Roofline).
+
+Reads ``results/dryrun.jsonl`` (written by ``repro.launch.dryrun``, which
+must run in its own process — it forces 512 host devices) and renders the
+per-(arch × shape) roofline terms, dominant bottleneck, MODEL_FLOPS ratio
+and per-device memory. Single-pod rows only, per the assignment.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # newest record wins per (arch, shape, multi_pod)
+    dedup: Dict = {}
+    for r in rows:
+        dedup[(r.get("arch"), r.get("shape"), r.get("multi_pod"))] = r
+    return list(dedup.values())
+
+
+def table(path: str = DEFAULT_PATH, multi_pod: Optional[bool] = False
+          ) -> List[Dict]:
+    rows = []
+    for r in load(path):
+        if r.get("ok") is None:   # skipped cell
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "SKIP", "note": r.get("skipped", "")})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "FAIL", "note": r.get("error", "")})
+            continue
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "OK",
+            "t_compute_s": rl["t_compute"],
+            "t_memory_s": rl["t_memory"],
+            "t_collective_s": rl["t_collective"],
+            "dominant": rl["dominant"],
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "peak_gib_per_device": (r["memory"]["peak_bytes_per_device"]
+                                    / 2 ** 30),
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def render(path: str = DEFAULT_PATH) -> str:
+    rows = table(path)
+    if not rows:
+        return ("roofline: no dry-run artifacts found; run\n"
+                "  PYTHONPATH=src python -m repro.launch.dryrun\n")
+    hdr = (f"{'arch':28s} {'shape':12s} {'stat':5s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'dominant':10s} {'useful':>7s} "
+           f"{'GiB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] != "OK":
+            lines.append(f"{r['arch']:28s} {r['shape']:12s} "
+                         f"{r['status']:5s} {r.get('note', '')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:12s} OK    "
+            f"{r['t_compute_s']*1e3:8.2f}m {r['t_memory_s']*1e3:8.2f}m "
+            f"{r['t_collective_s']*1e3:8.2f}m {r['dominant']:10s} "
+            f"{(r['useful_flops_ratio'] or 0):7.2f} "
+            f"{r['peak_gib_per_device']:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,176 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* ``us_per_call`` — the headline per-unit latency of that benchmark cell
+  (per-task toolkit overhead for the EnTK benchmarks, per-event/per-location
+  time for the use cases).
+* ``derived`` — the figure-specific metric(s), ``k=v`` joined by ``;``.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --only fig6,fig8
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _row(name: str, us_per_call: float, **derived) -> None:
+    dv = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.3f},{dv}", flush=True)
+
+
+def fig6_prototype(quick: bool) -> None:
+    from benchmarks import prototype
+    n = 50_000 if quick else 200_000
+    for r in prototype.run(n_tasks=n):
+        _row(f"fig6_prototype_w{r['n_workers']}", r["us_per_task"],
+             n_tasks=r["n_tasks"],
+             tasks_per_s=round(r["tasks_per_second"]),
+             peak_rss_mb=round(r["peak_rss_mb"], 1))
+
+
+def fig7_overheads(quick: bool) -> None:
+    from benchmarks import overheads
+    for r in overheads.run():
+        n_tasks = 16
+        ov = (r["entk_setup_s"] + r["entk_management_s"]
+              + r["entk_teardown_s"])
+        _row(f"fig7_{r['experiment']}_{r['variant']}",
+             ov / n_tasks * 1e6,
+             entk_setup_s=round(r["entk_setup_s"], 4),
+             entk_mgmt_s=round(r["entk_management_s"], 4),
+             entk_teardown_s=round(r["entk_teardown_s"], 4),
+             rts_overhead_s=round(r["rts_overhead_s"], 4),
+             task_exec_s=round(r.get("task_execution_virtual_s", 0.0), 1),
+             makespan_s=round(r.get("virtual_makespan_s", 0.0), 1),
+             all_done=r["all_done"])
+
+
+def fig8_weak(quick: bool) -> None:
+    from benchmarks import scaling
+    sizes = (256, 512, 1024) if quick else (512, 1024, 2048, 4096)
+    for r in scaling.weak_scaling(sizes):
+        _row(f"fig8_weak_{r['n_tasks']}",
+             r["entk_management_s"] / r["n_tasks"] * 1e6,
+             avg_task_exec_s=round(r["avg_task_execution_s"], 1),
+             makespan_s=round(r["virtual_makespan_s"], 1),
+             mgmt_s=round(r["entk_management_s"], 3),
+             staging_s=round(r["staging_virtual_s"], 1),
+             all_done=r["all_done"])
+
+
+def fig9_strong(quick: bool) -> None:
+    from benchmarks import scaling
+    n = 2048 if quick else 8192
+    slots = (512, 1024) if quick else (1024, 2048, 4096)
+    for r in scaling.strong_scaling(n, slots):
+        _row(f"fig9_strong_{r['slots']}",
+             r["entk_management_s"] / r["n_tasks"] * 1e6,
+             n_tasks=r["n_tasks"],
+             makespan_s=round(r["virtual_makespan_s"], 1),
+             mgmt_s=round(r["entk_management_s"], 3),
+             all_done=r["all_done"])
+
+
+def fig10_seismic(quick: bool) -> None:
+    from benchmarks import use_cases
+    n = 8 if quick else 16
+    cs = (1, 2, 4) if quick else (1, 2, 4, 8)
+    for r in use_cases.seismic_concurrency(n, cs,
+                                           nx=48 if quick else 64,
+                                           nt=80 if quick else 120):
+        _row(f"fig10_seismic_c{r['concurrency']}",
+             r["wallclock_s"] / r["n_events"] * 1e6,
+             task_exec_s=round(r["task_execution_s"], 2),
+             wallclock_s=round(r["wallclock_s"], 2),
+             attempts=r["attempts"], n_events=r["n_events"],
+             failure_rate=r["failure_rate"], all_done=r["all_done"])
+
+
+def fig11_anen(quick: bool) -> None:
+    from benchmarks import use_cases
+    t0 = time.time()
+    rows = use_cases.anen_compare(
+        repeats=2 if quick else 4,
+        ny=48 if quick else 64, nx=48 if quick else 64,
+        per_iter=30 if quick else 40,
+        max_iters=3 if quick else 4,
+        n_hist=60 if quick else 100)
+    per_loc_us = (time.time() - t0) / max(
+        1, sum(r["n_locations"] for r in rows)) * 1e6
+    import numpy as np
+    aua = [r["aua_rmse"] for r in rows]
+    rnd = [r["random_rmse"] for r in rows]
+    _row("fig11_anen_adaptive", per_loc_us,
+         aua_median_rmse=round(float(np.median(aua)), 4),
+         random_median_rmse=round(float(np.median(rnd)), 4),
+         aua_wins=sum(r["aua_wins"] for r in rows),
+         repeats=len(rows))
+
+
+def roofline_table(quick: bool) -> None:
+    import os
+    from benchmarks import roofline
+    variants = [("baseline", roofline.DEFAULT_PATH)]
+    opt = roofline.DEFAULT_PATH.replace("dryrun.jsonl", "dryrun_opt.jsonl")
+    if os.path.exists(opt):
+        variants.append(("opt", opt))
+    emitted = False
+    for tag, path in variants:
+        for r in roofline.table(path):
+            emitted = True
+            if r["status"] != "OK":
+                _row(f"roofline_{tag}_{r['arch']}_{r['shape']}", 0.0,
+                     status=r["status"])
+                continue
+            step = max(r["t_compute_s"], r["t_memory_s"],
+                       r["t_collective_s"])
+            _row(f"roofline_{tag}_{r['arch']}_{r['shape']}", step * 1e6,
+                 dominant=r["dominant"],
+                 t_comp_ms=round(r["t_compute_s"] * 1e3, 2),
+                 t_mem_ms=round(r["t_memory_s"] * 1e3, 2),
+                 t_coll_ms=round(r["t_collective_s"] * 1e3, 2),
+                 useful=round(r["useful_flops_ratio"] or 0, 3),
+                 gib_per_dev=round(r["peak_gib_per_device"], 2))
+    if not emitted:
+        _row("roofline", 0.0,
+             note="no dry-run artifacts; run python -m repro.launch.dryrun")
+
+
+BENCHES = {
+    "fig6": fig6_prototype,
+    "fig7": fig7_overheads,
+    "fig8": fig8_weak,
+    "fig9": fig9_strong,
+    "fig10": fig10_seismic,
+    "fig11": fig11_anen,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    picks = [s for s in args.only.split(",") if s] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in picks:
+        t0 = time.time()
+        try:
+            BENCHES[name](args.quick)
+        except Exception as e:  # noqa: BLE001 - report, keep benching
+            _row(f"{name}_ERROR", 0.0, error=f"{type(e).__name__}:{e}")
+        sys.stderr.write(f"[bench] {name} took {time.time()-t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Figs. 8 & 9 — weak and strong scalability on the Titan profile.
+
+Weak scaling (Fig. 8): 512 / 1,024 / 2,048 / 4,096 single-slot ≈600 s tasks
+on an equal number of slots; each task stages 4 files (3 links of 130 B +
+one 550 KB file, as in the paper). Expected reproduction: task execution
+time grows gently with scale (serialized agent/collection delays),
+management overhead grows past 2,048 tasks, staging grows linearly.
+
+Strong scaling (Fig. 9): 8,192 tasks on 1,024 / 2,048 / 4,096 slots —
+task-execution wall time halves with slots; overheads stay constant
+(they depend on task count, not pilot size).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.core.profiler import (DATA_STAGING, ENTK_MANAGEMENT,
+                                 TASK_EXECUTION)
+from repro.rts.base import ResourceDescription
+from repro.rts.simulated import SimulatedRTS
+
+
+def _gromacs_like(n: int) -> Pipeline:
+    pipe = Pipeline(f"scale-{n}")
+    st = Stage("mdrun")
+    st.add_tasks([
+        Task(name=f"md{i:05d}", executable="sleep://600",
+             tags={"staging_files": 4, "staging_bytes": 550e3 + 3 * 130})
+        for i in range(n)])
+    pipe.add_stages(st)
+    return pipe
+
+
+def _run(n_tasks: int, slots: int) -> Dict[str, float]:
+    amgr = AppManager(
+        resources=ResourceDescription(slots=slots, platform="titan"),
+        rts_factory=lambda: SimulatedRTS(seed=1),
+        heartbeat_interval=5.0, flush_every=1024)
+    amgr.workflow = [_gromacs_like(n_tasks)]
+    totals = amgr.run(timeout=600)
+    rts = amgr.emgr.rts
+    return {
+        "n_tasks": n_tasks,
+        "slots": slots,
+        "avg_task_execution_s": totals.get(TASK_EXECUTION, 0.0) / n_tasks,
+        "virtual_makespan_s": rts.vnow,
+        "entk_management_s": totals.get(ENTK_MANAGEMENT, 0.0),
+        "staging_virtual_s": totals.get(DATA_STAGING, 0.0),
+        "all_done": amgr.all_done,
+    }
+
+
+def weak_scaling(sizes=(512, 1024, 2048, 4096)) -> List[Dict]:
+    return [dict(_run(n, n), experiment="weak") for n in sizes]
+
+
+def strong_scaling(n_tasks: int = 8192,
+                   slot_counts=(1024, 2048, 4096)) -> List[Dict]:
+    return [dict(_run(n_tasks, s), experiment="strong")
+            for s in slot_counts]

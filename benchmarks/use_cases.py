@@ -1,0 +1,50 @@
+"""Figs. 10 & 11 — the two use cases at (scaled-down) scale.
+
+Fig. 10: seismic forward-simulation ensembles at varying concurrency with
+failure injection at high concurrency; EnTK resubmission completes the
+ensemble (the paper attempted 157 tasks for 128 nominal at 2⁵ concurrency).
+
+Fig. 11: AUA adaptive analog placement vs random placement — repeated runs,
+error distributions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.apps.anen.workflow import run_adaptive, run_random
+from repro.apps.seismic.workflow import run_forward_ensemble
+
+
+def seismic_concurrency(n_events: int = 16,
+                        concurrencies=(1, 2, 4, 8),
+                        nx: int = 64, nt: int = 120) -> List[Dict]:
+    rows = []
+    for c in concurrencies:
+        # the paper observed failures only at the highest concurrency
+        # (shared-filesystem overload); model that threshold behaviour
+        failure_rate = 0.3 if c >= max(concurrencies) else 0.0
+        rows.append(dict(
+            run_forward_ensemble(n_events, c, failure_rate=failure_rate,
+                                 nx=nx, nt=nt),
+            experiment="seismic"))
+    return rows
+
+
+def anen_compare(repeats: int = 3, ny: int = 64, nx: int = 64,
+                 per_iter: int = 40, max_iters: int = 4,
+                 n_hist: int = 100) -> List[Dict]:
+    rows = []
+    for seed in range(repeats):
+        kw = dict(ny=ny, nx=nx, per_iter=per_iter, max_iters=max_iters,
+                  n_hist=n_hist)
+        a = run_adaptive(seed=seed, **kw)
+        r = run_random(seed=seed, **kw)
+        rows.append({"experiment": "anen", "seed": seed,
+                     "aua_rmse": a["final_rmse"],
+                     "random_rmse": r["final_rmse"],
+                     "aua_errors": a["errors"],
+                     "random_errors": r["errors"],
+                     "n_locations": a["n_locations"],
+                     "aua_wins": a["final_rmse"] < r["final_rmse"]})
+    return rows

@@ -1,0 +1,106 @@
+"""Seismic FWI mini-campaign (paper use case §III-A) under EnTK.
+
+1. "Observe": forward-simulate an ensemble of earthquakes on the true
+   velocity model (EnTK stage of concurrent forward tasks, with injected
+   failures + automatic resubmission — the Fig. 10 scenario).
+2. Invert: a few adjoint-gradient iterations on a smooth starting model,
+   each iteration an EnTK stage of per-event gradient tasks whose results
+   are summed into a model update.
+
+    PYTHONPATH=src python examples/seismic_inversion.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import AppManager, Pipeline, Stage, Task, \
+    register_executable  # noqa: E402
+from repro.rts.base import ResourceDescription  # noqa: E402
+from repro.rts.local import LocalRTS  # noqa: E402
+from repro.apps.seismic.solver import (SeismicConfig, forward_simulation,
+                                       make_velocity_model,
+                                       misfit_and_grad)  # noqa: E402
+
+CFG = SeismicConfig(nx=64, nz=64, nt=140, n_receivers=16)
+_STATE = {}
+
+
+def observe_task(source_x: int):
+    vel = _STATE["v_true"]
+    seis = forward_simulation(vel, source_x, CFG)
+    return {"source_x": source_x, "seis": np.asarray(seis).tolist()}
+
+
+def gradient_task(source_x: int):
+    v = _STATE["v_current"]
+    obs = _STATE["observed"][source_x]
+    m, g = misfit_and_grad(v, obs, source_x, CFG)
+    return {"misfit": float(m), "grad": np.asarray(g).tolist()}
+
+
+register_executable("fwi_observe", observe_task)
+register_executable("fwi_gradient", gradient_task)
+
+
+def run_stage(tasks, slots=4, failure_rate=0.0):
+    rng = np.random.default_rng(0)
+    amgr = AppManager(
+        resources=ResourceDescription(slots=slots),
+        rts_factory=lambda: LocalRTS(
+            fault_injector=lambda t: rng.random() < failure_rate))
+    pipe = Pipeline("fwi")
+    st = Stage()
+    st.add_tasks(tasks)
+    pipe.add_stages(st)
+    amgr.workflow = [pipe]
+    amgr.run(timeout=1800)
+    assert amgr.all_done, "stage failed"
+    return [t.result for t in st.tasks]
+
+
+def main() -> None:
+    sources = [12, 24, 36, 48]
+    _STATE["v_true"] = make_velocity_model(CFG, "true")
+
+    print("stage 1: observing (forward ensemble, 30% injected failures)")
+    results = run_stage(
+        [Task(name=f"obs{sx}", executable="reg://fwi_observe",
+              kwargs={"source_x": sx}, max_retries=5) for sx in sources],
+        failure_rate=0.3)
+    _STATE["observed"] = {
+        r["source_x"]: jnp.asarray(r["seis"], jnp.float32) for r in results}
+
+    v = make_velocity_model(CFG, "background")
+    print("stage 2: adjoint inversion iterations (backtracking steps)")
+    eps = 4.0  # m/s perturbation along the normalized gradient
+    prev = None
+    for it in range(4):
+        _STATE["v_current"] = v
+        grads = run_stage(
+            [Task(name=f"grad{it}-{sx}", executable="reg://fwi_gradient",
+                  kwargs={"source_x": sx}, max_retries=2)
+             for sx in sources])
+        total_misfit = sum(g["misfit"] for g in grads)
+        if prev is not None and total_misfit > prev:
+            eps *= 0.3  # overshoot: backtrack
+        prev = total_misfit
+        g_sum = jnp.asarray(
+            np.sum([np.asarray(g["grad"]) for g in grads], axis=0),
+            jnp.float32)
+        g_norm = g_sum / max(1e-12, float(jnp.abs(g_sum).max()))
+        v = v - eps * g_norm
+        err = float(jnp.abs(v - _STATE["v_true"]).mean())
+        print(f"  iter {it}: misfit {total_misfit:10.5f}  "
+              f"model error {err:8.3f} m/s  (step {eps:.2f} m/s)")
+    print("done — misfit decreased via EnTK-managed adjoint ensembles")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Use-case applications from the paper (§III), implemented in JAX."""

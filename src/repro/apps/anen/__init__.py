@@ -1,0 +1,5 @@
+"""Analog-Ensemble forecasting use case (paper §III-B / §IV-C.2)."""
+
+from .anen import (AnEnConfig, AnEnData, make_dataset, compute_analogs,  # noqa: F401
+                   idw_interpolate, rmse)
+from .workflow import run_adaptive, run_random, compare_methods  # noqa: F401

@@ -1,0 +1,266 @@
+"""AppManager: the master component of the toolkit (paper §II-B.2/3).
+
+Responsibilities, mirroring the paper:
+
+* holds the application description and the authoritative state table,
+* creates all queues, spawns the Synchronizer, instantiates WFProcessor and
+  ExecManager,
+* supervises component threads (restarting any that die — failure model),
+* supervises the RTS through the ExecManager heartbeat (restart + resubmit),
+* journals every transition so a full toolkit failure can resume "up to the
+  latest successful transaction" (``resume=True`` skips completed tasks by
+  name),
+* exposes the overhead decomposition the paper measures (setup / management /
+  tear-down / RTS / staging / execution).
+
+Beyond the paper (framework requirements at 10³+ nodes): elastic pilot
+resizing, straggler speculation (see ExecManager), pluggable RTS factories.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Union
+
+from . import states as st
+from .broker import Broker
+from .exceptions import EnTKError, ValueError_
+from .journal import Journal
+from .profiler import (ENTK_SETUP, ENTK_TEARDOWN, Profiler)
+from .pst import Pipeline, Task
+from .execmanager import ExecManager
+from .state_service import StateService
+from .synchronizer import Synchronizer
+from .wfprocessor import WFProcessor
+from ..rts.base import RTS, ResourceDescription
+from ..rts.local import LocalRTS
+
+
+class AppManager:
+    """Programmatic entry point.
+
+    Typical use::
+
+        amgr = AppManager(resources=ResourceDescription(slots=8))
+        amgr.workflow = [pipeline1, pipeline2]
+        amgr.run()
+
+    ``rts_factory`` defaults to :class:`LocalRTS`. ``journal_path`` enables
+    durable transactions and resume.
+    """
+
+    def __init__(
+        self,
+        resources: Optional[ResourceDescription] = None,
+        rts_factory: Optional[Callable[[], RTS]] = None,
+        journal_path: Optional[str] = None,
+        strict_transactions: bool = False,
+        on_task_failure: str = "continue",
+        heartbeat_interval: float = 0.5,
+        max_rts_restarts: int = 3,
+        straggler_factor: float = 0.0,
+        component_supervision: bool = True,
+        flush_every: int = 32,
+    ) -> None:
+        self.resources = resources or ResourceDescription(slots=4)
+        self.rts_factory = rts_factory or LocalRTS
+        self.journal_path = journal_path
+        self.strict_transactions = strict_transactions
+        self.on_task_failure = on_task_failure
+        self.heartbeat_interval = heartbeat_interval
+        self.max_rts_restarts = max_rts_restarts
+        self.straggler_factor = straggler_factor
+        self.component_supervision = component_supervision
+        self.flush_every = flush_every
+
+        self.workflow: List[Pipeline] = []
+        self.prof = Profiler()
+        self.state_table: Dict[str, str] = {}
+        self.task_index: Dict[str, Task] = {}
+
+        self.broker: Optional[Broker] = None
+        self.journal: Optional[Journal] = None
+        self.svc: Optional[StateService] = None
+        self.sync: Optional[Synchronizer] = None
+        self.wfp: Optional[WFProcessor] = None
+        self.emgr: Optional[ExecManager] = None
+        self._supervisor: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.component_restarts = 0
+        self._terminated = False
+
+    # -- workflow handling -----------------------------------------------------#
+
+    def _validate(self, resume: bool) -> None:
+        if not self.workflow:
+            raise ValueError_("workflow is empty")
+        names = [t.name for p in self.workflow for s in p.stages
+                 for t in s.tasks]
+        if (resume or self.journal_path) and len(names) != len(set(names)):
+            raise ValueError_(
+                "resumable workflows require unique task names")
+        for p in self.workflow:
+            if not p.stages:
+                raise ValueError_(f"pipeline {p.uid} has no stages")
+            for s in p.stages:
+                if not s.tasks:
+                    raise ValueError_(f"stage {s.uid} has no tasks")
+
+    def _index_tasks(self) -> None:
+        for p in self.workflow:
+            for s in p.stages:
+                for t in s.tasks:
+                    self.task_index[t.uid] = t
+
+    # -- main entry -------------------------------------------------------------#
+
+    def run(self, resume: bool = False, timeout: float = 3600.0) -> Dict[str, float]:
+        """Execute the workflow to completion; returns the overhead report.
+
+        ``resume=True`` replays the journal at ``journal_path`` and skips
+        tasks whose last journaled state was DONE.
+        """
+        # ---- setup (profiled: EnTK Setup Overhead) --------------------------- #
+        self.prof.begin(ENTK_SETUP)
+        self._validate(resume)
+        resumed_done = set()
+        resumed_retries: Dict[str, int] = {}
+        if resume and self.journal_path and os.path.exists(self.journal_path):
+            replay = Journal.replay(self.journal_path)
+            for (kind, name), state in replay["state"].items():
+                if kind == "task" and state == st.DONE:
+                    resumed_done.add(name)
+            resumed_retries = dict(replay["retries"])
+        self._index_tasks()
+        for p in self.workflow:
+            for s in p.stages:
+                for t in s.tasks:
+                    if t.name in resumed_retries:
+                        t.retries = min(t.max_retries,
+                                        resumed_retries[t.name])
+        self.broker = Broker()
+        self.journal = Journal(self.journal_path,
+                               flush_every=self.flush_every)
+        self.journal.session("resume" if resume else "start",
+                             pipelines=len(self.workflow))
+        self.svc = StateService(self.broker, strict=self.strict_transactions)
+        self.sync = Synchronizer(self.broker, self.journal, self.state_table)
+        self.sync.start()
+        self.wfp = WFProcessor(
+            self.broker, self.svc, self.prof, self.workflow, self.task_index,
+            on_task_failure=self.on_task_failure, resumed_done=resumed_done)
+        self.emgr = ExecManager(
+            self.broker, self.svc, self.prof, self.rts_factory,
+            self.resources, self.task_index,
+            heartbeat_interval=self.heartbeat_interval,
+            max_rts_restarts=self.max_rts_restarts,
+            straggler_factor=self.straggler_factor)
+        self.prof.end(ENTK_SETUP)
+
+        # ---- resources + execution ---------------------------------------- #
+        self.emgr.acquire_resources()
+        self.wfp.start()
+        self.emgr.start()
+        if self.component_supervision:
+            self._stop.clear()
+            self._supervisor = threading.Thread(
+                target=self._supervise, daemon=True, name="am-supervisor")
+            self._supervisor.start()
+
+        try:
+            deadline = time.monotonic() + timeout
+            while not self.wfp.workflow_final:
+                if time.monotonic() > deadline:
+                    raise EnTKError(f"workflow timed out after {timeout}s")
+                if (self.emgr.component_errors
+                        and "restart budget exhausted"
+                        in self.emgr.component_errors[-1]):
+                    raise EnTKError("RTS restart budget exhausted")
+                time.sleep(0.02)
+        finally:
+            self._terminate()
+        return self.prof.totals()
+
+    def cancel(self) -> None:
+        """Cancel all outstanding work and finalize."""
+        if self.emgr is not None and self.emgr.rts is not None:
+            self.emgr.rts.cancel(self.emgr.rts.in_flight())
+        for p in self.workflow:
+            for s in p.stages:
+                for t in s.tasks:
+                    if not t.is_final and self.svc is not None:
+                        try:
+                            self.svc.advance(t, st.CANCELED)
+                        except Exception:  # noqa: BLE001
+                            pass
+
+    # -- teardown ------------------------------------------------------------#
+
+    def _terminate(self) -> None:
+        if self._terminated:
+            return
+        self._terminated = True
+        self._stop.set()
+        if self._supervisor is not None:
+            self._supervisor.join(timeout=2.0)
+        # RTS teardown is profiled separately inside ExecManager.stop
+        if self.emgr is not None:
+            self.emgr.stop()
+        self.prof.begin(ENTK_TEARDOWN)
+        if self.wfp is not None:
+            self.wfp.stop()
+        if self.sync is not None:
+            self.sync.stop()
+        if self.journal is not None:
+            self.journal.session("end")
+            self.journal.close()
+        if self.broker is not None:
+            self.broker.close()
+        self.prof.end(ENTK_TEARDOWN)
+
+    # -- component supervision ---------------------------------------------------#
+
+    def _supervise(self) -> None:
+        """Restart dead component threads (EnTK-component failure model)."""
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_interval)
+            if self._stop.is_set():
+                return
+            try:
+                if self.sync is not None and not self.sync.is_alive():
+                    self.sync.crash_hook = None
+                    self.broker.requeue_unacked("states")
+                    self.sync.start()
+                    self.component_restarts += 1
+                if self.wfp is not None:
+                    alive = self.wfp.threads_alive()
+                    if not alive["enqueue"]:
+                        self.wfp.enqueue_crash_hook = None
+                        self.wfp.start_enqueue()
+                        self.component_restarts += 1
+                    if not alive["dequeue"]:
+                        self.wfp.dequeue_crash_hook = None
+                        self.broker.requeue_unacked("done")
+                        self.wfp.start_dequeue()
+                        self.component_restarts += 1
+                if self.emgr is not None:
+                    if not self.emgr.threads_alive()["emgr"]:
+                        self.emgr.emgr_crash_hook = None
+                        self.broker.requeue_unacked("pending")
+                        self.emgr.start_emgr()
+                        self.component_restarts += 1
+            except Exception:  # noqa: BLE001 - supervisor must survive anything
+                pass
+
+    # -- convenience ------------------------------------------------------------#
+
+    def states_of(self, names: List[str]) -> Dict[str, str]:
+        return {n: self.state_table.get(f"task:{n}", "UNKNOWN") for n in names}
+
+    @property
+    def all_done(self) -> bool:
+        return all(
+            t.state == st.DONE
+            for p in self.workflow for s in p.stages for t in s.tasks)

@@ -1,0 +1,184 @@
+"""In-process message broker with RabbitMQ delivery semantics.
+
+EnTK uses a RabbitMQ server so that (1) producers/consumers are topology
+unaware, (2) in-flight messages survive component failure, and (3) push/pull
+are fully asynchronous (paper §II-C). Inside a single JAX controller process
+the same contract is provided by named in-memory queues with explicit
+acknowledgement and redelivery:
+
+* ``put(queue, msg)`` — asynchronous publish (never blocks on consumers).
+* ``get(queue, timeout)`` — returns ``(delivery_tag, msg)`` and holds the
+  message *unacknowledged*; a consumer that dies without ``ack`` leaves the
+  message eligible for redelivery via :meth:`requeue_unacked`.
+* ``ack(queue, tag)`` — marks the message consumed.
+
+The broker records counters used by the Fig.-6 prototype benchmark
+(messages in/out, peak depth) and is intentionally dependency-free so that
+the benchmark measures toolkit overhead, not library overhead.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .exceptions import ValueError_
+
+
+class _Queue:
+    __slots__ = ("name", "messages", "unacked", "cv", "put_count",
+                 "get_count", "ack_count", "peak_depth")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.messages: deque = deque()
+        self.unacked: Dict[int, Any] = {}
+        self.cv = threading.Condition()
+        self.put_count = 0
+        self.get_count = 0
+        self.ack_count = 0
+        self.peak_depth = 0
+
+
+class Broker:
+    """A set of named queues with ack/redeliver semantics."""
+
+    def __init__(self) -> None:
+        self._queues: Dict[str, _Queue] = {}
+        self._lock = threading.Lock()
+        self._tags = itertools.count(1)
+        self._closed = False
+
+    # -- queue management ---------------------------------------------------#
+
+    def declare(self, name: str) -> None:
+        with self._lock:
+            if name not in self._queues:
+                self._queues[name] = _Queue(name)
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            self._queues.pop(name, None)
+
+    def queues(self) -> List[str]:
+        with self._lock:
+            return list(self._queues)
+
+    def _q(self, name: str) -> _Queue:
+        try:
+            return self._queues[name]
+        except KeyError:
+            raise ValueError_(f"queue {name!r} not declared") from None
+
+    # -- publish / consume ----------------------------------------------------#
+
+    def put(self, name: str, msg: Any) -> None:
+        q = self._q(name)
+        with q.cv:
+            q.messages.append(msg)
+            q.put_count += 1
+            depth = len(q.messages)
+            if depth > q.peak_depth:
+                q.peak_depth = depth
+            q.cv.notify()
+
+    def put_many(self, name: str, msgs: Iterable[Any]) -> None:
+        q = self._q(name)
+        with q.cv:
+            before = len(q.messages)
+            q.messages.extend(msgs)
+            added = len(q.messages) - before
+            q.put_count += added
+            if len(q.messages) > q.peak_depth:
+                q.peak_depth = len(q.messages)
+            q.cv.notify_all()
+
+    def get(self, name: str, timeout: Optional[float] = None
+            ) -> Optional[Tuple[int, Any]]:
+        """Pop one message; returns (delivery_tag, msg) or None on timeout."""
+        q = self._q(name)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with q.cv:
+            while not q.messages:
+                if self._closed:
+                    return None
+                if deadline is None:
+                    q.cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    q.cv.wait(remaining)
+            msg = q.messages.popleft()
+            tag = next(self._tags)
+            q.unacked[tag] = msg
+            q.get_count += 1
+            return tag, msg
+
+    def get_many(self, name: str, max_n: int, timeout: Optional[float] = None
+                 ) -> List[Tuple[int, Any]]:
+        """Batch pop of up to ``max_n`` messages (at least one, else [])."""
+        first = self.get(name, timeout=timeout)
+        if first is None:
+            return []
+        out = [first]
+        q = self._q(name)
+        with q.cv:
+            while q.messages and len(out) < max_n:
+                msg = q.messages.popleft()
+                tag = next(self._tags)
+                q.unacked[tag] = msg
+                q.get_count += 1
+                out.append((tag, msg))
+        return out
+
+    def ack(self, name: str, tag: int) -> None:
+        q = self._q(name)
+        with q.cv:
+            q.unacked.pop(tag, None)
+            q.ack_count += 1
+
+    def requeue_unacked(self, name: str) -> int:
+        """Redeliver every unacknowledged message (consumer-failure recovery)."""
+        q = self._q(name)
+        with q.cv:
+            n = len(q.unacked)
+            # preserve rough ordering: unacked messages go to the front
+            for tag in sorted(q.unacked, reverse=True):
+                q.messages.appendleft(q.unacked.pop(tag))
+            q.cv.notify_all()
+            return n
+
+    # -- introspection --------------------------------------------------------#
+
+    def depth(self, name: str) -> int:
+        q = self._q(name)
+        with q.cv:
+            return len(q.messages)
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            qs = list(self._queues.values())
+        return {
+            q.name: {
+                "put": q.put_count,
+                "got": q.get_count,
+                "acked": q.ack_count,
+                "depth": len(q.messages),
+                "unacked": len(q.unacked),
+                "peak_depth": q.peak_depth,
+            }
+            for q in qs
+        }
+
+    def close(self) -> None:
+        """Wake all blocked consumers; subsequent gets return None when empty."""
+        self._closed = True
+        with self._lock:
+            qs = list(self._queues.values())
+        for q in qs:
+            with q.cv:
+                q.cv.notify_all()

@@ -1,0 +1,310 @@
+"""ExecManager: the workload-management component (paper §II-B.2/3).
+
+Subcomponents (threads):
+
+* **Rmgr** — acquires/releases resources (starts the pilot) via the RTS.
+* **Emgr** — pulls tasks from the ``pending`` queue, translates them into
+  RTS submissions, tracks the submitted set.
+* **RTSCallback** — receives completion events from the RTS and pushes them
+  onto the ``done`` queue.
+* **Heartbeat** — probes RTS liveness; on failure the AppManager tears the
+  RTS down, starts a fresh instance and resubmits exactly the lost in-flight
+  tasks (black-box RTS fault tolerance, §II-B.4).
+* **Watchdog** (beyond paper; required at 10³+ nodes) — straggler
+  mitigation via speculative re-execution: a task that exceeds
+  ``straggler_factor ×`` its expected duration is cloned; the first attempt
+  to finish wins, the loser is canceled and its completion deduplicated.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional
+
+from . import states as st
+from .broker import Broker
+from .profiler import ENTK_MANAGEMENT, RTS_OVERHEAD, RTS_TEARDOWN, Profiler
+from .pst import Task
+from .state_service import StateService
+from .wfprocessor import DONE_QUEUE, PENDING_QUEUE
+from ..rts.base import RTS, ResourceDescription, TaskCompletion
+
+
+class ExecManager:
+    def __init__(
+        self,
+        broker: Broker,
+        svc: StateService,
+        prof: Profiler,
+        rts_factory: Callable[[], RTS],
+        resources: ResourceDescription,
+        task_index: Dict[str, Task],
+        heartbeat_interval: float = 0.5,
+        max_rts_restarts: int = 3,
+        straggler_factor: float = 0.0,  # 0 disables speculation
+        straggler_min_seconds: float = 1.0,
+    ) -> None:
+        self.broker = broker
+        self.svc = svc
+        self.prof = prof
+        self.rts_factory = rts_factory
+        self.resources = resources
+        self.task_index = task_index
+        self.heartbeat_interval = heartbeat_interval
+        self.max_rts_restarts = max_rts_restarts
+        self.straggler_factor = straggler_factor
+        self.straggler_min_seconds = straggler_min_seconds
+
+        self.rts: Optional[RTS] = None
+        self.rts_restarts = 0
+        self._submitted: Dict[str, Task] = {}   # uid -> task, in RTS custody
+        self._spec_of: Dict[str, str] = {}      # clone uid -> original uid
+        self._spec_for: Dict[str, str] = {}     # original uid -> clone uid
+        self._speculated: set = set()           # originals already cloned
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._emgr_thread: Optional[threading.Thread] = None
+        self._hb_thread: Optional[threading.Thread] = None
+        self._wd_thread: Optional[threading.Thread] = None
+        self.emgr_crash_hook: Optional[Callable[[], None]] = None
+        self.component_errors: List[str] = []
+        self.speculations = 0
+        self.speculation_wins = 0
+
+    # -- Rmgr ------------------------------------------------------------------#
+
+    def acquire_resources(self) -> None:
+        with self.prof.measure(RTS_OVERHEAD):
+            self.rts = self.rts_factory()
+            self.rts.set_callback(self._rts_callback)
+            self.rts.start(self.resources)
+
+    def release_resources(self) -> None:
+        if self.rts is not None:
+            with self.prof.measure(RTS_TEARDOWN):
+                self.rts.stop()
+
+    def resize(self, slots: int) -> None:
+        """Elastic scaling passthrough."""
+        if self.rts is not None:
+            self.rts.resize(slots)
+            self.resources.slots = slots
+
+    # -- lifecycle ----------------------------------------------------------#
+
+    def start(self) -> None:
+        self._stop.clear()
+        self.start_emgr()
+        self._hb_thread = threading.Thread(target=self._heartbeat_loop,
+                                           daemon=True, name="em-heartbeat")
+        self._hb_thread.start()
+        if self.straggler_factor > 0:
+            self._wd_thread = threading.Thread(target=self._watchdog_loop,
+                                               daemon=True, name="em-watchdog")
+            self._wd_thread.start()
+
+    def start_emgr(self) -> None:
+        self._emgr_thread = threading.Thread(
+            target=self._guarded, args=(self._emgr_loop, "emgr"),
+            daemon=True, name="em-emgr")
+        self._emgr_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in (self._emgr_thread, self._hb_thread, self._wd_thread):
+            if t is not None:
+                t.join(timeout=5.0)
+        self._emgr_thread = self._hb_thread = self._wd_thread = None
+        self.release_resources()
+
+    def threads_alive(self) -> Dict[str, bool]:
+        return {"emgr": bool(self._emgr_thread
+                             and self._emgr_thread.is_alive())}
+
+    def _guarded(self, fn: Callable[[], None], name: str) -> None:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            self.component_errors.append(
+                f"{name}: {traceback.format_exc(limit=5)}")
+
+    # -- Emgr ------------------------------------------------------------------#
+
+    def _emgr_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.emgr_crash_hook is not None:
+                self.emgr_crash_hook()
+            msgs = self.broker.get_many(PENDING_QUEUE, 128, timeout=0.05)
+            if not msgs:
+                continue
+            t0 = time.perf_counter()
+            batch: List[Task] = []
+            for tag, uid in msgs:
+                task = self.task_index.get(uid)
+                self.broker.ack(PENDING_QUEUE, tag)
+                if task is None:
+                    continue
+                self.svc.advance(task, st.SUBMITTING, transact=False)
+                with self._lock:
+                    self._submitted[task.uid] = task
+                batch.append(task)
+            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
+            if batch:
+                t1 = time.perf_counter()
+                self.rts.submit(batch)
+                for task in batch:
+                    task.submitted_at = time.time()
+                    self.svc.advance(task, st.SUBMITTED, transact=False)
+                self.prof.add(RTS_OVERHEAD, time.perf_counter() - t1)
+
+    # -- RTSCallback -------------------------------------------------------------#
+
+    def _rts_callback(self, c: TaskCompletion) -> None:
+        uid = c.uid
+        to_cancel: List[str] = []
+        with self._lock:
+            original = self._spec_of.pop(uid, None)
+            if original is not None:
+                if c.exit_code != 0 and original in self._submitted:
+                    # the speculative clone failed while the original is
+                    # still running: drop the clone, keep the original
+                    self._spec_for.pop(original, None)
+                    return
+                # A speculative clone finished first: report it as the
+                # original and cancel the still-running original attempt.
+                self._spec_for.pop(original, None)
+                if c.exit_code == 0:
+                    self.speculation_wins += 1
+                to_cancel.append(original)  # cancel the slower original
+                uid = original
+            else:
+                clone = self._spec_for.pop(uid, None)
+                if clone is not None:
+                    # the original finished first: cancel the clone
+                    self._spec_of.pop(clone, None)
+                    to_cancel.append(clone)
+            task = self._submitted.pop(uid, None)
+        if to_cancel and self.rts is not None:
+            # best-effort: the winner's own uid may be in the list; RTS
+            # cancel of an already-finished task is a no-op.
+            try:
+                self.rts.cancel([u for u in to_cancel if u != c.uid])
+            except Exception:  # noqa: BLE001
+                pass
+        if task is None:
+            return  # duplicate completion (losing speculative attempt)
+        task_state = self.task_index.get(uid)
+        if task_state is not None and task_state.state == st.SUBMITTED:
+            self.svc.advance(task_state, st.EXECUTED, transact=False)
+        self.broker.put(DONE_QUEUE, {
+            "uid": uid,
+            "exit_code": c.exit_code,
+            "result": c.result,
+            "exception": c.exception,
+            "completed_at": c.completed_at,
+            "execution_seconds": c.execution_seconds,
+            "staging_seconds": c.staging_seconds,
+        })
+
+    # -- Heartbeat ------------------------------------------------------------#
+
+    def _heartbeat_loop(self) -> None:
+        misses = 0
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_interval)
+            if self._stop.is_set():
+                return
+            try:
+                ok = self.rts is not None and self.rts.alive()
+            except Exception:  # noqa: BLE001 - a dead RTS may throw anything
+                ok = False
+            if ok:
+                misses = 0
+                continue
+            misses += 1
+            if misses >= 2:
+                misses = 0
+                self._restart_rts()
+
+    def _restart_rts(self) -> None:
+        """Tear down the failed RTS, start a fresh one, resubmit lost tasks."""
+        if self.rts_restarts >= self.max_rts_restarts:
+            self.component_errors.append(
+                "rts: restart budget exhausted")
+            self._stop.set()
+            return
+        self.rts_restarts += 1
+        with self._lock:
+            lost = list(self._submitted.values())
+            self._spec_of.clear()
+            self._spec_for.clear()
+        try:
+            # detach first: the dying instance must not deliver cancellation
+            # completions for tasks we are about to resubmit
+            self.rts.set_callback(None)
+            with self.prof.measure(RTS_TEARDOWN):
+                self.rts.stop()   # purge leftovers of the failed instance
+        except Exception:  # noqa: BLE001
+            pass
+        self.acquire_resources()
+        if lost:
+            t0 = time.perf_counter()
+            self.rts.submit(lost)
+            self.prof.add(RTS_OVERHEAD, time.perf_counter() - t0)
+
+    # -- Watchdog (straggler speculation) ------------------------------------#
+
+    def _watchdog_loop(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.heartbeat_interval)
+            rts = self.rts
+            if rts is None or not hasattr(rts, "running_since"):
+                continue
+            try:
+                running = rts.running_since()
+            except Exception:  # noqa: BLE001
+                continue
+            with self._lock:
+                candidates = []
+                for uid, elapsed in running.items():
+                    task = self._submitted.get(uid)
+                    if task is None or uid in self._speculated:
+                        continue
+                    if uid in self._spec_of:   # don't speculate on clones
+                        continue
+                    expect = task.duration_hint
+                    if expect is None:
+                        continue
+                    threshold = max(self.straggler_min_seconds,
+                                    self.straggler_factor * expect)
+                    if elapsed > threshold:
+                        candidates.append(task)
+                clones = []
+                for task in candidates:
+                    clone = self._clone_for_speculation(task)
+                    self._spec_of[clone.uid] = task.uid
+                    self._spec_for[task.uid] = clone.uid
+                    self._speculated.add(task.uid)
+                    self.speculations += 1
+                    clones.append(clone)
+            if clones:
+                rts.submit(clones)
+
+    @staticmethod
+    def _clone_for_speculation(task: Task) -> Task:
+        clone = Task(
+            name=f"{task.name}#spec",
+            executable=task._fn if task._fn is not None else task.executable,
+            args=task.args, kwargs=task.kwargs, slots=task.slots,
+            duration_hint=task.duration_hint,
+            tags={**task.tags, "speculative_of": task.uid},
+        )
+        return clone
+
+    # -- introspection ------------------------------------------------------#
+
+    def n_in_custody(self) -> int:
+        with self._lock:
+            return len(self._submitted)

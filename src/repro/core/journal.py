@@ -1,0 +1,132 @@
+"""Write-ahead journal: transactional state updates + resume (paper §II-B.4).
+
+"All state updates in EnTK are transactional, hence any EnTK component that
+fails can be restarted at runtime without losing information about ongoing
+execution. In case of full failure, EnTK can reacquire upon restarting
+information about the state of the execution up to the latest successful
+transaction before the failure." — the journal is that mechanism. EnTK syncs
+to disk and keeps hooks for an external database; we implement the disk path
+(JSONL, append-only, explicit flush policy) plus replay.
+
+Records:
+  {"rec": "transition", "kind": "task|stage|pipeline", "uid", "name",
+   "frm", "to", "t", ...extra}
+  {"rec": "session", "event": "start|resume|end", "t", ...}
+
+Replay returns the latest state per (kind, name) so a resumed AppManager can
+skip completed tasks — resume is keyed on *names* (stable across process
+restarts) rather than uids (which are session-scoped).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+from .exceptions import JournalCorruption
+
+
+class Journal:
+    """Append-only JSONL write-ahead journal.
+
+    ``flush_every`` trades durability for throughput: 1 = flush every record
+    (strict transactional), N = flush every N records plus on close. The
+    Fig.-6 benchmark sweeps this to show the cost of strict durability.
+    """
+
+    def __init__(self, path: Optional[str], flush_every: int = 32) -> None:
+        self.path = path
+        self.flush_every = max(1, flush_every)
+        self._lock = threading.Lock()
+        self._since_flush = 0
+        self._fh: Optional[io.TextIOWrapper] = None
+        self.records_written = 0
+        if path:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            self._fh = open(path, "a", encoding="utf-8")
+
+    # -- write ----------------------------------------------------------------#
+
+    def append(self, record: Dict[str, Any]) -> None:
+        if self._fh is None:
+            return
+        record.setdefault("t", time.time())
+        line = json.dumps(record, separators=(",", ":"), default=str)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self.records_written += 1
+            self._since_flush += 1
+            if self._since_flush >= self.flush_every:
+                self._fh.flush()
+                self._since_flush = 0
+
+    def transition(self, kind: str, uid: str, name: str, frm: str, to: str,
+                   **extra: Any) -> None:
+        rec = {"rec": "transition", "kind": kind, "uid": uid, "name": name,
+               "frm": frm, "to": to}
+        rec.update(extra)
+        self.append(rec)
+
+    def session(self, event: str, **extra: Any) -> None:
+        rec = {"rec": "session", "event": event}
+        rec.update(extra)
+        self.append(rec)
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+                self._since_flush = 0
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+                self._fh.close()
+                self._fh = None
+
+    # -- replay ---------------------------------------------------------------#
+
+    @staticmethod
+    def replay(path: str) -> Dict[str, Any]:
+        """Replay a journal file.
+
+        Returns ``{"state": {(kind, name): last_state}, "retries": {name: n},
+        "sessions": [...], "records": n}``. Truncated trailing lines (torn
+        write at crash) are tolerated; any earlier corruption raises
+        :class:`JournalCorruption`.
+        """
+        state: Dict[Tuple[str, str], str] = {}
+        retries: Dict[str, int] = {}
+        sessions = []
+        n = 0
+        if not os.path.exists(path):
+            return {"state": state, "retries": retries, "sessions": sessions,
+                    "records": 0}
+        with open(path, "r", encoding="utf-8") as fh:
+            lines = fh.readlines()
+        for i, line in enumerate(lines):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    break  # torn final write: recover to previous transaction
+                raise JournalCorruption(
+                    f"{path}: undecodable record at line {i + 1}") from None
+            n += 1
+            if rec.get("rec") == "transition":
+                key = (rec["kind"], rec.get("name") or rec["uid"])
+                state[key] = rec["to"]
+                if rec["kind"] == "task" and rec["to"] == "FAILED":
+                    retries[key[1]] = retries.get(key[1], 0) + 1
+            elif rec.get("rec") == "session":
+                sessions.append(rec)
+        return {"state": state, "retries": retries, "sessions": sessions,
+                "records": n}

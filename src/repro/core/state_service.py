@@ -1,0 +1,74 @@
+"""StateService: every PST state transition in the toolkit goes through here.
+
+Design (paper §II-B.3): components synchronize all transitions with the
+AppManager by pushing messages through dedicated queues; the AppManager
+acknowledges updates, which makes it the only stateful component and makes
+updates transactional.
+
+In-process realization: ``advance()`` (1) validates the transition against
+the state tables, (2) applies it to the master object, (3) publishes a
+transition message on the ``states`` queue for the Synchronizer to journal
+and account, and (4) — when ``transact=True`` — blocks until the
+Synchronizer acknowledges that the transition reached the write-ahead
+journal. Final states default to transactional; high-frequency intermediate
+states default to asynchronous journaling (ordering is still preserved by
+the single-consumer Synchronizer). ``strict`` mode forces every transition
+to be transactional, reproducing the paper's fully-synchronous behaviour
+(and its management overhead — measured in the Fig. 7 benchmarks).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Union
+
+from . import states as st
+from .broker import Broker
+from .pst import Pipeline, Stage, Task
+
+STATES_QUEUE = "states"
+
+_FINAL = set(st.TASK_FINAL) | set(st.STAGE_FINAL) | set(st.PIPELINE_FINAL)
+
+PSTObject = Union[Task, Stage, Pipeline]
+
+
+def _kind(obj: PSTObject) -> str:
+    if isinstance(obj, Task):
+        return "task"
+    if isinstance(obj, Stage):
+        return "stage"
+    return "pipeline"
+
+
+class StateService:
+    def __init__(self, broker: Broker, strict: bool = False,
+                 ack_timeout: float = 10.0) -> None:
+        self.broker = broker
+        self.strict = strict
+        self.ack_timeout = ack_timeout
+        broker.declare(STATES_QUEUE)
+        self._lock = threading.Lock()
+
+    def advance(self, obj: PSTObject, to_state: str,
+                transact: Optional[bool] = None,
+                **extra: Any) -> None:
+        kind = _kind(obj)
+        with self._lock:
+            frm = obj.state
+            obj.advance(to_state)  # validates; raises StateTransitionError
+        if transact is None:
+            transact = self.strict or to_state in _FINAL
+        msg: Dict[str, Any] = {
+            "type": "transition", "kind": kind, "uid": obj.uid,
+            "name": obj.name, "frm": frm, "to": to_state,
+        }
+        if extra:
+            msg["extra"] = extra
+        ack: Optional[threading.Event] = None
+        if transact:
+            ack = threading.Event()
+            msg["_ack"] = ack
+        self.broker.put(STATES_QUEUE, msg)
+        if ack is not None:
+            ack.wait(self.ack_timeout)

@@ -1,0 +1,275 @@
+"""WFProcessor: the workflow-management component (paper §II-B.2/3).
+
+Two subcomponents, each a restartable thread:
+
+* **Enqueue** — walks the pipelines, tags schedulable tasks (stage-ordering
+  semantics of the PST model) and pushes them onto the ``pending`` queue.
+* **Dequeue** — pulls completions from the ``done`` queue, tags tasks DONE /
+  FAILED / CANCELED from the RTS return code, drives resubmission of failed
+  tasks within their retry budgets, closes out stages and pipelines, and
+  fires the adaptivity (``post_exec``) hooks.
+
+Both loops are stateless between iterations: all state lives in the master
+PST objects and the queues, which is what makes component restart after a
+crash safe (failure model, §II-B.4).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from . import states as st
+from .broker import Broker
+from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
+                       Profiler)
+from .pst import Pipeline, Stage, Task
+from .state_service import StateService
+
+PENDING_QUEUE = "pending"
+DONE_QUEUE = "done"
+
+
+class WFProcessor:
+    """Drives an application (list of pipelines) through the PST semantics."""
+
+    def __init__(
+        self,
+        broker: Broker,
+        svc: StateService,
+        prof: Profiler,
+        pipelines: List[Pipeline],
+        task_index: Dict[str, Task],
+        on_task_failure: str = "continue",  # or "fail_stage"
+        resumed_done: Optional[set] = None,
+    ) -> None:
+        self.broker = broker
+        self.svc = svc
+        self.prof = prof
+        self.pipelines = pipelines
+        self.task_index = task_index
+        self.on_task_failure = on_task_failure
+        self.resumed_done = resumed_done or set()
+        broker.declare(PENDING_QUEUE)
+        broker.declare(DONE_QUEUE)
+        self._stop = threading.Event()
+        self._enqueue_thread: Optional[threading.Thread] = None
+        self._dequeue_thread: Optional[threading.Thread] = None
+        self._lock = threading.RLock()
+        self.enqueue_crash_hook: Optional[Callable[[], None]] = None
+        self.dequeue_crash_hook: Optional[Callable[[], None]] = None
+        self.component_errors: List[str] = []
+
+    # -- lifecycle ----------------------------------------------------------#
+
+    def start(self) -> None:
+        self._stop.clear()
+        self.start_enqueue()
+        self.start_dequeue()
+
+    def start_enqueue(self) -> None:
+        self._enqueue_thread = threading.Thread(
+            target=self._guarded, args=(self._enqueue_loop, "enqueue"),
+            daemon=True, name="wfp-enqueue")
+        self._enqueue_thread.start()
+
+    def start_dequeue(self) -> None:
+        self._dequeue_thread = threading.Thread(
+            target=self._guarded, args=(self._dequeue_loop, "dequeue"),
+            daemon=True, name="wfp-dequeue")
+        self._dequeue_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in (self._enqueue_thread, self._dequeue_thread):
+            if t is not None:
+                t.join(timeout=5.0)
+        self._enqueue_thread = None
+        self._dequeue_thread = None
+
+    def threads_alive(self) -> Dict[str, bool]:
+        return {
+            "enqueue": bool(self._enqueue_thread
+                            and self._enqueue_thread.is_alive()),
+            "dequeue": bool(self._dequeue_thread
+                            and self._dequeue_thread.is_alive()),
+        }
+
+    def _guarded(self, fn: Callable[[], None], name: str) -> None:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 - component crash, recorded for restart
+            self.component_errors.append(
+                f"{name}: {traceback.format_exc(limit=5)}")
+
+    # -- completion condition -------------------------------------------------#
+
+    @property
+    def workflow_final(self) -> bool:
+        return all(p.is_final for p in self.pipelines)
+
+    # -- Enqueue ------------------------------------------------------------#
+
+    def _enqueue_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.enqueue_crash_hook is not None:
+                self.enqueue_crash_hook()
+            worked = self._schedule_pass()
+            if not worked:
+                time.sleep(0.01)
+
+    def _schedule_pass(self) -> bool:
+        """One scheduling sweep; returns True if any work was done."""
+        t0 = time.perf_counter()
+        worked = False
+        with self._lock:
+            for pipe in self.pipelines:
+                if pipe.is_final:
+                    continue
+                if pipe.state == st.PIPELINE_INITIAL:
+                    self.svc.advance(pipe, st.PIPELINE_SCHEDULING,
+                                     transact=False)
+                    worked = True
+                stage = pipe.next_stage()
+                if stage is None:
+                    if pipe.completed and not pipe.is_final:
+                        self._finalize_pipeline(pipe)
+                        worked = True
+                    continue
+                if stage.state == st.STAGE_INITIAL:
+                    self._schedule_stage(pipe, stage)
+                    worked = True
+        if worked:
+            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
+        return worked
+
+    def _schedule_stage(self, pipe: Pipeline, stage: Stage) -> None:
+        self.svc.advance(stage, st.STAGE_SCHEDULING, transact=False)
+        payload = []
+        for task in stage.tasks:
+            # index here (not only at startup): adaptive post_exec hooks
+            # append stages at runtime and their tasks must be resolvable
+            # by the ExecManager and Dequeue
+            self.task_index[task.uid] = task
+            if task.name in self.resumed_done and not task.is_final:
+                # resume: completed in a previous session, skip execution
+                self.svc.advance(task, st.SCHEDULING, transact=False)
+                self.svc.advance(task, st.SCHEDULED, transact=False)
+                self.svc.advance(task, st.SUBMITTING, transact=False)
+                self.svc.advance(task, st.SUBMITTED, transact=False)
+                self.svc.advance(task, st.EXECUTED, transact=False)
+                self.svc.advance(task, st.DONE, resumed=True)
+                continue
+            if task.is_final:
+                continue
+            self.svc.advance(task, st.SCHEDULING, transact=False)
+            payload.append(task.uid)
+            self.svc.advance(task, st.SCHEDULED, transact=False)
+        if payload:
+            self.broker.put_many(PENDING_QUEUE, payload)
+        self.svc.advance(stage, st.STAGE_SCHEDULED, transact=False)
+        # A stage whose every task was resumed completes immediately.
+        self._maybe_finalize_stage(pipe, stage)
+
+    # -- Dequeue ------------------------------------------------------------#
+
+    def _dequeue_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.dequeue_crash_hook is not None:
+                self.dequeue_crash_hook()
+            msgs = self.broker.get_many(DONE_QUEUE, 256, timeout=0.05)
+            if not msgs:
+                continue
+            t0 = time.perf_counter()
+            for tag, msg in msgs:
+                try:
+                    self._handle_completion(msg)
+                finally:
+                    self.broker.ack(DONE_QUEUE, tag)
+            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
+
+    def _handle_completion(self, msg: Dict[str, Any]) -> None:
+        uid = msg["uid"]
+        task = self.task_index.get(uid)
+        if task is None or task.is_final:
+            return  # duplicate (e.g. the losing speculative attempt)
+        task.exit_code = msg.get("exit_code")
+        task.exception = msg.get("exception")
+        task.result = msg.get("result")
+        task.completed_at = msg.get("completed_at")
+        self.prof.add(TASK_EXECUTION, float(msg.get("execution_seconds", 0.0)))
+        self.prof.add(DATA_STAGING, float(msg.get("staging_seconds", 0.0)))
+
+        with self._lock:
+            if msg.get("canceled") or msg.get("exit_code") == -2:
+                self.svc.advance(task, st.CANCELED)
+            elif msg.get("exit_code") == 0:
+                self.svc.advance(task, st.DONE)
+            else:
+                self.svc.advance(task, st.FAILED,
+                                 exc=str(msg.get("exception", ""))[:500])
+                if task.retries < task.max_retries:
+                    # resubmission path (paper: multiple attempts without
+                    # restarting completed tasks)
+                    task.retries += 1
+                    self.svc.advance(task, st.SCHEDULING, transact=False,
+                                     retry=task.retries)
+                    self.svc.advance(task, st.SCHEDULED, transact=False)
+                    self.broker.put(PENDING_QUEUE, task.uid)
+                    return
+            stage = self._find_stage(task)
+            pipe = self._find_pipeline(task)
+            if stage is not None and pipe is not None:
+                self._maybe_finalize_stage(pipe, stage)
+
+    # -- stage / pipeline closure -----------------------------------------------#
+
+    def _find_stage(self, task: Task) -> Optional[Stage]:
+        pipe = self._find_pipeline(task)
+        if pipe is None:
+            return None
+        for s in pipe.stages:
+            if s.uid == task.parent_stage:
+                return s
+        return None
+
+    def _find_pipeline(self, task: Task) -> Optional[Pipeline]:
+        for p in self.pipelines:
+            if p.uid == task.parent_pipeline:
+                return p
+        return None
+
+    def _maybe_finalize_stage(self, pipe: Pipeline, stage: Stage) -> None:
+        if stage.state != st.STAGE_SCHEDULED:
+            return
+        if not all(t.is_final for t in stage.tasks):
+            return
+        any_failed = any(t.state == st.FAILED for t in stage.tasks)
+        if any_failed and self.on_task_failure == "fail_stage":
+            self.svc.advance(stage, st.STAGE_FAILED)
+            pipe.mark_stage_final(stage.uid)
+            self.svc.advance(pipe, st.PIPELINE_FAILED)
+            return
+        self.svc.advance(stage, st.STAGE_DONE)
+        pipe.mark_stage_final(stage.uid)
+        if stage.post_exec is not None:
+            # adaptivity: the hook may append stages to the pipeline
+            try:
+                stage.post_exec(stage, pipe)
+            except Exception:  # noqa: BLE001 - user hook, never fatal
+                self.component_errors.append(
+                    f"post_exec[{stage.uid}]: {traceback.format_exc(limit=5)}")
+        if pipe.completed and not pipe.is_final:
+            self._finalize_pipeline(pipe)
+
+    def _finalize_pipeline(self, pipe: Pipeline) -> None:
+        any_failed = any(
+            t.state == st.FAILED for s in pipe.stages for t in s.tasks)
+        to = st.PIPELINE_FAILED if (any_failed and
+                                    self.on_task_failure == "fail_stage") \
+            else st.PIPELINE_DONE
+        if pipe.state == st.PIPELINE_INITIAL:
+            self.svc.advance(pipe, st.PIPELINE_SCHEDULING, transact=False)
+        self.svc.advance(pipe, to)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel ships three pieces: the ``pl.pallas_call`` + BlockSpec kernel
+(<name>.py), the jitted wrapper (:mod:`ops`), and a pure-jnp oracle
+(:mod:`ref`). Kernels are validated on CPU with ``interpret=True`` and
+selected in the model layer via ``cfg.attn_impl`` / ``cfg.scan_impl``.
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,35 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret=True`` executes the kernel bodies in Python on CPU (used by the
+tests and this container); on a real TPU pass ``interpret=False``. The
+model layer selects these through ``cfg.attn_impl`` / ``cfg.scan_impl``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .mamba2_ssd import ssd as _ssd
+from .rwkv6_wkv import wkv as _wkv
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = False,
+                    block_q: int = 128, block_k: int = 128):
+    return _flash(q, k, v, causal, interpret, block_q, block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, w, u, state0, chunk: int = 64,
+              interpret: bool = False):
+    return _wkv(r, k, v, w, u, state0, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, dt, A, Bm, Cm, state0, chunk: int = 64,
+               interpret: bool = False):
+    return _ssd(x, dt, A, Bm, Cm, state0, chunk=chunk, interpret=interpret)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are deliberately *naive* (quadratic attention, step-by-step
+recurrences) and independent of the chunked reference implementations in
+``repro.models`` — the kernel tests therefore validate both the kernels and
+the model-side chunked formulations against the same ground truth.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B, S, H, hd) → (B, S, H, hd). fp32 softmax."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv_ref(r, k, v, w, u, state0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 WKV, step-by-step. r,k,v,w: (B,T,H,N); u: (H,N);
+    state0: (B,H,N,N)."""
+    B, T, H, N = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = (a[:, t].astype(jnp.float32)
+                          for a in (r, k, v, w))
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         state + u.astype(jnp.float32)[None, ..., None] * kv)
+        state = state * wt[..., None] + kv
+        return state, out
+
+    state, outs = jax.lax.scan(step, state0.astype(jnp.float32),
+                               jnp.arange(T))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+def ssd_ref(x, dt, A, Bm, Cm, state0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD, step-by-step. x: (B,T,H,P); dt: (B,T,H); A: (H,);
+    Bm,Cm: (B,T,G,N); state0: (B,H,N,P)."""
+    B, T, H, P = x.shape
+    G = Bm.shape[2]
+    hpg = H // G
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)
+        dtt = dt[:, t].astype(jnp.float32)
+        Bh = jnp.repeat(Bm[:, t].astype(jnp.float32), hpg, axis=1)
+        Ch = jnp.repeat(Cm[:, t].astype(jnp.float32), hpg, axis=1)
+        a = jnp.exp(dtt * A[None])
+        state = (state * a[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhnp", Bh * dtt[..., None], xt))
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32),
+                             jnp.arange(T))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

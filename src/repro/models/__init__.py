@@ -1,0 +1,16 @@
+"""Composable LM substrate: every assigned architecture as a selectable config.
+
+Layers:
+
+* :mod:`config` — ``ModelConfig`` + the architecture registry (``--arch``).
+* :mod:`rope` / :mod:`attention` / :mod:`mlp` / :mod:`moe` / :mod:`rwkv6` /
+  :mod:`mamba2` — block implementations (pure functions over param pytrees).
+* :mod:`transformer` — model assembly (scan-over-layers, remat, KV cache /
+  recurrent-state decode).
+* :mod:`steps` — ``train_step`` / ``prefill_step`` / ``decode_step`` builders.
+* :mod:`sharding` — parameter/activation PartitionSpecs for the production
+  meshes.
+* :mod:`input_specs` — ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from .config import ModelConfig, get_config, list_archs, SHAPES  # noqa: F401

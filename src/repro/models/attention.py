@@ -1,0 +1,260 @@
+"""Attention: causal flash reference (custom_vjp) + decode path.
+
+Three implementations behind one signature (``cfg.attn_impl``):
+
+* ``reference`` — pure-jnp *chunked* flash attention with a **custom VJP**.
+  The forward is a ``lax.scan`` over the lower-triangular (q-chunk,
+  kv-chunk) pairs (never materializes S×S, performs only the ~S²/2 causal
+  FLOPs); the backward is a second pairs-scan recomputing probabilities
+  from the saved logsumexp (FlashAttention-2 algorithm). The custom VJP is
+  what keeps training memory O(S): differentiating through the forward scan
+  would stash per-pair probability blocks — measured at 149 GiB/device on
+  stablelm-12b train_4k before this change (EXPERIMENTS.md §Perf).
+* ``pallas`` / ``pallas_interpret`` — the TPU kernel in
+  :mod:`repro.kernels.flash_attention` (same algorithm, VMEM-tiled).
+
+Callers pass kv already repeated to the query head count (GQA handled one
+level up, so this module is pure MHA). Decode attends one query against a
+(B, S, Hkv, hd) cache with a length mask.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .pspec_ctx import constrain
+
+_NEG_INF = -1e30
+
+
+def _pick_chunk(seq: int, target: int) -> int:
+    c = min(seq, target)
+    while seq % c:
+        c -= 1
+    return c
+
+
+def _pairs(n: int) -> jnp.ndarray:
+    ii, jj = np.tril_indices(n)
+    return jnp.asarray(np.stack([ii, jj], axis=1), dtype=jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# Forward
+# --------------------------------------------------------------------------- #
+
+def _flash_fwd_impl(q, k, v, chunk):
+    B, S, H, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    qpos = jnp.arange(c)
+    kpos = jnp.arange(c)
+
+    acc0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    m0 = jnp.full((B, S, H), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    acc0 = constrain(acc0, "dp", None, "tp", None)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * c, c, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * c, c, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (i * c + qpos)[:, None] >= (j * c + kpos)[None, :]
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        mi = jax.lax.dynamic_slice_in_dim(m, i * c, c, axis=1)
+        li = jax.lax.dynamic_slice_in_dim(l, i * c, c, axis=1)
+        acci = jax.lax.dynamic_slice_in_dim(acc, i * c, c, axis=1)
+        s_max = jnp.moveaxis(s.max(-1), 1, -1)          # (B,c,H)
+        m_new = jnp.maximum(mi, s_max)
+        p = jnp.exp(s - jnp.moveaxis(m_new, -1, 1)[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + jnp.moveaxis(p.sum(-1), 1, -1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p, vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acci * corr[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_new, i * c, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * c, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * c, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), _pairs(n))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, lse
+
+
+# --------------------------------------------------------------------------- #
+# Backward (FlashAttention-2)
+# --------------------------------------------------------------------------- #
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, chunk):
+    B, S, H, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    qpos = jnp.arange(c)
+    kpos = jnp.arange(c)
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                               # (B,S,H)
+    dq0 = constrain(jnp.zeros((B, S, H, hd), jnp.float32),
+                    "dp", None, "tp", None)
+    dk0 = constrain(jnp.zeros((B, S, H, hd), jnp.float32),
+                    "dp", None, "tp", None)
+    dv0 = constrain(jnp.zeros((B, S, H, hd), jnp.float32),
+                    "dp", None, "tp", None)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * c, c, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * c, c, axis=1)
+        doi = jax.lax.dynamic_slice_in_dim(dout, i * c, c, axis=1)
+        lsei = jax.lax.dynamic_slice_in_dim(lse, i * c, c, axis=1)
+        di = jax.lax.dynamic_slice_in_dim(delta, i * c, c, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (i * c + qpos)[:, None] >= (j * c + kpos)[None, :]
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        p = jnp.exp(s - jnp.moveaxis(lsei, -1, 1)[..., None])  # (B,H,c,c)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", doi, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - jnp.moveaxis(di, -1, 1)[..., None]) * scale
+        dqi = jnp.einsum("bhqk,bkhd->bqhd", ds, kj,
+                         preferred_element_type=jnp.float32)
+        dkj = jnp.einsum("bhqk,bqhd->bkhd", ds, qi,
+                         preferred_element_type=jnp.float32)
+        dvj = jnp.einsum("bhqk,bqhd->bkhd", p, doi,
+                         preferred_element_type=jnp.float32)
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * c, c, 1) + dqi,
+            i * c, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * c, c, 1) + dkj,
+            j * c, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * c, c, 1) + dvj,
+            j * c, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), _pairs(n))
+    dt = q.dtype
+    return dq.astype(dt), dk.astype(dt), dv.astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# custom_vjp wiring
+# --------------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_reference(q, k, v, chunk: int = 1024):
+    """Chunked causal flash attention. q,k,v: (B,S,H,hd) (MHA)."""
+    out, _lse = _flash_fwd_impl(q, k, v, chunk)
+    return out
+
+
+def _fwd_rule(q, k, v, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(chunk, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, chunk)
+
+
+flash_reference.defvjp(_fwd_rule, _bwd_rule)
+
+
+# kept for oracle tests: plain (quadratic) attention
+def naive_causal_attention(q, k, v):
+    B, S, H, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Decode: one query position against a KV cache
+# --------------------------------------------------------------------------- #
+
+def decode_attention(
+    q: jnp.ndarray,           # (B, 1, Hq, hd)
+    k_cache: jnp.ndarray,     # (B, S, Hkv, hd)
+    v_cache: jnp.ndarray,     # (B, S, Hkv, hd)
+    length: jnp.ndarray,      # scalar or (B,) — number of valid cache slots
+) -> jnp.ndarray:
+    B, _one, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        length = jnp.broadcast_to(length, (B,))
+    valid = jnp.arange(S)[None] < length[:, None]          # (B, S)
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch
+# --------------------------------------------------------------------------- #
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              cfg: ModelConfig, chunk: int = 1024) -> jnp.ndarray:
+    """Causal self-attention for training/prefill, per ``cfg.attn_impl``.
+
+    q, k, v: (B, S, H, hd) with kv already repeated to H (MHA view).
+    """
+    impl = cfg.attn_impl
+    if impl == "reference":
+        return flash_reference(q, k, v, chunk)
+    if impl in ("pallas", "pallas_interpret"):
+        from ..kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=True, interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown attn_impl {impl!r}")
+
+
+def update_cache(
+    k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+    k_new: jnp.ndarray, v_new: jnp.ndarray,
+    length: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write (B, 1, Hkv, hd) new entries at position ``length``."""
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, length, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, length, 0, 0))
+        return k_cache, v_cache
+    one_hot = (jnp.arange(k_cache.shape[1])[None] == length[:, None])
+    k_cache = jnp.where(one_hot[..., None, None], k_new.astype(k_cache.dtype),
+                        k_cache)
+    v_cache = jnp.where(one_hot[..., None, None], v_new.astype(v_cache.dtype),
+                        v_cache)
+    return k_cache, v_cache

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns exactly the pytrees the corresponding
+step function consumes — weak-type-correct, shardable, zero allocation:
+
+* train:   ``{"batch": {"inputs", "labels"[, "positions"]}}``
+* prefill: ``{"batch": {"inputs"[, "positions"]}}``
+* decode:  ``{"token", "cache"}`` — one new token against a ``seq_len`` cache.
+
+Audio/VLM frontends are stubs per the assignment: ``inputs`` are precomputed
+frame/patch embeddings ``(B, S, d_model)`` bf16 instead of token ids.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .config import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _input_leaf(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.embedding_inputs:
+        return _sds((batch, seq, cfg.d_model), jnp.bfloat16)
+    return _sds((batch, seq), jnp.int32)
+
+
+def _positions_leaf(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.rope_variant == "mrope":
+        return _sds((batch, 3, seq), jnp.int32)
+    return None  # default positions are generated inside the step
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, with_labels: bool
+                ) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"inputs": _input_leaf(cfg, batch, seq)}
+    if with_labels:
+        out["labels"] = _sds((batch, seq), jnp.int32)
+    pos = _positions_leaf(cfg, batch, seq)
+    if pos is not None:
+        out["positions"] = pos
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, B, S, with_labels=False)}
+    if shape.kind == "decode":
+        token = (_sds((B, 1, cfg.d_model), jnp.bfloat16)
+                 if cfg.embedding_inputs else _sds((B, 1), jnp.int32))
+        return {"token": token, "cache": cache_specs(cfg, B, S)}
+    raise ValueError(f"unknown shape kind {shape.kind!r}")

@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD) block — the backbone of zamba2-7b.
+
+State-space duality formulation (Dao & Gu, 2024): per head, a scalar
+data-dependent decay ``a_t = exp(Δt·A)`` and rank-1 input ``Δt·B_t x_t``
+drive the state ``h_t = a_t h_{t-1} + Δt_t B_t x_tᵀ`` with readout
+``y_t = C_tᵀ h_t + D·x_t``.
+
+Reference path (``cfg.scan_impl == 'reference'``) is the *chunked* SSD scan:
+within a chunk the recurrence is evaluated as a decay-masked attention-like
+matmul (honest MXU FLOPs in the lowered HLO), chunks are linked by a
+``lax.scan`` carrying the (H, N, P) state — the same structure the Pallas
+kernel (:mod:`repro.kernels.mamba2_ssd`) tiles into VMEM.
+
+Decode is the O(1) recurrence (plus the causal-conv ring state).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .mlp import rms_norm
+from .pspec_ctx import constrain
+
+N_GROUPS = 1  # B/C projection groups (zamba2 uses small group counts)
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state N)."""
+    d_inner = cfg.d_inner
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba_layer(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
+    """Input projections are split per segment (z | x | B | C | dt) rather
+    than fused as in the reference CUDA code: separate matrices shard
+    cleanly on TP (the fused layout's shard boundaries cross segment
+    boundaries) and XLA fuses same-input matmuls regardless."""
+    D = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N_GROUPS * N
+    L = (n_layers,) if n_layers else ()
+    ks = jax.random.split(key, 8)
+    s_in = (1.0 / D) ** 0.5
+    return {
+        "ln": jnp.ones(L + (D,), jnp.float32),
+        "wz": jax.random.normal(ks[0], L + (D, d_inner), dtype) * s_in,
+        "wx": jax.random.normal(ks[1], L + (D, d_inner), dtype) * s_in,
+        "wb": jax.random.normal(ks[2], L + (D, N_GROUPS * N), dtype) * s_in,
+        "wc": jax.random.normal(ks[3], L + (D, N_GROUPS * N), dtype) * s_in,
+        "wdt": jax.random.normal(ks[4], L + (D, H), dtype) * s_in,
+        "conv_w": jax.random.normal(ks[5], L + (cfg.ssm_conv, conv_dim),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros(L + (conv_dim,), dtype),
+        "A_log": jnp.zeros(L + (H,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones(L + (H,), jnp.float32),
+        "dt_bias": jnp.full(L + (H,), -2.0, jnp.float32),
+        "out_norm": jnp.ones(L + (d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[6], L + (d_inner, D), dtype)
+        * (1.0 / d_inner) ** 0.5,
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Chunked SSD scan (reference)
+# --------------------------------------------------------------------------- #
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, state0: jnp.ndarray,
+                chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    x: (B, T, H, P); dt: (B, T, H) (softplus-ed); A: (H,) negative;
+    Bm, Cm: (B, T, G, N) broadcast over the heads of each group;
+    state0: (B, H, N, P). Returns (y (B,T,H,P), state_T).
+    """
+    Bsz, T, H, P = x.shape
+    G = Bm.shape[2]
+    hpg = H // G
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    n_chunks = T // c
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(Bsz, n_chunks, c, *a.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(to_chunks, (xf, dtf, Bf, Cf))
+
+    def body(state, inputs):
+        xt, dtt, Bt, Ct = inputs        # (B,c,H,P),(B,c,H),(B,c,G,N)
+        loga = dtt * A[None, None]      # (B,c,H) ≤ 0
+        cum = jnp.cumsum(loga, axis=1)
+        # heads→groups view for B/C
+        Bh = jnp.repeat(Bt, hpg, axis=2)   # (B,c,H,N) (G small; fine)
+        Ch = jnp.repeat(Ct, hpg, axis=2)
+        # inter-chunk: y_t += C_t · (exp(cum_t) h_0)
+        y = jnp.einsum("bthn,bhnp->bthp", Ch * jnp.exp(cum)[..., None],
+                       state)
+        # intra-chunk: scores[t,s] = (C_t·B_s) exp(cum_t−cum_s) dt_s, s ≤ t
+        sc = jnp.einsum("bthn,bshn->bhts", Ch, Bh)
+        # clamp the *difference* at 0: exact on the causal (s ≤ t) region,
+        # prevents overflow on the masked s > t entries (cum is decreasing)
+        decay = jnp.exp(jnp.minimum(
+            cum[:, :, None] - cum[:, None, :], 0.0))        # (B,c_t,c_s,H)
+        decay = jnp.moveaxis(decay, 3, 1)                   # (B,H,c_t,c_s)
+        sc = sc * decay * jnp.moveaxis(dtt, 1, 2)[:, :, None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        sc = jnp.where(tri[None, None], sc, 0.0)
+        y = y + jnp.einsum("bhts,bshp->bthp", sc, xt)
+        # state update: h' = exp(cum_c) h + Σ_s exp(cum_c−cum_s) dt_s B_s x_sᵀ
+        last = jnp.exp(cum[:, -1])                          # (B,H)
+        w_s = jnp.exp(cum[:, -1:, :] - cum) * dtt           # (B,c,H)
+        state = state * last[..., None, None] + jnp.einsum(
+            "bshn,bshp->bhnp", Bh * w_s[..., None], xt)
+        return state, y
+
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32),
+                             (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), state
+
+
+def ssd_decode(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+               Bm: jnp.ndarray, Cm: jnp.ndarray, state: jnp.ndarray,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step SSD. x: (B,H,P); dt: (B,H); Bm,Cm: (B,G,N); state (B,H,N,P)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    hpg = H // G
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bh = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), hpg, axis=1)
+    a = jnp.exp(dtf * A[None])                             # (B,H)
+    state = (state * a[..., None, None]
+             + jnp.einsum("bhn,bhp->bhnp", Bh * dtf[..., None], xf))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------------------------- #
+# Causal conv1d (the short depthwise conv in front of the SSM)
+# --------------------------------------------------------------------------- #
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                ring: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,T,C); w: (K,C); ring: (B,K-1,C)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([ring.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_ring = xp[:, -(K - 1):] if K > 1 else ring
+    return jax.nn.silu(out + b[None, None]), new_ring
+
+
+# --------------------------------------------------------------------------- #
+# Block application
+# --------------------------------------------------------------------------- #
+
+def mamba_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig, state: Dict,
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One Mamba2 layer. x: (B,T,D)."""
+    B, T, D = x.shape
+    d_inner, H, P, N = dims(cfg)
+    x = constrain(x, "dp", "tp" if cfg.sp else None, None)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z = h @ p["wz"]
+    xbc = jnp.concatenate(
+        [h @ p["wx"], h @ p["wb"], h @ p["wc"]], axis=-1)
+    dt_raw = h @ p["wdt"]
+    xbc, conv_state = causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                  state["conv"])
+    xs = xbc[..., :d_inner].reshape(B, T, H, P)
+    Bm = xbc[..., d_inner:d_inner + N_GROUPS * N].reshape(B, T, N_GROUPS, N)
+    Cm = xbc[..., d_inner + N_GROUPS * N:].reshape(B, T, N_GROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    if cfg.scan_impl == "reference":
+        y, ssm_state = ssd_chunked(xs, dt, A, Bm, Cm, state["ssm"])
+    else:
+        from ..kernels import mamba2_ssd as kk
+        y, ssm_state = kk.ssd(xs, dt, A, Bm, Cm, state["ssm"],
+                              interpret=(cfg.scan_impl
+                                         == "pallas_interpret"))
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, T, d_inner)
+    # gated RMSNorm (mamba2's norm-before-out-proj, gated by z)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return x + out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_decode(p: Dict, x: jnp.ndarray, cfg: ModelConfig, state: Dict,
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One token. x: (B,1,D)."""
+    B, _, D = x.shape
+    d_inner, H, P, N = dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z = (h @ p["wz"])[:, 0]
+    xbc = jnp.concatenate(
+        [h @ p["wx"], h @ p["wb"], h @ p["wc"]], axis=-1)[:, 0]
+    dt_raw = (h @ p["wdt"])[:, 0]
+    # conv ring buffer: shift in the new column
+    ring = state["conv"]                                  # (B, K-1, C)
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([ring.astype(x.dtype), xbc[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    new_ring = window[:, 1:] if K > 1 else ring
+    xs = xbc_t[..., :d_inner].reshape(B, H, P)
+    Bm = xbc_t[..., d_inner:d_inner + N_GROUPS * N].reshape(B, N_GROUPS, N)
+    Cm = xbc_t[..., d_inner + N_GROUPS * N:].reshape(B, N_GROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode(xs, dt, A, Bm, Cm, state["ssm"])
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return x + out, {"conv": new_ring, "ssm": ssm_state}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N_GROUPS * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }

@@ -1,0 +1,47 @@
+"""Norms, activations, dense MLP blocks (pure functions over param dicts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def activate(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def gated_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """MLP: gated (SwiGLU-style) when ``wg`` is present, else plain 2-matrix."""
+    if "wg" in params:
+        h = activate(x @ params["wg"], cfg.act) * (x @ params["wu"])
+        return h @ params["wd"]
+    return activate(x @ params["wu"], cfg.act) @ params["wd"]
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype, n_layers: int = 0,
+                   gated: bool = True):
+    """Stacked init (leading layer axis when n_layers > 0)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    lead = (n_layers,) if n_layers else ()
+    s_in = (2.0 / (d_model + d_ff)) ** 0.5
+    params = {
+        "wu": jax.random.normal(k2, lead + (d_model, d_ff), dtype) * s_in,
+        "wd": jax.random.normal(k3, lead + (d_ff, d_model), dtype) * s_in,
+    }
+    if gated:
+        params["wg"] = (jax.random.normal(k1, lead + (d_model, d_ff), dtype)
+                        * s_in)
+    return params

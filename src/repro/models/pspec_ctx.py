@@ -1,0 +1,108 @@
+"""Activation-sharding context: divisibility-guarded constraints.
+
+``with_sharding_constraint`` with bare PartitionSpecs requires an ambient
+mesh; model code must also run un-meshed (CPU smoke tests). This module
+provides a process-local context the launch layer enters around tracing:
+
+    with activation_ctx(mesh):
+        lowered = jax.jit(step, ...).lower(...)
+
+Inside model code, ``constrain(x, "dp", None, "tp", None)`` then pins the
+batch dim to the data axes and (when the dim divides the axis) the head/ff
+dim to the model axis — without it GSPMD is free to replicate the batch dim
+of large intermediates, which measurably happened (stablelm train_4k:
+replicated attention residuals, 149 GiB/device temp; see EXPERIMENTS.md
+§Perf iteration 0 → 1).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    dp: Union[str, Tuple[str, ...], None]
+    tp: Optional[str]
+    dp_size: int
+    tp_size: int
+    # path-string → PartitionSpec for parameters (cast-before-gather)
+    param_specs: Optional[dict] = None
+
+    def param_spec(self, path_str: str):
+        if self.param_specs is None:
+            return None
+        return self.param_specs.get(path_str)
+
+
+_CTX: contextvars.ContextVar[Optional[AxisCtx]] = contextvars.ContextVar(
+    "repro_axis_ctx", default=None)
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+@contextlib.contextmanager
+def activation_ctx(mesh, param_pspecs=None):
+    """``param_pspecs``: optional PartitionSpec pytree matching the model's
+    parameter structure; when provided, ``cast_for_compute`` constrains each
+    bf16 compute copy to the *same* sharding as its fp32 master, so GSPMD
+    casts on-shard and all-gathers bf16 (half the FSDP wire bytes —
+    §Perf iteration C1)."""
+    import numpy as np
+    names = mesh.axis_names
+    dp_names = tuple(n for n in ("pod", "data") if n in names)
+    dp: Union[str, Tuple[str, ...], None]
+    dp = dp_names if len(dp_names) > 1 else (dp_names[0] if dp_names
+                                             else None)
+    dp_size = int(np.prod([mesh.shape[n] for n in dp_names])) if dp_names \
+        else 1
+    tp = "model" if "model" in names else None
+    tp_size = mesh.shape.get("model", 1) if tp else 1
+    spec_map = None
+    if param_pspecs is not None:
+        flat = jax.tree_util.tree_leaves_with_path(
+            param_pspecs, is_leaf=lambda x: isinstance(x, P))
+        spec_map = {path_str(p): s for p, s in flat}
+    token = _CTX.set(AxisCtx(dp, tp, dp_size, tp_size, spec_map))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def active() -> Optional[AxisCtx]:
+    return _CTX.get()
+
+
+def constrain(x, *tokens):
+    """Apply a guarded sharding constraint.
+
+    tokens per dim: "dp" (batch axes), "tp" (model axis), None (replicated).
+    A token is dropped to None when the dim does not divide the axis size,
+    so the same model code serves 1-device tests and 512-chip meshes.
+    """
+    c = _CTX.get()
+    if c is None:
+        return x
+    spec = []
+    for dim, t in zip(x.shape, tokens):
+        if t == "dp" and c.dp is not None and c.dp_size > 1 \
+                and dim % c.dp_size == 0:
+            spec.append(c.dp)
+        elif t == "tp" and c.tp is not None and c.tp_size > 1 \
+                and dim % c.tp_size == 0:
+            spec.append(c.tp)
+        else:
+            spec.append(None)
+    # pad remaining dims
+    spec.extend([None] * (len(x.shape) - len(spec)))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,80 @@
+"""Rotary position embeddings: standard, partial-2d (ChatGLM), M-RoPE (Qwen2-VL).
+
+All variants are pure functions ``(q_or_k, positions, cfg) -> rotated`` over
+arrays shaped ``(B, S, H, hd)``; computation in fp32, cast back to the input
+dtype (standard practice — rope in bf16 loses long-context precision).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _rotate(x: jnp.ndarray, positions: jnp.ndarray, dim: int,
+            theta: float) -> jnp.ndarray:
+    """Rotate the first ``dim`` channels of the last axis.
+
+    positions: (B, S) int32. x: (B, S, H, hd).
+    """
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B,S,1,half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :dim], x[..., dim:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    out1 = x1f * cos - x2f * sin
+    out2 = x2f * cos + x1f * sin
+    rotated = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([rotated, x_pass], axis=-1) if dim < x.shape[-1] \
+        else rotated
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               cfg: ModelConfig) -> jnp.ndarray:
+    """Dispatch on ``cfg.rope_variant``.
+
+    * ``standard`` — rotate the full head dim.
+    * ``2d`` — ChatGLM RoPE: rotate only the first half of the head dim
+      (the remaining channels carry no positional signal).
+    * ``mrope`` — Qwen2-VL multimodal RoPE: positions is (B, 3, S) with
+      temporal/height/width components; head-dim channels are split into
+      three sections rotated by their own position stream.
+    * ``none`` — identity (attention-free or NoPE architectures).
+    """
+    hd = x.shape[-1]
+    variant = cfg.rope_variant
+    if variant == "none":
+        return x
+    if variant == "standard":
+        return _rotate(x, positions, hd, cfg.rope_theta)
+    if variant == "2d":
+        return _rotate(x, positions, hd // 2, cfg.rope_theta)
+    if variant == "mrope":
+        # positions: (B, 3, S). Sections (t, h, w) over the head dim in the
+        # published 16/24/24-style proportions; here equal thirds rounded to
+        # even numbers, remainder to the temporal section.
+        third = (hd // 3) // 2 * 2
+        sections = (hd - 2 * third, third, third)
+        outs = []
+        start = 0
+        for i, sec in enumerate(sections):
+            piece = x[..., start:start + sec]
+            outs.append(_rotate(piece, positions[:, i], sec, cfg.rope_theta))
+            start += sec
+        return jnp.concatenate(outs, axis=-1)
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+def default_positions(batch: int, seq: int, cfg: ModelConfig,
+                      offset: int = 0) -> jnp.ndarray:
+    """Positions for text-only inputs (mrope degenerates to equal streams)."""
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_variant == "mrope":
+        return jnp.broadcast_to(pos[:, None, :], (batch, 3, seq))
+    return pos

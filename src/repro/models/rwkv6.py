@@ -1,0 +1,248 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent decay.
+
+Faithful to arXiv:2404.05892: token-shift with LoRA-modulated 5-way
+interpolation, per-channel data-dependent decay ``w_t = exp(-exp(…))``, the
+``u`` (bonus) in-place term, per-head WKV state of shape (head, N, N) with
+N = 64, grouped-norm output gating, and squared-ReLU channel mixing.
+
+Two WKV evaluation paths (``cfg.scan_impl``):
+
+* ``reference`` — *chunked* parallel form: within a chunk the recurrence is
+  expressed as decay-weighted attention-like matmuls (MXU-friendly, honest
+  FLOPs in the lowered HLO); chunks are linked by a ``lax.scan`` carrying the
+  (H, N, N) state. This is also the formulation the Pallas kernel uses.
+* ``pallas`` / ``pallas_interpret`` — :mod:`repro.kernels.rwkv6_wkv`.
+
+Decode is the O(1) recurrence on the carried state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .mlp import rms_norm
+from .pspec_ctx import constrain
+
+HEAD_N = 64      # RWKV head size (fixed across the published family)
+LORA_RANK = 32
+DECAY_RANK = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_N
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+def init_rwkv_layer(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    L = (n_layers,) if n_layers else ()
+    ks = list(jax.random.split(key, 16))
+    s = (1.0 / D) ** 0.5
+
+    def w(k, shape, scale=s):
+        return jax.random.normal(k, L + shape, dtype) * scale
+
+    return {
+        "ln1": jnp.ones(L + (D,), jnp.float32),
+        "ln2": jnp.ones(L + (D,), jnp.float32),
+        # 5-way token-shift mixing (w, k, v, r, g) + its LoRA
+        "maa_x": jnp.zeros(L + (D,), jnp.float32),
+        "maa_wkvrg": jnp.zeros(L + (5, D), jnp.float32),
+        "maa_w1": w(ks[0], (D, 5 * LORA_RANK)),
+        "maa_w2": w(ks[1], (5, LORA_RANK, D), scale=(1.0 / LORA_RANK) ** 0.5),
+        # data-dependent decay
+        "decay": jnp.full(L + (D,), -6.0, jnp.float32),
+        "decay_w1": w(ks[2], (D, DECAY_RANK)),
+        "decay_w2": w(ks[3], (DECAY_RANK, D),
+                      scale=(1.0 / DECAY_RANK) ** 0.5),
+        "bonus": jnp.zeros(L + (D,), jnp.float32),   # "u" / faaaa
+        "wr": w(ks[4], (D, D)),
+        "wk": w(ks[5], (D, D)),
+        "wv": w(ks[6], (D, D)),
+        "wg": w(ks[7], (D, D)),
+        "wo": w(ks[8], (D, D)),
+        "ln_x": jnp.ones(L + (D,), jnp.float32),     # per-head group norm
+        # channel mix
+        "cmix_k": jnp.zeros(L + (D,), jnp.float32),
+        "cmix_r": jnp.zeros(L + (D,), jnp.float32),
+        "ck": w(ks[9], (D, F)),
+        "cv": w(ks[10], (F, D), scale=(1.0 / F) ** 0.5),
+        "cr": w(ks[11], (D, D)),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# WKV: chunked parallel reference
+# --------------------------------------------------------------------------- #
+
+def wkv_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                w: jnp.ndarray, u: jnp.ndarray,
+                state0: jnp.ndarray, chunk: int = 64,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6.
+
+    r,k,v,w: (B, T, H, N) — w is the per-step decay in (0,1);
+    u: (H, N); state0: (B, H, N, N) keyed [key_channel, value_channel].
+    Returns (out (B,T,H,N), state_T).
+    """
+    B, T, H, N = r.shape
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    n_chunks = T // c
+    rc = r.reshape(B, n_chunks, c, H, N).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, c, H, N).astype(jnp.float32)
+    vc = v.reshape(B, n_chunks, c, H, N).astype(jnp.float32)
+    wc = w.reshape(B, n_chunks, c, H, N).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    # move chunk axis first for scan
+    rc, kc, vc, wc = (jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, wc))
+
+    def body(state, inputs):
+        rt, kt, vt, wt = inputs          # (B, c, H, N)
+        logw = jnp.log(jnp.maximum(wt, 1e-8))
+        cum = jnp.cumsum(logw, axis=1)   # (B, c, H, N) — P_t = exp(cum_t)
+        # fp32 guard: with extreme learned decays exp(-cum) can overflow;
+        # clamping bounds the intra-chunk ratio at e30 (error ≤ exp(-30))
+        cum = jnp.maximum(cum, -30.0)
+        # inter-chunk: out_t += (r_t ⊙ P_{t-1}) @ state
+        p_prev = jnp.exp(cum - logw)     # P_{t-1} = P_t / w_t
+        r_dec = rt * p_prev
+        out = jnp.einsum("bthn,bhnm->bthm", r_dec, state)
+        # intra-chunk: scores[t,s] = Σ_n r[t,n]·k[s,n]·exp(cum[t-1]-cum[s]) (s<t)
+        #              diagonal s=t uses the bonus u instead of decay
+        ratio_t = rt * p_prev            # r_t ⊙ P_{t-1}
+        k_over = kt * jnp.exp(-cum)      # k_s / P_s
+        scores = jnp.einsum("bthn,bshn->bhts", ratio_t, k_over)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        diag = jnp.einsum("bthn,bthn->bth", rt * uf[None, None], kt)
+        out = out + jnp.einsum("bhts,bshm->bthm", scores, vt)
+        out = out + diag[..., None] * vt
+        # state update: S' = diag(P_c) S + Σ_s (P_c/P_s) k_s v_s^T
+        p_last = jnp.exp(cum[:, -1])     # (B, H, N)
+        k_scaled = kt * jnp.exp(cum[:, -1:, :, :] - cum)
+        state = state * p_last[..., None] + jnp.einsum(
+            "bshn,bshm->bhnm", k_scaled, vt)
+        return state, out
+
+    state, outs = jax.lax.scan(body, state0.astype(jnp.float32),
+                               (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, H, N)
+    return out.astype(r.dtype), state
+
+
+def wkv_decode(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray, state: jnp.ndarray,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step WKV. r,k,v,w: (B, H, N); state: (B, H, N, N)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    out = jnp.einsum("bhn,bhnm->bhm", rf, state + uf[None, ..., None] * kv)
+    state = state * wf[..., None] + kv
+    return out.astype(r.dtype), state
+
+
+# --------------------------------------------------------------------------- #
+# Block application
+# --------------------------------------------------------------------------- #
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray) -> jnp.ndarray:
+    """shift(x)[t] = x[t-1]; position 0 gets ``last`` (carried state)."""
+    return jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]],
+                           axis=1)
+
+
+def _time_mix_inputs(p: Dict, x: jnp.ndarray, shifted: jnp.ndarray):
+    """5-way LoRA-modulated token-shift interpolation → (xw, xk, xv, xr, xg)."""
+    xx = shifted - x
+    base = x + xx * p["maa_x"].astype(x.dtype)
+    t = jnp.tanh(base @ p["maa_w1"].astype(x.dtype))        # (B,T,5R)
+    t = t.reshape(*base.shape[:2], 5, LORA_RANK)            # (B,T,5,R)
+    deltas = jnp.einsum("btfr,frd->btfd", t,
+                        p["maa_w2"].astype(x.dtype))        # (B,T,5,D)
+    mixed = (x[:, :, None] + xx[:, :, None]
+             * (p["maa_wkvrg"].astype(x.dtype)[None, None] + deltas))
+    # order: w, k, v, r, g
+    return tuple(mixed[:, :, i] for i in range(5))
+
+
+def time_mix(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+             shift_state: jnp.ndarray, wkv_state: jnp.ndarray,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full time-mix block. x: (B,T,D). Returns (out, shift_state', wkv')."""
+    B, T, D = x.shape
+    H = D // HEAD_N
+    shifted = _token_shift(x, shift_state)
+    xw, xk, xv, xr, xg = _time_mix_inputs(p, x, shifted)
+
+    r = (xr @ p["wr"]).reshape(B, T, H, HEAD_N)
+    k = (xk @ p["wk"]).reshape(B, T, H, HEAD_N)
+    v = (xv @ p["wv"]).reshape(B, T, H, HEAD_N)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (fp32 for the double exponential)
+    dd = (p["decay"].astype(jnp.float32)
+          + jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32))
+          @ p["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dd)).reshape(B, T, H, HEAD_N)      # (0,1)
+    u = p["bonus"].astype(jnp.float32).reshape(H, HEAD_N)
+
+    if cfg.scan_impl == "reference":
+        out, wkv_state = wkv_chunked(r, k, v, w.astype(r.dtype), u, wkv_state)
+    else:
+        from ..kernels import rwkv6_wkv as kk
+        out, wkv_state = kk.wkv(r, k, v, w.astype(r.dtype), u, wkv_state,
+                                interpret=(cfg.scan_impl
+                                           == "pallas_interpret"))
+    out = out.reshape(B, T, D)
+    # per-head group norm then gate
+    out = out.reshape(B, T, H, HEAD_N)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(B, T, D) * p["ln_x"].astype(out.dtype)
+    out = out.astype(x.dtype) * g
+    return out @ p["wo"], x[:, -1], wkv_state
+
+
+def channel_mix(p: Dict, x: jnp.ndarray, shift_state: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    shifted = _token_shift(x, shift_state)
+    xx = shifted - x
+    xk = x + xx * p["cmix_k"].astype(x.dtype)
+    xr = x + xx * p["cmix_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"]), x[:, -1]
+
+
+def rwkv_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig, state: Dict,
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One RWKV layer (time-mix + channel-mix with pre-norms)."""
+    x = constrain(x, "dp", "tp" if cfg.sp else None, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    tm, s1, wkv = time_mix(p, h, cfg, state["tm_shift"], state["wkv"])
+    x = x + tm
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    cm, s2 = channel_mix(p, h, state["cm_shift"])
+    x = x + cm
+    return x, {"tm_shift": s1, "cm_shift": s2, "wkv": wkv}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    """Per-layer recurrent state (stacked over layers by the assembler)."""
+    D = cfg.d_model
+    H = n_heads(cfg)
+    return {
+        "tm_shift": jnp.zeros((batch, D), dtype),
+        "cm_shift": jnp.zeros((batch, D), dtype),
+        "wkv": jnp.zeros((batch, H, HEAD_N, HEAD_N), jnp.float32),
+    }

@@ -1,0 +1,241 @@
+"""PartitionSpec assignment for parameters, optimizer state, batches, caches.
+
+Scheme (DESIGN.md §5) on mesh axes (``pod``?, ``data``, ``model``):
+
+* activations/batch: batch dim over (``pod``, ``data``).
+* TP over ``model``: attention q-heads (when divisible), FFN hidden, MoE
+  expert dim, vocab dim.
+* FSDP over ``data``: every weight's non-TP matrix dim is additionally
+  sharded over ``data``; GSPMD inserts the per-layer all-gathers (ZeRO-3
+  equivalent). Optimizer moments inherit the same specs, so optimizer
+  memory is fully sharded too.
+* Decode caches: batch over ``data`` (sequence over ``data`` instead when
+  batch == 1, i.e. the long_500k cell), heads over ``model`` when the
+  (replicated-)head count divides the axis.
+
+All rules are *divisibility-guarded*: any dim that does not divide its axis
+is replicated, so the same code paths serve the 1-device smoke tests, the
+16×16 pod and the 2×16×16 multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig, ShapeConfig
+from . import transformer
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh):
+    """The axes the batch dim is sharded over."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    if not names:
+        return None
+    return tuple(names) if len(names) > 1 else names[0]
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def _guard(n: int, axis: str, mesh: Mesh) -> Optional[str]:
+    return axis if _div(n, _axsize(mesh, axis)) else None
+
+
+def kv_repeat_for(cfg: ModelConfig, mesh: Mesh) -> int:
+    """KV replication so the cache head axis divides TP (when q-heads do)."""
+    tp = _axsize(mesh, "model")
+    if tp <= 1 or cfg.n_kv_heads == 0:
+        return 1
+    if cfg.n_heads % tp:
+        return 1  # attention is replicated over TP anyway
+    from math import gcd
+    return tp // gcd(cfg.n_kv_heads, tp)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs (path-based rules)
+# --------------------------------------------------------------------------- #
+
+def _attn_spec(name: str, cfg: ModelConfig, mesh: Mesh, lead) -> P:
+    tp_ok = _div(cfg.n_heads, _axsize(mesh, "model"))
+    fsdp = _guard(cfg.d_model, "data", mesh)
+    if name in ("wq",):
+        return P(*lead, fsdp, "model" if tp_ok else None)
+    if name in ("wk", "wv"):
+        return P(*lead, fsdp, None)       # kv projections stay replicated
+    if name == "wo":
+        return P(*lead, "model" if tp_ok else None, fsdp)
+    return P(*lead, None)
+
+
+def _mlp_spec(name: str, d_in: int, d_ff: int, mesh: Mesh, lead) -> P:
+    fsdp = _guard(d_in, "data", mesh)
+    tp = _guard(d_ff, "model", mesh)
+    if name in ("wg", "wu", "ck"):
+        return P(*lead, fsdp, tp)
+    if name in ("wd", "cv"):
+        return P(*lead, tp, fsdp)
+    return P(*lead, fsdp, None)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``transformer.init_params`` output."""
+    tree = transformer.abstract_params(cfg)
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(p, "key", None) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        lead = [None] * (nd - 2)  # stacked layer axes
+        if name == "embed":
+            return P(_guard(cfg.vocab_size, "model", mesh),
+                     _guard(cfg.d_model, "data", mesh))
+        if name == "lm_head":
+            return P(_guard(cfg.d_model, "data", mesh),
+                     _guard(cfg.vocab_size, "model", mesh))
+        if name == "final_norm" or nd <= 1 + len(lead):
+            return P(*([None] * nd))
+        # ---- attention ----
+        if "attn" in keys and name in ("wq", "wk", "wv", "wo"):
+            return _attn_spec(name, cfg, mesh, lead)
+        # ---- MoE ----
+        if "moe" in keys:
+            ep = _guard(cfg.n_experts, "model", mesh)
+            fsdp = _guard(cfg.d_model, "data", mesh)
+            if name == "router":
+                return P(*lead, fsdp, None)
+            if name in ("wg", "wu", "wd") and "shared" not in keys:
+                # expert weights carry 3 trailing dims (E, in, out)
+                lead3 = [None] * (nd - 3)
+                if name == "wd":
+                    return P(*lead3, ep, _guard(cfg.d_ff, "data", mesh),
+                             None)
+                return P(*lead3, ep, fsdp, None)
+            if name in ("wg", "wu", "wd"):
+                return _mlp_spec(name, cfg.d_model, cfg.d_ff, mesh, lead)
+        # ---- dense MLP / rwkv channel mix ----
+        if name in ("wg", "wu", "wd", "ck", "cv"):
+            return _mlp_spec(name, cfg.d_model, cfg.d_ff, mesh, lead)
+        # ---- rwkv time mix (replicated TP; FSDP on first matrix dim) ----
+        if name in ("wr", "cr"):
+            return P(*lead, _guard(cfg.d_model, "data", mesh), None)
+        if name in ("maa_w1", "decay_w1"):
+            return P(*lead, _guard(cfg.d_model, "data", mesh), None)
+        if name in ("maa_w2", "decay_w2"):
+            return P(*([None] * nd))
+        # ---- mamba ----
+        if name in ("wz", "wx"):
+            return P(*lead, _guard(cfg.d_model, "data", mesh),
+                     _guard(cfg.d_inner, "model", mesh))
+        if name in ("wb", "wc", "wdt"):
+            return P(*lead, _guard(cfg.d_model, "data", mesh), None)
+        if name == "out_proj":
+            return P(*lead, _guard(cfg.d_inner, "model", mesh),
+                     _guard(cfg.d_model, "data", mesh))
+        if name in ("conv_w", "conv_b", "out_norm"):
+            return P(*([None] * nd))
+        # default for 2D+ weights: FSDP on dim -2
+        if nd >= 2:
+            return P(*lead, _guard(leaf.shape[-2], "data", mesh), None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    p_specs = param_specs(cfg, mesh)
+    return {
+        "params": p_specs,
+        "opt": {
+            "m": p_specs,
+            "v": p_specs,
+            "step": P(),
+        },
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Batch / cache / token specs
+# --------------------------------------------------------------------------- #
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                 ) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([_axsize(mesh, a) for a in ("pod", "data")]))
+    b_ax = dp if _div(shape.global_batch, dp_size) else None
+    out = {"inputs": (P(b_ax, None, None) if cfg.embedding_inputs
+                      else P(b_ax, None))}
+    if shape.kind == "train":
+        out["labels"] = P(b_ax, None)
+    if cfg.rope_variant == "mrope":
+        out["positions"] = P(b_ax, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """Specs matching transformer.init_cache's pytree."""
+    from .input_specs import cache_specs
+    B = shape.global_batch
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([_axsize(mesh, a) for a in ("pod", "data")]))
+    batch_ok = _div(B, dp_size)
+    tree = cache_specs(cfg, B, shape.seq_len)
+    heff = cfg.n_kv_heads * cfg.kv_repeat
+    tp_heads = _div(heff, _axsize(mesh, "model"))
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(p, "key", None) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name == "length":
+            return P()
+        if name in ("k", "v"):
+            # (L|G, B, S, H, hd): batch over dp; heads over model when the
+            # (replicated-)head count divides; otherwise the model axis
+            # shards the *sequence* (§Perf iteration B3 — partial-softmax
+            # decode attention over the seq-sharded cache); when batch
+            # cannot shard (long_500k) the dp axes shard the sequence too.
+            seq_ax: Any = None
+            if not batch_ok and _div(leaf.shape[2], dp_size):
+                seq_ax = dp
+            elif not tp_heads and _div(leaf.shape[2],
+                                       _axsize(mesh, "model")):
+                seq_ax = "model"
+            return P(None, dp if batch_ok else None, seq_ax,
+                     "model" if tp_heads else None, None)
+        if "rwkv" in keys or "mamba" in keys:
+            # states: (L, B, ...) — batch over dp; heads over model for mamba
+            spec = [None, dp if batch_ok else None] + [None] * (nd - 2)
+            if name == "ssm" and _div(leaf.shape[2], _axsize(mesh, "model")):
+                spec[2] = "model"
+            if name == "wkv" and _div(leaf.shape[2],
+                                      _axsize(mesh, "model")):
+                spec[2] = "model"
+            if name == "conv" and _div(leaf.shape[-1],
+                                       _axsize(mesh, "model")):
+                spec[-1] = "model"
+            return P(*spec)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def token_pspec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([_axsize(mesh, a) for a in ("pod", "data")]))
+    b_ax = dp if _div(shape.global_batch, dp_size) else None
+    return P(b_ax, None, None) if cfg.embedding_inputs else P(b_ax, None)
+
+
+def named(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,138 @@
+"""Step builders: train / prefill / decode as pure jittable functions.
+
+The train loss is a *chunked* cross-entropy: logits are produced and reduced
+seq-chunk by seq-chunk inside a ``lax.scan``, so the full (B, S, V) logits
+tensor never exists — at vocab 202k and 1M tokens that is the difference
+between a few hundred MB and ~400 GB of peak activation. (Memory
+optimization beyond the paper; see EXPERIMENTS.md §Perf.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .config import ModelConfig
+from .mlp import rms_norm
+from .pspec_ctx import constrain
+from .rope import default_positions
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+AUX_COEF = 0.01
+CE_CHUNK = 512
+
+
+def chunked_ce_loss(params: Dict, cfg: ModelConfig, hidden: jnp.ndarray,
+                    labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE over (B, S) from backbone hidden states."""
+    B, S, D = hidden.shape
+    c = min(CE_CHUNK, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    h = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    w = w.astype(h.dtype)
+    hc = jnp.moveaxis(h.reshape(B, n, c, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        # remat: without it the scan's backward stashes every (B, c, V)
+        # logits chunk — the full logits tensor through the back door
+        hx, lx = xs
+        logits = constrain((hx @ w).astype(jnp.float32), "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    params = transformer.cast_for_compute(params)
+    inputs = batch["inputs"]
+    B, S = inputs.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(B, S, cfg)
+    h = transformer.embed_inputs(params, cfg, inputs)
+    h, aux, _ = transformer.apply_backbone(params, cfg, h, positions,
+                                           want_cache=False)
+    ce = chunked_ce_loss(params, cfg, h, batch["labels"])
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# Train step
+# --------------------------------------------------------------------------- #
+
+def init_train_state(cfg: ModelConfig, key, opt: Optional[AdamWConfig] = None
+                     ) -> Dict[str, Any]:
+    params = transformer.init_params(cfg, key, jnp.float32)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def abstract_train_state(cfg: ModelConfig) -> Dict[str, Any]:
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k), jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, opt: Optional[AdamWConfig] = None,
+                    accum_steps: int = 1):
+    opt = opt or AdamWConfig()
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray]):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, batch)
+        else:
+            # gradient accumulation over microbatches (scan over splits)
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, cfg, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda a: a.reshape(accum_steps, a.shape[0] // accum_steps,
+                                    *a.shape[1:]), batch)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = lsum / accum_steps
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------- #
+# Serving steps
+# --------------------------------------------------------------------------- #
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: Dict, batch: Dict[str, jnp.ndarray]):
+        params = transformer.cast_for_compute(params)
+        return transformer.prefill(params, cfg, batch["inputs"],
+                                   batch.get("positions"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params: Dict, token: jnp.ndarray, cache: Dict):
+        params = transformer.cast_for_compute(params)
+        return transformer.decode(params, cfg, token, cache)
+    return decode_step

@@ -1,0 +1,732 @@
+"""Model assembly: init / forward / prefill / decode for every arch family.
+
+Structural choices that matter for scale (and for the dry-run):
+
+* **Scan over layers** — all per-layer parameters are stacked on a leading
+  axis and the layer loop is a ``lax.scan``; the compiled HLO is O(1) in
+  depth (compile time and program size independent of 28 vs 81 layers).
+* **Remat** — the scan body is wrapped in ``jax.checkpoint`` for training
+  (``cfg.remat == 'full'``), so activation memory is one layer deep.
+* **GQA handling** — for train/prefill the kv heads are repeated up to the
+  query heads *after* projection (cheap view; keeps the attention einsum
+  shardable on the query-head axis). For decode the cache stores
+  ``n_kv_heads × cfg.kv_repeat`` heads: ``kv_repeat`` is chosen per mesh so
+  the head axis is TP-divisible (KV replication; see DESIGN.md §5).
+* **MoE interleaving** — ``moe_layer_period`` groups layers; the scan runs
+  over groups (1 group = ``period-1`` dense layers + 1 MoE layer), which is
+  how llama4-maverick's alternating dense/MoE stack is expressed.
+* **Hybrid (zamba2)** — scan over groups of ``attn_every`` Mamba2 layers,
+  each followed by one application of a single *shared* attention+MLP block
+  (parameters reused across all applications — the Zamba trick); trailing
+  Mamba layers form a second scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba2, rwkv6
+from .attention import (attention, decode_attention, update_cache)
+from .config import ModelConfig
+from .mlp import gated_mlp, init_gated_mlp, rms_norm
+from .moe import init_moe, moe_apply
+from .pspec_ctx import constrain
+from .rope import apply_rope, default_positions
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+def _init_attn(key, cfg: ModelConfig, n_layers: int, dtype) -> Dict:
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    lead = (n_layers,) if n_layers else ()
+    ks = jax.random.split(key, 4)
+    s = (1.0 / D) ** 0.5
+    return {
+        "wq": jax.random.normal(ks[0], lead + (D, Hq * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], lead + (D, Hkv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], lead + (D, Hkv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], lead + (Hq * hd, D), dtype)
+        * (1.0 / (Hq * hd)) ** 0.5,
+    }
+
+
+def _init_norms(cfg: ModelConfig, n_layers: int) -> Dict:
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "ln1": jnp.ones(lead + (cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones(lead + (cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: Dict[str, Any] = {}
+    if not cfg.embedding_inputs:
+        params["embed"] = (jax.random.normal(ks[0], (V, D), param_dtype)
+                           * (1.0 / math.sqrt(D)))
+    params["final_norm"] = jnp.ones((D,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (D, V), param_dtype)
+                             * (1.0 / math.sqrt(D)))
+
+    if cfg.family == "ssm":           # rwkv6
+        params["blocks"] = rwkv6.init_rwkv_layer(
+            ks[2], cfg, cfg.n_layers, param_dtype)
+        return params
+
+    if cfg.family == "hybrid":        # zamba2
+        G = cfg.n_layers // cfg.attn_every
+        R = cfg.n_layers - G * cfg.attn_every
+        params["mamba"] = mamba2.init_mamba_layer(
+            ks[2], cfg, cfg.n_layers, param_dtype)
+        params["shared_attn"] = {
+            **_init_norms(cfg, 0),
+            "attn": _init_attn(ks[3], cfg, 0, param_dtype),
+            "mlp": init_gated_mlp(ks[4], D, cfg.d_ff, param_dtype, 0,
+                                  gated=cfg.mlp_gated),
+        }
+        del R  # trailing layers are sliced from the same stack at apply time
+        return params
+
+    # dense / moe / audio / vlm: uniform attention stack
+    if cfg.n_experts:
+        period = cfg.moe_layer_period
+        G = cfg.n_layers // period
+        blocks: Dict[str, Any] = {
+            "norms": _init_norms(cfg, G * period),
+            "attn": _init_attn(ks[2], cfg, G * period, param_dtype),
+            "moe": init_moe(ks[3], cfg, G, param_dtype),
+        }
+        if period > 1:
+            blocks["mlp"] = init_gated_mlp(
+                ks[4], D, cfg.d_ff, param_dtype, G * (period - 1),
+                gated=cfg.mlp_gated)
+        params["blocks"] = blocks
+    else:
+        params["blocks"] = {
+            "norms": _init_norms(cfg, cfg.n_layers),
+            "attn": _init_attn(ks[2], cfg, cfg.n_layers, param_dtype),
+            "mlp": init_gated_mlp(ks[4], D, cfg.d_ff, param_dtype,
+                                  cfg.n_layers, gated=cfg.mlp_gated),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig, param_dtype=jnp.float32):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, param_dtype), jax.random.PRNGKey(0))
+
+
+# matmul weights cast to bf16 for compute (mixed precision); norms, router,
+# decays and other numerics-sensitive leaves stay fp32
+_COMPUTE_CAST = frozenset({
+    "embed", "lm_head", "wq", "wk", "wv", "wo", "wg", "wu", "wd",
+    "wr", "ck", "cv", "cr", "wz", "wx", "wb", "wc", "wdt",
+    "out_proj", "conv_w", "conv_b",
+})
+
+
+def cast_for_compute(params: Dict) -> Dict:
+    """fp32 master params → bf16 compute copies for the matmul weights.
+
+    When an activation context with param specs is active, each bf16 copy
+    is constrained to the *same* sharding as its fp32 master: GSPMD then
+    converts on-shard and all-gathers bf16 instead of gathering fp32 and
+    converting afterwards — halving the FSDP all-gather wire bytes
+    (§Perf iteration C1)."""
+    from . import pspec_ctx
+    ctx = pspec_ctx.active()
+
+    def rule(path, leaf):
+        name = getattr(path[-1], "key", None)
+        if (name in _COMPUTE_CAST and leaf.dtype == jnp.float32):
+            out = leaf.astype(COMPUTE_DTYPE)
+            if ctx is not None:
+                spec = ctx.param_spec(pspec_ctx.path_str(path))
+                if spec is not None:
+                    out = jax.lax.with_sharding_constraint(out, spec)
+            return out
+        return leaf
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    tree = abstract_params(cfg)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        n = int(np_prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", None) for p in path]
+        if "moe" in keys and any(k in ("wg", "wu", "wd") for k in keys):
+            expert += n
+    if not active_only or not cfg.n_experts:
+        return total
+    frac = cfg.experts_per_token / cfg.n_experts
+    return int(total - expert + expert * frac)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Attention sub-block (shared by dense / moe / hybrid-shared)
+# --------------------------------------------------------------------------- #
+
+def _project_qkv(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    q = constrain(q, "dp", None, "tp", None)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def attn_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+               positions: jnp.ndarray, want_cache: bool
+               ) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Full-sequence attention. Returns (out, (k,v) for the cache or None)."""
+    B, S, _ = x.shape
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if not want_cache:
+        # Training path (§Perf iteration C1b): gather the sequence dim on
+        # the small (Hkv-head) tensors BEFORE the GQA repeat — the repeat
+        # is then local and the S all-gather moves Hkv/Hq of the bytes
+        # (also removes the SPMD "involuntary full rematerialization"
+        # fallback on the repeat). Skipped for prefill: at 32k context the
+        # replicated-S kv materialization raises peak memory (measured
+        # +11–23 GiB/device) for no wire win.
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    kr = constrain(jnp.repeat(k, Hq // Hkv, axis=2), "dp", None, "tp", None)
+    vr = constrain(jnp.repeat(v, Hq // Hkv, axis=2), "dp", None, "tp", None)
+    o = attention(q, kr, vr, cfg)
+    out = o.reshape(B, S, Hq * cfg.resolved_head_dim) @ p["wo"]
+    if want_cache:
+        r = cfg.kv_repeat
+        kc = jnp.repeat(k, r, axis=2) if r > 1 else k
+        vc = jnp.repeat(v, r, axis=2) if r > 1 else v
+        return out, (kc.astype(COMPUTE_DTYPE), vc.astype(COMPUTE_DTYPE))
+    return out, None
+
+
+def attn_decode_block(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                      positions: jnp.ndarray, k_cache, v_cache, length
+                      ) -> Tuple[jnp.ndarray, Any, Any]:
+    """Single-token attention against a cache. x: (B,1,D)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    Hq = cfg.n_heads
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    r = cfg.kv_repeat
+    if r > 1:
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    k_cache, v_cache = update_cache(k_cache, v_cache, k, v, length)
+    o = decode_attention(q, k_cache, v_cache, length + 1)
+    out = o.reshape(B, 1, Hq * hd) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------- #
+# Layer bodies
+# --------------------------------------------------------------------------- #
+
+def _dense_layer(p_norms, p_attn, p_mlp, x, cfg, positions, want_cache):
+    x = constrain(x, "dp", "tp" if cfg.sp else None, None)
+    a, kv = attn_block(p_attn, rms_norm(x, p_norms["ln1"], cfg.norm_eps),
+                       cfg, positions, want_cache)
+    x = x + a
+    m = gated_mlp(p_mlp, rms_norm(x, p_norms["ln2"], cfg.norm_eps), cfg)
+    return x + m, kv
+
+
+def _moe_layer(p_norms, p_attn, p_moe, x, cfg, positions, want_cache):
+    x = constrain(x, "dp", "tp" if cfg.sp else None, None)
+    a, kv = attn_block(p_attn, rms_norm(x, p_norms["ln1"], cfg.norm_eps),
+                       cfg, positions, want_cache)
+    x = x + a
+    m, aux = moe_apply(p_moe, rms_norm(x, p_norms["ln2"], cfg.norm_eps), cfg)
+    return x + m, kv, aux
+
+
+# --------------------------------------------------------------------------- #
+# Backbone forward (training / prefill)
+# --------------------------------------------------------------------------- #
+
+def _slice_norms(norms, i):
+    return {"ln1": norms["ln1"][i], "ln2": norms["ln2"][i]}
+
+
+def apply_backbone(params: Dict, cfg: ModelConfig, h: jnp.ndarray,
+                   positions: jnp.ndarray, want_cache: bool = False,
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """Run the layer stack. h: (B,S,D) embeddings (compute dtype).
+
+    Returns (hidden, aux_loss, cache|None). The cache layout matches
+    :func:`init_cache`.
+    """
+    if cfg.family == "ssm":
+        return _apply_rwkv(params, cfg, h, want_cache)
+    if cfg.family == "hybrid":
+        return _apply_zamba(params, cfg, h, positions, want_cache)
+    return _apply_attn_stack(params, cfg, h, positions, want_cache)
+
+
+def _apply_attn_stack(params, cfg, h, positions, want_cache):
+    blocks = params["blocks"]
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if not cfg.n_experts:
+        def layer(carry, p_l):
+            x = carry
+            x, kv = _dense_layer(p_l["norms"], p_l["attn"], p_l["mlp"],
+                                 x, cfg, positions, want_cache)
+            return x, kv
+        if cfg.remat == "full":
+            layer = jax.checkpoint(layer)
+        h, kvs = jax.lax.scan(layer, h, blocks)
+        cache = _stack_cache(kvs, cfg) if want_cache else None
+        return h, aux0, cache
+
+    period = cfg.moe_layer_period
+    G = cfg.n_layers // period
+
+    def regroup(tree, n_per_group):
+        return jax.tree.map(
+            lambda a: a.reshape(G, n_per_group, *a.shape[1:]), tree)
+
+    grouped = {
+        "norms": regroup(blocks["norms"], period),
+        "attn": regroup(blocks["attn"], period),
+        "moe": blocks["moe"],
+    }
+    if period > 1:
+        grouped["mlp"] = regroup(blocks["mlp"], period - 1)
+
+    def group(carry, p_g):
+        x = carry
+        kvs = []
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(period - 1):
+            x, kv = _dense_layer(
+                _slice_norms(p_g["norms"], i),
+                jax.tree.map(lambda a: a[i], p_g["attn"]),
+                jax.tree.map(lambda a: a[i], p_g["mlp"]),
+                x, cfg, positions, want_cache)
+            kvs.append(kv)
+        x, kv, a = _moe_layer(
+            _slice_norms(p_g["norms"], period - 1),
+            jax.tree.map(lambda a: a[period - 1], p_g["attn"]),
+            p_g["moe"], x, cfg, positions, want_cache)
+        kvs.append(kv)
+        aux = aux + a
+        if want_cache:
+            stacked = (jnp.stack([kv[0] for kv in kvs]),
+                       jnp.stack([kv[1] for kv in kvs]))
+        else:
+            stacked = None
+        return x, (stacked, aux)
+
+    if cfg.remat == "full":
+        group = jax.checkpoint(group)
+    h, (kvs, auxes) = jax.lax.scan(group, h, grouped)
+    aux = auxes.sum()
+    cache = None
+    if want_cache:
+        # kvs: (G, period, B, S, H, hd) → (L, B, S, H, hd)
+        k = kvs[0].reshape(-1, *kvs[0].shape[2:])
+        v = kvs[1].reshape(-1, *kvs[1].shape[2:])
+        cache = {"k": k, "v": v}
+    return h, aux, cache
+
+
+def _stack_cache(kvs, cfg):
+    if kvs is None:
+        return None
+    return {"k": kvs[0], "v": kvs[1]}
+
+
+def _apply_rwkv(params, cfg, h, want_cache):
+    B = h.shape[0]
+    states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        rwkv6.init_state(cfg, B))
+
+    def layer(carry, xs):
+        p_l, s_l = xs
+        x, s_new = rwkv6.rwkv_block(p_l, carry, cfg, s_l)
+        return x, s_new
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer)
+    h, states = jax.lax.scan(layer, h, (params["blocks"], states))
+    cache = {"rwkv": states} if want_cache else None
+    return h, jnp.zeros((), jnp.float32), cache
+
+
+def _apply_zamba(params, cfg, h, positions, want_cache):
+    B, S, D = h.shape
+    E = cfg.attn_every
+    G = cfg.n_layers // E
+    R = cfg.n_layers - G * E
+    mamba_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        mamba2.init_state(cfg, B))
+    head = jax.tree.map(lambda a: a[:G * E].reshape(G, E, *a.shape[1:]),
+                        params["mamba"])
+    head_states = jax.tree.map(
+        lambda a: a[:G * E].reshape(G, E, *a.shape[1:]), mamba_states)
+    shared = params["shared_attn"]
+
+    def inner(carry, xs):
+        p_l, s_l = xs
+        x, s_new = mamba2.mamba_block(p_l, carry, cfg, s_l)
+        return x, s_new
+
+    def group(carry, xs):
+        p_g, s_g = xs
+        x, s_new = jax.lax.scan(inner, carry, (p_g, s_g))
+        a, kv = attn_block(shared["attn"],
+                           rms_norm(x, shared["ln1"], cfg.norm_eps),
+                           cfg, positions, want_cache)
+        x = x + a
+        m = gated_mlp(shared["mlp"],
+                      rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+        x = x + m
+        return x, (s_new, kv)
+
+    g_fn = jax.checkpoint(group) if cfg.remat == "full" else group
+    h, (gs_states, kvs) = jax.lax.scan(g_fn, h, (head, head_states))
+
+    tail_states = None
+    if R:
+        tail = jax.tree.map(lambda a: a[G * E:], params["mamba"])
+        t_states = jax.tree.map(lambda a: a[G * E:], mamba_states)
+        in_fn = jax.checkpoint(inner) if cfg.remat == "full" else inner
+        h, tail_states = jax.lax.scan(in_fn, h, (tail, t_states))
+
+    cache = None
+    if want_cache:
+        mamba_cache = jax.tree.map(
+            lambda a: a.reshape(G * E, *a.shape[2:]), gs_states)
+        if R:
+            mamba_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                mamba_cache, tail_states)
+        cache = {"mamba": mamba_cache, "k": kvs[0], "v": kvs[1]}
+    return h, jnp.zeros((), jnp.float32), cache
+
+
+# --------------------------------------------------------------------------- #
+# Heads
+# --------------------------------------------------------------------------- #
+
+def embed_inputs(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray
+                 ) -> jnp.ndarray:
+    if cfg.embedding_inputs:
+        out = inputs.astype(COMPUTE_DTYPE)
+    else:
+        out = params["embed"][inputs].astype(COMPUTE_DTYPE)
+    return constrain(out, "dp", "tp" if cfg.sp else None, None)
+
+
+def logits_head(params: Dict, cfg: ModelConfig, h: jnp.ndarray
+                ) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Prefill / decode
+# --------------------------------------------------------------------------- #
+
+def prefill(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None):
+    """Returns (last-token logits (B, V), cache)."""
+    B, S = inputs.shape[:2]
+    if positions is None:
+        positions = default_positions(B, S, cfg)
+    h = embed_inputs(params, cfg, inputs)
+    h, _aux, cache = apply_backbone(params, cfg, h, positions,
+                                    want_cache=True)
+    logits = logits_head(params, cfg, h[:, -1:])[:, 0]
+    if cache is not None:
+        cache["length"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Decode cache ShapeDtype-compatible pytree (zeros)."""
+    hd = cfg.resolved_head_dim
+    Hkv_eff = cfg.n_kv_heads * cfg.kv_repeat
+    cache: Dict[str, Any] = {"length": jnp.asarray(0, jnp.int32)}
+    if cfg.family == "ssm":
+        cache["rwkv"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+            rwkv6.init_state(cfg, batch))
+        return cache
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        cache["mamba"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+            mamba2.init_state(cfg, batch))
+        cache["k"] = jnp.zeros((G, batch, max_len, Hkv_eff, hd),
+                               COMPUTE_DTYPE)
+        cache["v"] = jnp.zeros((G, batch, max_len, Hkv_eff, hd),
+                               COMPUTE_DTYPE)
+        return cache
+    cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv_eff, hd),
+                           COMPUTE_DTYPE)
+    cache["v"] = jnp.zeros((cfg.n_layers, batch, max_len, Hkv_eff, hd),
+                           COMPUTE_DTYPE)
+    return cache
+
+
+def decode(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+           cache: Dict, positions: Optional[jnp.ndarray] = None):
+    """One decode step. token: (B,1) ids or (B,1,D) embeddings.
+
+    Returns (logits (B, V), updated cache).
+    """
+    B = token.shape[0]
+    length = cache["length"]
+    if positions is None:
+        pos = jnp.broadcast_to(length[None], (B,))[:, None]  # (B,1)
+        if cfg.rope_variant == "mrope":
+            pos = jnp.broadcast_to(pos[:, None], (B, 3, 1))
+        positions = pos
+    h = embed_inputs(params, cfg, token)
+
+    if cfg.family == "ssm":
+        h, new_states = _decode_rwkv(params, cfg, h, cache["rwkv"])
+        new_cache = {"rwkv": new_states, "length": length + 1}
+    elif cfg.family == "hybrid":
+        h, new_cache = _decode_zamba(params, cfg, h, positions, cache)
+        new_cache["length"] = length + 1
+    else:
+        h, ks, vs = _decode_attn_stack(params, cfg, h, positions, cache)
+        new_cache = {"k": ks, "v": vs, "length": length + 1}
+    logits = logits_head(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
+def _decode_attn_stack(params, cfg, h, positions, cache):
+    blocks = params["blocks"]
+    length = cache["length"]
+
+    if not cfg.n_experts:
+        def layer(carry, xs):
+            p_l, kc, vc = xs
+            x = carry
+            a, kc, vc = attn_decode_block(
+                p_l["attn"], rms_norm(x, p_l["norms"]["ln1"], cfg.norm_eps),
+                cfg, positions, kc, vc, length)
+            x = x + a
+            m = gated_mlp(p_l["mlp"],
+                          rms_norm(x, p_l["norms"]["ln2"], cfg.norm_eps), cfg)
+            return x + m, (kc, vc)
+
+        if cfg.decode_unroll:
+            # §Perf iterations B1+B2: unrolled layers (no while-state copies
+            # of the stacked cache) writing each layer's updated slice back
+            # into the *donated* stack with dynamic_update_slice — XLA
+            # aliases the buffer, so decode touches only the cache slices.
+            ks, vs = cache["k"], cache["v"]
+            for i in range(cfg.n_layers):
+                p_l = jax.tree.map(lambda a: a[i], blocks)
+                h, (kc, vc) = layer(h, (p_l, ks[i], vs[i]))
+                ks = jax.lax.dynamic_update_slice_in_dim(
+                    ks, kc[None], i, axis=0)
+                vs = jax.lax.dynamic_update_slice_in_dim(
+                    vs, vc[None], i, axis=0)
+            return h, ks, vs
+        h, (ks, vs) = jax.lax.scan(layer, h,
+                                   (blocks, cache["k"], cache["v"]))
+        return h, ks, vs
+
+    period = cfg.moe_layer_period
+    G = cfg.n_layers // period
+
+    def regroup(tree, n):
+        return jax.tree.map(lambda a: a.reshape(G, n, *a.shape[1:]), tree)
+
+    grouped = {"norms": regroup(blocks["norms"], period),
+               "attn": regroup(blocks["attn"], period),
+               "moe": blocks["moe"]}
+    if period > 1:
+        grouped["mlp"] = regroup(blocks["mlp"], period - 1)
+    kc_g = cache["k"].reshape(G, period, *cache["k"].shape[1:])
+    vc_g = cache["v"].reshape(G, period, *cache["v"].shape[1:])
+
+    def group(carry, xs):
+        p_g, kcs, vcs = xs
+        x = carry
+        new_k, new_v = [], []
+        for i in range(period):
+            norms = _slice_norms(p_g["norms"], i)
+            attn_p = jax.tree.map(lambda a: a[i], p_g["attn"])
+            a, kc, vc = attn_decode_block(
+                attn_p, rms_norm(x, norms["ln1"], cfg.norm_eps),
+                cfg, positions, kcs[i], vcs[i], length)
+            x = x + a
+            h2 = rms_norm(x, norms["ln2"], cfg.norm_eps)
+            if i < period - 1:
+                mlp_p = jax.tree.map(lambda a: a[i], p_g["mlp"])
+                x = x + gated_mlp(mlp_p, h2, cfg)
+            else:
+                m, _aux = moe_apply(p_g["moe"], h2, cfg)
+                x = x + m
+            new_k.append(kc)
+            new_v.append(vc)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    if cfg.decode_unroll:
+        ks, vs = cache["k"], cache["v"]
+        for gi in range(G):
+            p_g = jax.tree.map(lambda a: a[gi], grouped)
+            h, (kg, vg) = group(h, (p_g, kc_g[gi], vc_g[gi]))
+            for j in range(period):
+                li = gi * period + j
+                ks = jax.lax.dynamic_update_slice_in_dim(
+                    ks, kg[j][None], li, axis=0)
+                vs = jax.lax.dynamic_update_slice_in_dim(
+                    vs, vg[j][None], li, axis=0)
+        return h, ks, vs
+    h, (ks, vs) = jax.lax.scan(group, h, (grouped, kc_g, vc_g))
+    ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+    vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+    return h, ks, vs
+
+
+def _decode_rwkv(params, cfg, h, states):
+    def layer(carry, xs):
+        p_l, s_l = xs
+        x = carry
+        hn = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        # single-token time-mix via the O(1) recurrence
+        B, _, D = x.shape
+        H = rwkv6.n_heads(cfg)
+        shifted = s_l["tm_shift"][:, None].astype(hn.dtype)
+        xw, xk, xv, xr, xg = rwkv6._time_mix_inputs(p_l, hn, shifted)
+        r = (xr @ p_l["wr"]).reshape(B, H, rwkv6.HEAD_N)
+        k = (xk @ p_l["wk"]).reshape(B, H, rwkv6.HEAD_N)
+        v = (xv @ p_l["wv"]).reshape(B, H, rwkv6.HEAD_N)
+        g = jax.nn.silu(xg @ p_l["wg"])
+        dd = (p_l["decay"].astype(jnp.float32)
+              + jnp.tanh(xw.astype(jnp.float32)
+                         @ p_l["decay_w1"].astype(jnp.float32))
+              @ p_l["decay_w2"].astype(jnp.float32))
+        w = jnp.exp(-jnp.exp(dd)).reshape(B, H, rwkv6.HEAD_N)
+        u = p_l["bonus"].astype(jnp.float32).reshape(H, rwkv6.HEAD_N)
+        o, wkv_new = rwkv6.wkv_decode(r, k, v, w, u, s_l["wkv"])
+        oh = o.reshape(B, 1, H, rwkv6.HEAD_N)
+        mu = oh.mean(-1, keepdims=True)
+        var = oh.var(-1, keepdims=True)
+        o = ((oh - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, 1, D)
+        o = o * p_l["ln_x"].astype(o.dtype) * g
+        x = x + o @ p_l["wo"]
+        h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        cm, cm_shift = rwkv6.channel_mix(p_l, h2, s_l["cm_shift"])
+        x = x + cm
+        s_new = {"tm_shift": hn[:, -1], "cm_shift": h2[:, -1],
+                 "wkv": wkv_new}
+        return x, s_new
+
+    if cfg.decode_unroll:
+        outs = []
+        for i in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["blocks"])
+            s_l = jax.tree.map(lambda a: a[i], states)
+            h, s_new = layer(h, (p_l, s_l))
+            outs.append(s_new)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return h, new_states
+    h, new_states = jax.lax.scan(layer, h, (params["blocks"], states))
+    return h, new_states
+
+
+def _decode_zamba(params, cfg, h, positions, cache):
+    E = cfg.attn_every
+    G = cfg.n_layers // E
+    R = cfg.n_layers - G * E
+    length = cache["length"]
+    shared = params["shared_attn"]
+    head = jax.tree.map(lambda a: a[:G * E].reshape(G, E, *a.shape[1:]),
+                        params["mamba"])
+    head_states = jax.tree.map(
+        lambda a: a[:G * E].reshape(G, E, *a.shape[1:]), cache["mamba"])
+
+    def inner(carry, xs):
+        p_l, s_l = xs
+        x, s_new = mamba2.mamba_decode(p_l, carry, cfg, s_l)
+        return x, s_new
+
+    def group(carry, xs):
+        p_g, s_g, kc, vc = xs
+        x, s_new = jax.lax.scan(inner, carry, (p_g, s_g))
+        a, kc, vc = attn_decode_block(
+            shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+            cfg, positions, kc, vc, length)
+        x = x + a
+        x = x + gated_mlp(shared["mlp"],
+                          rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+        return x, (s_new, kc, vc)
+
+    if cfg.decode_unroll:
+        gs_list = []
+        ks, vs = cache["k"], cache["v"]
+        for gi in range(G):
+            p_g = jax.tree.map(lambda a: a[gi], head)
+            s_g = jax.tree.map(lambda a: a[gi], head_states)
+            h, (s_new, kc, vc) = group(h, (p_g, s_g, ks[gi], vs[gi]))
+            gs_list.append(s_new)
+            ks = jax.lax.dynamic_update_slice_in_dim(
+                ks, kc[None], gi, axis=0)
+            vs = jax.lax.dynamic_update_slice_in_dim(
+                vs, vc[None], gi, axis=0)
+        gs = jax.tree.map(lambda *xs: jnp.stack(xs), *gs_list)
+    else:
+        h, (gs, ks, vs) = jax.lax.scan(group, h,
+                                       (head, head_states, cache["k"],
+                                        cache["v"]))
+    mamba_new = jax.tree.map(lambda a: a.reshape(G * E, *a.shape[2:]), gs)
+    if R:
+        tail = jax.tree.map(lambda a: a[G * E:], params["mamba"])
+        t_states = jax.tree.map(lambda a: a[G * E:], cache["mamba"])
+        if cfg.decode_unroll:
+            t_list = []
+            for i in range(R):
+                p_l = jax.tree.map(lambda a: a[i], tail)
+                s_l = jax.tree.map(lambda a: a[i], t_states)
+                h, s_new = inner(h, (p_l, s_l))
+                t_list.append(s_new)
+            t_new = jax.tree.map(lambda *xs: jnp.stack(xs), *t_list)
+        else:
+            h, t_new = jax.lax.scan(inner, h, (tail, t_states))
+        mamba_new = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), mamba_new, t_new)
+    return h, {"mamba": mamba_new, "k": ks, "v": vs}

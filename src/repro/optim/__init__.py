@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW, clipping, schedules, gradient compression."""
+
+from .adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                    clip_by_global_norm, warmup_cosine)
+from .compression import (compress_int8, decompress_int8,  # noqa: F401
+                          ef_compressed_mean)

@@ -1,0 +1,121 @@
+"""RTS interface: the contract EnTK assumes of its black-box runtime.
+
+The AppManager/ExecManager treat the RTS as opaque (paper §II-B.2): it is
+started with a resource description, accepts task submissions, reports
+completions through a callback, answers liveness probes, and can be torn down
+and replaced at any time. Everything an RTS learns or loses on failure is
+re-derivable from EnTK's side (submitted-task registry + journal), which is
+what makes whole-RTS restart safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from abc import ABC, abstractmethod
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.pst import Task
+
+
+@dataclasses.dataclass
+class ResourceDescription:
+    """What to acquire — the paper's pilot description.
+
+    ``slots`` generalizes cores: one slot is the unit a task's ``slots``
+    requirement counts against (a CPU worker locally, a device on a pod).
+    ``walltime`` and ``platform`` feed the SimulatedRTS queue model.
+    """
+
+    slots: int = 1
+    walltime: float = float("inf")
+    platform: str = "local"
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Pilot:
+    """An acquired resource placeholder."""
+
+    uid: str
+    description: ResourceDescription
+    started_at: float = 0.0
+    active: bool = True
+
+
+@dataclasses.dataclass
+class TaskCompletion:
+    """Completion event delivered by the RTS callback."""
+
+    uid: str
+    exit_code: int
+    result: Any = None
+    exception: Optional[str] = None
+    started_at: float = 0.0
+    completed_at: float = 0.0
+    staging_seconds: float = 0.0
+    execution_seconds: float = 0.0
+
+
+CompletionCallback = Callable[[TaskCompletion], None]
+
+
+class RTS(ABC):
+    """Abstract runtime system.
+
+    Submissions are asynchronous; completions arrive on the registered
+    callback from an RTS-internal thread. ``in_flight()`` must return the
+    uids the RTS currently owns — after a failure, EnTK resubmits exactly
+    that set ("loosing only those tasks that were in execution at the time
+    of the RTS failure").
+    """
+
+    def __init__(self) -> None:
+        self._callback: Optional[CompletionCallback] = None
+        self._cb_lock = threading.Lock()
+
+    # -- lifecycle ----------------------------------------------------------#
+
+    @abstractmethod
+    def start(self, resources: ResourceDescription) -> Pilot:
+        """Acquire resources (may block until the pilot is active)."""
+
+    @abstractmethod
+    def stop(self) -> None:
+        """Tear down; must purge any leftover workers (idempotent)."""
+
+    @abstractmethod
+    def alive(self) -> bool:
+        """Heartbeat probe. False/exception ⇒ EnTK declares RTS failure."""
+
+    # -- execution ------------------------------------------------------------#
+
+    @abstractmethod
+    def submit(self, tasks: List[Task]) -> None:
+        """Accept tasks for execution (non-blocking)."""
+
+    @abstractmethod
+    def cancel(self, uids: List[str]) -> None:
+        """Best-effort cancellation of submitted tasks."""
+
+    @abstractmethod
+    def in_flight(self) -> List[str]:
+        """Uids submitted but not yet reported complete."""
+
+    # -- elasticity (beyond paper: required for 1000+-node operation) ---------#
+
+    def resize(self, slots: int) -> None:  # pragma: no cover - optional
+        """Grow/shrink the pilot. Default: unsupported."""
+        raise NotImplementedError(f"{type(self).__name__} is not elastic")
+
+    # -- callback plumbing ------------------------------------------------------#
+
+    def set_callback(self, cb: Optional[CompletionCallback]) -> None:
+        with self._cb_lock:
+            self._callback = cb
+
+    def _deliver(self, completion: TaskCompletion) -> None:
+        with self._cb_lock:
+            cb = self._callback
+        if cb is not None:
+            cb(completion)

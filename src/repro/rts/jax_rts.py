@@ -1,0 +1,77 @@
+"""JaxRTS: executes JAX computations on device slots.
+
+A pilot on a TPU pod is a pool of devices; a task's ``slots`` requirement is
+the number of devices its jitted step needs. The JaxRTS extends the LocalRTS
+scheduler with a device inventory: when a task starts it is leased a concrete
+set of devices, delivered to the task callable through the ``devices=``
+keyword (if accepted) so the callable can build its mesh / place its arrays.
+
+On this CPU container the inventory is logical (``slot_oversubscribe``
+logical slots share the physical CPU device) — the accounting, leasing and
+isolation logic is identical to the pod case; only the device objects differ.
+"""
+
+from __future__ import annotations
+
+import inspect
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.pst import Task
+from .base import Pilot, ResourceDescription
+from .local import LocalRTS
+
+
+class JaxRTS(LocalRTS):
+    def __init__(self, devices: Optional[Sequence[Any]] = None,
+                 slot_oversubscribe: int = 1, **kwargs: Any) -> None:
+        super().__init__(**kwargs)
+        if devices is None:
+            import jax  # deferred: never force jax init at import time
+            devices = jax.devices()
+        self._devices = list(devices)
+        self._oversubscribe = max(1, slot_oversubscribe)
+        self._pool: List[int] = []
+        self._leases: Dict[str, List[int]] = {}
+        self._pool_lock = threading.Lock()
+
+    def start(self, resources: ResourceDescription) -> Pilot:
+        n_logical = len(self._devices) * self._oversubscribe
+        if resources.slots > n_logical:
+            resources.slots = n_logical  # clamp to inventory
+        with self._pool_lock:
+            self._pool = list(range(n_logical))
+            self._leases = {}
+        return super().start(resources)
+
+    def _lease(self, task: Task) -> List[Any]:
+        with self._pool_lock:
+            ids = [self._pool.pop() for _ in range(min(task.slots,
+                                                       len(self._pool)))]
+            self._leases[task.uid] = ids
+        return [self._devices[i % len(self._devices)] for i in ids]
+
+    def _unlease(self, task: Task) -> None:
+        with self._pool_lock:
+            self._pool.extend(self._leases.pop(task.uid, []))
+
+    def _execute(self, task: Task, cancel_event: threading.Event,
+                 stall: float):
+        devices = self._lease(task)
+        try:
+            fn = None
+            try:
+                fn = task.resolve()
+            except Exception:  # noqa: BLE001 - sleep:// tasks have no callable
+                pass
+            if fn is not None:
+                try:
+                    sig = inspect.signature(fn)
+                    if "devices" in sig.parameters:
+                        task.kwargs = dict(task.kwargs)
+                        task.kwargs["devices"] = devices
+                except (TypeError, ValueError):
+                    pass
+            return super()._execute(task, cancel_event, stall)
+        finally:
+            self._unlease(task)

@@ -1,0 +1,87 @@
+"""Per-CI platform profiles for the SimulatedRTS.
+
+The paper runs on four computing infrastructures (XSEDE SuperMIC, Stampede,
+Comet; ORNL Titan) and attributes overhead differences to host CPU/memory
+speed, filesystem performance and RTS bootstrap cost (§IV-A). A profile
+captures those knobs so Experiment 3 (overhead vs CI) is reproducible as a
+parameter sweep. Values are calibrated to the magnitudes reported in Fig. 7:
+EnTK setup ≈0.1 s (0.05 s on Titan's faster login nodes), management ≈10 s
+(≈3 s on Titan), RTS overhead seconds-to-80 s depending on platform and task
+count, staging throughput set by the shared filesystem.
+
+The ``tpu_pod`` profiles extend the table to the hardware this framework
+actually targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformProfile:
+    name: str
+    # multiplier on EnTK-side per-message processing cost (host CPU speed)
+    host_speed: float
+    # RTS bootstrap (pilot becomes active) in seconds
+    rts_bootstrap: float
+    # per-task RTS submission latency (scheduler + environment setup), seconds
+    task_submit_latency: float
+    # per-task RTS completion-collection latency, seconds
+    task_collect_latency: float
+    # shared-filesystem staging throughput, bytes/second
+    staging_bandwidth: float
+    # per-file staging latency (metadata ops), seconds
+    staging_latency: float
+    # steady-state task failure probability (CI flakiness)
+    failure_rate: float = 0.0
+    # RTS teardown, seconds
+    rts_teardown: float = 3.0
+    # per-task environment-setup time *inside* the task wallclock; reproduces
+    # the paper's observation that 1 s tasks run ≈5 s under RP while ≥10 s
+    # tasks run at their nominal duration (Fig. 7b)
+    executor_overhead: float = 0.0
+
+
+PLATFORMS: Dict[str, PlatformProfile] = {
+    # paper CIs (calibrated to Fig. 7 magnitudes)
+    "supermic": PlatformProfile("supermic", host_speed=1.0, rts_bootstrap=2.0,
+                                task_submit_latency=0.25,
+                                task_collect_latency=0.05,
+                                staging_bandwidth=200e6, staging_latency=0.02,
+                                rts_teardown=20.0, executor_overhead=3.5),
+    "stampede": PlatformProfile("stampede", host_speed=1.0, rts_bootstrap=2.5,
+                                task_submit_latency=0.30,
+                                task_collect_latency=0.06,
+                                staging_bandwidth=150e6, staging_latency=0.02,
+                                rts_teardown=30.0, executor_overhead=4.0),
+    "comet": PlatformProfile("comet", host_speed=1.0, rts_bootstrap=2.0,
+                             task_submit_latency=0.28,
+                             task_collect_latency=0.05,
+                             staging_bandwidth=180e6, staging_latency=0.02,
+                             rts_teardown=25.0, executor_overhead=3.0),
+    "titan": PlatformProfile("titan", host_speed=3.0, rts_bootstrap=4.0,
+                             task_submit_latency=0.20,
+                             task_collect_latency=0.04,
+                             staging_bandwidth=400e6, staging_latency=0.015,
+                             failure_rate=0.0, rts_teardown=80.0,
+                             executor_overhead=2.0),
+    # target hardware for this framework
+    "tpu_v5e_pod": PlatformProfile("tpu_v5e_pod", host_speed=4.0,
+                                   rts_bootstrap=30.0,
+                                   task_submit_latency=0.01,
+                                   task_collect_latency=0.01,
+                                   staging_bandwidth=2e9,
+                                   staging_latency=0.005,
+                                   rts_teardown=5.0),
+    "local": PlatformProfile("local", host_speed=1.0, rts_bootstrap=0.0,
+                             task_submit_latency=0.0,
+                             task_collect_latency=0.0,
+                             staging_bandwidth=1e9, staging_latency=0.0,
+                             rts_teardown=0.0),
+}
+
+
+def get_platform(name: str) -> PlatformProfile:
+    return PLATFORMS[name]

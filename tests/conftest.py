@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+# Tests must see the real single CPU device; only the dry-run (separate
+# process) forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

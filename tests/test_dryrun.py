@@ -1,0 +1,63 @@
+"""Dry-run smoke: one real cell lowered+compiled on the production meshes.
+
+Runs in a subprocess because the dry-run forces 512 host devices before JAX
+init (the test process must keep its single device). The full 40-cell sweep
+is executed by ``python -m repro.launch.dryrun`` (see EXPERIMENTS.md); this
+test pins the machinery: mesh construction, sharding specs, lowering,
+compilation, memory/cost analysis and the roofline extraction.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, mode, out):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--multi-pod", mode, "--out", out,
+         "--stop-on-error"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_single_and_multi_pod(tmp_path):
+    out = str(tmp_path / "dry.jsonl")
+    r = _run_cell("chatglm3-6b", "decode_32k", "both", out)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rows = [json.loads(l) for l in open(out) if l.strip()]
+    assert len(rows) == 2
+    for row in rows:
+        assert row["ok"], row
+        assert row["per_device"]["flops"] > 0
+        assert row["memory"]["peak_bytes_per_device"] < 16 * 2 ** 30
+        assert row["roofline"]["dominant"] in ("compute", "memory",
+                                               "collective")
+    single = next(r for r in rows if not r["multi_pod"])
+    multi = next(r for r in rows if r["multi_pod"])
+    assert single["n_devices"] == 256 and multi["n_devices"] == 512
+    # the pod axis shards the batch: per-device flops must not grow
+    assert (multi["per_device"]["flops"]
+            <= single["per_device"]["flops"] * 1.1)
+
+
+@pytest.mark.slow
+def test_dryrun_skips_long_context_for_full_attention(tmp_path):
+    out = str(tmp_path / "dry2.jsonl")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "stablelm-12b", "--shape", "long_500k", "--multi-pod", "single",
+         "--out", out],
+        capture_output=True, text=True, timeout=300, env=env, cwd=ROOT)
+    assert r.returncode == 0
+    rows = [json.loads(l) for l in open(out) if l.strip()]
+    assert rows[0]["ok"] is None and "sub-quadratic" in rows[0]["skipped"]

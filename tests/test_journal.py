@@ -1,0 +1,86 @@
+"""Write-ahead journal: replay, torn writes, retries accounting."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exceptions import JournalCorruption
+from repro.core.journal import Journal
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "SCHEDULING")
+    j.transition("task", "task.0000", "t0", "SCHEDULING", "DONE")
+    j.session("end")
+    j.close()
+    rep = Journal.replay(path)
+    assert rep["state"][("task", "t0")] == "DONE"
+    assert rep["records"] == 3
+
+
+def test_torn_final_write_tolerated(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "DONE")
+    j.close()
+    with open(path, "a") as fh:
+        fh.write('{"rec": "transition", "kind": "task", "uid": "tr')  # torn
+    rep = Journal.replay(path)
+    assert rep["state"][("task", "t0")] == "DONE"
+
+
+def test_mid_file_corruption_raises(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with open(path, "w") as fh:
+        fh.write("not json at all\n")
+        fh.write(json.dumps({"rec": "session", "event": "end"}) + "\n")
+    with pytest.raises(JournalCorruption):
+        Journal.replay(path)
+
+
+def test_retries_counted(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    for _ in range(3):
+        j.transition("task", "task.0000", "t0", "SUBMITTED", "FAILED")
+        j.transition("task", "task.0000", "t0", "FAILED", "SCHEDULING")
+    j.close()
+    rep = Journal.replay(path)
+    assert rep["retries"]["t0"] == 3
+
+
+def test_missing_file_is_empty():
+    rep = Journal.replay("/nonexistent/journal.jsonl")
+    assert rep["records"] == 0 and rep["state"] == {}
+
+
+def test_none_path_journal_is_noop():
+    j = Journal(None)
+    j.transition("task", "u", "n", "A", "B")  # must not raise
+    j.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["t0", "t1", "t2"]),
+              st.sampled_from(["SCHEDULING", "DONE", "FAILED"])),
+    min_size=1, max_size=30))
+def test_property_replay_reflects_last_transition(tmp_path_factory, seq):
+    """Replay state == last write per name, regardless of interleaving."""
+    path = str(tmp_path_factory.mktemp("j") / "j.jsonl")
+    j = Journal(path, flush_every=4)
+    last = {}
+    for i, (name, to) in enumerate(seq):
+        j.transition("task", f"task.{i:04d}", name, "X", to)
+        last[name] = to
+    j.close()
+    rep = Journal.replay(path)
+    for name, to in last.items():
+        assert rep["state"][("task", name)] == to
+    # replay is idempotent
+    rep2 = Journal.replay(path)
+    assert rep2["state"] == rep["state"]

@@ -1,0 +1,104 @@
+"""MoE routing/dispatch invariants (+ hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.models.moe import capacity, init_moe, moe_apply, _route
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(E=4, K=2, D=32, F=64, shared=False, cf=1.25):
+    return ModelConfig(
+        name="moe-test", family="moe", n_layers=1, d_model=D, n_heads=4,
+        n_kv_heads=2, d_ff=F, vocab_size=64, n_experts=E,
+        experts_per_token=K, moe_shared_expert=shared, capacity_factor=cf)
+
+
+def test_output_shape_and_finite():
+    cfg = _cfg()
+    p = init_moe(KEY, cfg, 0, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_gates_normalized():
+    cfg = _cfg(E=8, K=3)
+    x2d = jax.random.normal(KEY, (16, cfg.d_model))
+    p = init_moe(KEY, cfg, 0, jnp.float32)
+    gates, experts, _ = _route(x2d, p["router"], cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-3)
+    assert int(experts.max()) < 8 and int(experts.min()) >= 0
+
+
+def test_no_drop_at_high_capacity_equals_dense_mixture():
+    """With capacity ≫ tokens, MoE output == explicit per-token mixture."""
+    cfg = _cfg(E=4, K=2, cf=32.0)
+    p = init_moe(KEY, cfg, 0, jnp.float32)
+    x = jax.random.normal(KEY, (1, 6, cfg.d_model))
+    out, _ = moe_apply(p, x, cfg)
+
+    x2d = x.reshape(-1, cfg.d_model)
+    gates, experts, _ = _route(x2d, p["router"], cfg)
+
+    def expert_ffn(e, t):
+        h = (jax.nn.silu(x2d[t] @ p["wg"][e]) * (x2d[t] @ p["wu"][e]))
+        return h @ p["wd"][e]
+
+    expect = np.zeros_like(np.asarray(x2d))
+    for t in range(x2d.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = int(experts[t, j])
+            expect[t] += float(gates[t, j]) * np.asarray(expert_ffn(e, t))
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               expect, atol=2e-4, rtol=2e-4)
+
+
+def test_capacity_drops_bounded():
+    """With tiny capacity the layer still runs; dropped tokens get only the
+    shared-expert/zero contribution (no NaN, no crash)."""
+    cfg = _cfg(E=2, K=1, cf=0.01)
+    p = init_moe(KEY, cfg, 0, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    out, _ = moe_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_shared_expert_added():
+    cfg_n = _cfg(shared=False, cf=32.0)
+    cfg_s = _cfg(shared=True, cf=32.0)
+    p = init_moe(KEY, cfg_s, 0, jnp.float32)
+    x = jax.random.normal(KEY, (1, 4, cfg_s.d_model))
+    out_s, _ = moe_apply(p, x, cfg_s)
+    p_n = {k: v for k, v in p.items() if k != "shared"}
+    out_n, _ = moe_apply(p_n, x, cfg_n)
+    assert float(jnp.abs(out_s - out_n).max()) > 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(4, 32))
+def test_property_moe_finite_over_shapes(E, K, T):
+    K = min(K, E)
+    cfg = _cfg(E=E, K=K)
+    p = init_moe(jax.random.PRNGKey(E * 100 + K), cfg, 0, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(T), (1, T, cfg.d_model))
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 4))
+def test_property_capacity_monotone(T, K):
+    cfg1 = _cfg(E=4, K=min(K, 4), cf=1.0)
+    cfg2 = _cfg(E=4, K=min(K, 4), cf=2.0)
+    assert capacity(T, cfg2) >= capacity(T, cfg1)
+    assert capacity(T, cfg1) % 8 == 0

@@ -1,0 +1,141 @@
+"""RTS layer: slot accounting, cancellation, simulation properties."""
+
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pst import Task
+from repro.rts.base import ResourceDescription, TaskCompletion
+from repro.rts.local import LocalRTS
+from repro.rts.simulated import SimulatedRTS
+
+
+def _collect(rts):
+    done = []
+    ev = threading.Event()
+
+    def cb(c: TaskCompletion):
+        done.append(c)
+        ev.set()
+
+    rts.set_callback(cb)
+    return done, ev
+
+
+def test_local_capacity_never_exceeded():
+    rts = LocalRTS()
+    rts.start(ResourceDescription(slots=2))
+    peak = [0]
+    lock = threading.Lock()
+    running = [0]
+
+    def probe():
+        while rts.alive() and running[0] >= 0:
+            with lock:
+                n = len(rts._running)
+                peak[0] = max(peak[0], n)
+            time.sleep(0.002)
+
+    t = threading.Thread(target=probe, daemon=True)
+    t.start()
+    done, _ = _collect(rts)
+    tasks = [Task(name=f"c{i}", executable="sleep://0.05") for i in range(8)]
+    rts.submit(tasks)
+    deadline = time.monotonic() + 10
+    while len(done) < 8 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    running[0] = -1
+    rts.stop()
+    assert len(done) == 8
+    assert peak[0] <= 2
+
+
+def test_local_multislot_task_accounting():
+    rts = LocalRTS()
+    rts.start(ResourceDescription(slots=3))
+    done, _ = _collect(rts)
+    big = Task(name="big", executable="sleep://0.1", slots=3)
+    small = [Task(name=f"s{i}", executable="sleep://0.05") for i in range(2)]
+    rts.submit([big] + small)
+    deadline = time.monotonic() + 10
+    while len(done) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    rts.stop()
+    assert len(done) == 3
+
+
+def test_local_cancel_queued_and_running():
+    rts = LocalRTS()
+    rts.start(ResourceDescription(slots=1))
+    done, _ = _collect(rts)
+    t1 = Task(name="run", executable="sleep://5")
+    t2 = Task(name="queued", executable="sleep://5")
+    rts.submit([t1, t2])
+    time.sleep(0.1)
+    rts.cancel([t1.uid, t2.uid])
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline and not done:
+        time.sleep(0.02)
+    rts.stop()
+    # the running task reports canceled (-2); the queued one is dropped
+    assert any(c.exit_code == -2 for c in done)
+
+
+def test_local_failed_callable_reports_exception():
+    rts = LocalRTS()
+    rts.start(ResourceDescription(slots=1))
+    done, ev = _collect(rts)
+
+    def boom():
+        raise ValueError("kaboom")
+
+    rts.submit([Task(name="boom", executable=boom)])
+    ev.wait(5)
+    rts.stop()
+    assert done[0].exit_code == 1
+    assert "kaboom" in done[0].exception
+
+
+def test_simulated_makespan_math():
+    """600 s tasks, 2× oversubscription ⇒ two generations ≈ 2×(600+ovh)."""
+    rts = SimulatedRTS(seed=0)
+    rts.start(ResourceDescription(slots=4, platform="titan"))
+    done = []
+    rts.set_callback(done.append)
+    rts.submit([Task(name=f"g{i}", executable="sleep://600")
+                for i in range(8)])
+    assert rts.drain(20)
+    rts.stop()
+    assert len(done) == 8
+    assert 1200 <= rts.vnow <= 1300
+
+
+def test_simulated_fail_first_n():
+    rts = SimulatedRTS(seed=0)
+    rts.start(ResourceDescription(slots=1, platform="local"))
+    done = []
+    rts.set_callback(done.append)
+    t = Task(name="flaky", executable="sleep://1",
+             tags={"fail_first_n": 2})
+    rts.submit([t])
+    rts.drain(10)
+    assert done and done[0].exit_code == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12))
+def test_property_simulated_completes_everything(slots, n_tasks):
+    rts = SimulatedRTS(seed=42)
+    rts.start(ResourceDescription(slots=slots, platform="local"))
+    done = []
+    rts.set_callback(done.append)
+    rts.submit([Task(name=f"p{i}", executable="sleep://5")
+                for i in range(n_tasks)])
+    assert rts.drain(30)
+    rts.stop()
+    assert len(done) == n_tasks
+    assert all(c.exit_code == 0 for c in done)
+    # makespan ≥ serial lower bound / slots
+    assert rts.virtual_makespan >= 5 * (n_tasks / slots) * 0.9

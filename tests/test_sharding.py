@@ -1,0 +1,115 @@
+"""Sharding rules: divisibility guards and spec structure (stub meshes)."""
+
+from types import SimpleNamespace
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as shd
+from repro.models import transformer
+from repro.models.config import SHAPES, get_config
+
+
+def _mesh(shape_dict):
+    return SimpleNamespace(shape=shape_dict,
+                           axis_names=tuple(shape_dict.keys()))
+
+
+POD = _mesh({"data": 16, "model": 16})
+MULTI = _mesh({"pod": 2, "data": 16, "model": 16})
+SINGLE = _mesh({"data": 1, "model": 1})
+
+
+def _leaves_with_specs(cfg, mesh):
+    tree = transformer.abstract_params(cfg)
+    specs = shd.param_specs(cfg, mesh)
+    flat_t = jax.tree_util.tree_leaves_with_path(tree)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_t) == len(flat_s)
+    return [(p, leaf, spec) for (p, leaf), spec in zip(flat_t, flat_s)]
+
+
+def test_every_sharded_dim_is_divisible_all_archs():
+    from repro.models.config import list_archs
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for mesh in (POD, MULTI):
+            for path, leaf, spec in _leaves_with_specs(cfg, mesh):
+                assert len(spec) <= len(leaf.shape), (arch, path)
+                for dim, ax in zip(leaf.shape, tuple(spec)):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    size = 1
+                    for a in axes:
+                        size *= mesh.shape[a]
+                    assert dim % size == 0, (arch, path, dim, ax)
+
+
+def test_single_device_mesh_all_replicated():
+    cfg = get_config("stablelm-12b")
+    for _, _, spec in _leaves_with_specs(cfg, SINGLE):
+        assert all(ax is None for ax in tuple(spec))
+
+
+def test_attention_replicated_when_heads_indivisible():
+    cfg = get_config("qwen2-vl-2b")  # 12 heads vs model=16
+    for path, leaf, spec in _leaves_with_specs(cfg, POD):
+        keys = [getattr(p, "key", None) for p in path]
+        if "attn" in keys and keys[-1] == "wq":
+            assert tuple(spec)[-1] is None  # replicated over TP
+
+
+def test_experts_sharded_on_model():
+    cfg = get_config("dbrx-132b")
+    found = False
+    for path, leaf, spec in _leaves_with_specs(cfg, POD):
+        keys = [getattr(p, "key", None) for p in path]
+        if "moe" in keys and keys[-1] == "wg" and "shared" not in keys:
+            assert tuple(spec)[1] == "model"  # expert dim
+            found = True
+    assert found
+
+
+def test_kv_repeat_selection():
+    assert shd.kv_repeat_for(get_config("dbrx-132b"), POD) == 2   # kv 8→16
+    assert shd.kv_repeat_for(get_config("chatglm3-6b"), POD) == 8  # kv 2→16
+    assert shd.kv_repeat_for(get_config("zamba2-7b"), POD) == 1   # kv 32
+    assert shd.kv_repeat_for(get_config("qwen2-vl-2b"), POD) == 1  # repl.
+    assert shd.kv_repeat_for(get_config("stablelm-12b"), SINGLE) == 1
+
+
+def test_batch_specs_shard_batch_when_divisible():
+    cfg = get_config("stablelm-12b")
+    sp = shd.batch_pspecs(cfg, SHAPES["train_4k"], POD)
+    assert tuple(sp["inputs"])[0] == "data"
+    # long_500k decode: batch 1 cannot shard
+    sp2 = shd.token_pspec(cfg, SHAPES["long_500k"], POD)
+    assert tuple(sp2)[0] is None
+
+
+def test_cache_specs_seq_sharded_for_batch1():
+    cfg = get_config("zamba2-7b").replace(
+        kv_repeat=shd.kv_repeat_for(get_config("zamba2-7b"), POD))
+    specs = shd.cache_pspecs(cfg, SHAPES["long_500k"], POD)
+    k_spec = tuple(specs["k"])
+    assert k_spec[1] is None        # batch 1: unsharded
+    assert k_spec[2] == "data"      # sequence sharded instead
+    assert k_spec[3] == "model"     # heads (32) sharded
+
+    # decode_32k (batch 128): batch sharded, seq unsharded
+    specs2 = shd.cache_pspecs(cfg, SHAPES["decode_32k"], POD)
+    k2 = tuple(specs2["k"])
+    assert k2[1] == "data" and k2[2] is None
+
+
+def test_opt_state_specs_mirror_params():
+    cfg = get_config("minitron-4b")
+    ts = shd.train_state_specs(cfg, POD)
+    flat_p = jax.tree_util.tree_leaves(
+        ts["params"], is_leaf=lambda x: isinstance(x, P))
+    flat_m = jax.tree_util.tree_leaves(
+        ts["opt"]["m"], is_leaf=lambda x: isinstance(x, P))
+    assert flat_p == flat_m
+    assert ts["opt"]["step"] == P()

@@ -1,0 +1,95 @@
+"""State-machine unit + property tests."""
+
+import pytest
+from hypothesis import given, strategies as st_
+
+from repro.core import states as st
+from repro.core.exceptions import StateTransitionError
+from repro.core.pst import Pipeline, Stage, Task
+
+
+def test_task_happy_path():
+    t = Task(executable="sleep://0")
+    for s in (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING, st.SUBMITTED,
+              st.EXECUTED, st.DONE):
+        t.advance(s)
+    assert t.is_final
+
+
+def test_task_resubmission_path():
+    t = Task(executable="sleep://0")
+    for s in (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING, st.SUBMITTED,
+              st.FAILED, st.SCHEDULING, st.SCHEDULED):
+        t.advance(s)
+    assert t.state == st.SCHEDULED
+
+
+def test_illegal_transition_raises():
+    t = Task(executable="sleep://0")
+    with pytest.raises(StateTransitionError):
+        t.advance(st.DONE)  # DESCRIBED -> DONE is illegal
+
+
+def test_done_is_terminal():
+    t = Task(executable="sleep://0")
+    for s in (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING, st.SUBMITTED,
+              st.EXECUTED, st.DONE):
+        t.advance(s)
+    with pytest.raises(StateTransitionError):
+        t.advance(st.SCHEDULING)
+
+
+@given(st_.lists(st_.sampled_from(st.TASK_STATES), min_size=1, max_size=12))
+def test_property_no_sequence_escapes_tables(seq):
+    """Random walks either follow the table or raise — never corrupt."""
+    t = Task(executable="sleep://0")
+    for target in seq:
+        legal = st.legal_next("task", t.state)
+        if target in legal:
+            t.advance(target)
+            assert t.state == target
+        else:
+            before = t.state
+            with pytest.raises(StateTransitionError):
+                t.advance(target)
+            assert t.state == before  # unchanged on failure
+
+
+@given(st_.sampled_from(st.TASK_STATES))
+def test_property_final_states_have_no_successors_except_failed(s):
+    succ = st.legal_next("task", s)
+    if s in (st.DONE, st.CANCELED):
+        assert succ == ()
+    if s == st.FAILED:
+        assert succ == (st.SCHEDULING,)  # only resubmission
+
+
+def test_pipeline_cursor_semantics():
+    p = Pipeline()
+    s1, s2 = Stage(), Stage()
+    s1.add_tasks(Task(executable="sleep://0"))
+    s2.add_tasks(Task(executable="sleep://0"))
+    p.add_stages([s1, s2])
+    assert p.next_stage() is s1
+    s1.advance(st.STAGE_SCHEDULING)
+    assert p.next_stage() is None  # in flight
+    s1.advance(st.STAGE_SCHEDULED)
+    s1.advance(st.STAGE_DONE)
+    p.mark_stage_final(s1.uid)
+    assert p.next_stage() is s2
+    assert not p.completed
+
+
+def test_stage_requires_tasks_type():
+    s = Stage()
+    with pytest.raises(Exception):
+        s.add_tasks(["not-a-task"])
+
+
+def test_task_serialization_roundtrip():
+    t = Task(name="x", executable="sleep://5", args=[1], kwargs={"a": 2},
+             slots=3, max_retries=2, tags={"k": "v"})
+    t2 = Task.from_dict(t.to_dict())
+    assert (t2.uid, t2.name, t2.executable, t2.slots, t2.max_retries) == \
+        (t.uid, "x", "sleep://5", 3, 2)
+    assert t2.kwargs == {"a": 2} and t2.tags == {"k": "v"}

@@ -1,0 +1,257 @@
+"""End-to-end behaviour tests for the toolkit (the paper's contracts)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.core import states as st
+from repro.rts.base import ResourceDescription
+from repro.rts.local import LocalRTS
+from repro.rts.simulated import SimulatedRTS
+
+
+def _workflow(pipelines=1, stages=2, tasks=3, duration=0.01, retries=0,
+              prefix="t"):
+    out = []
+    for p in range(pipelines):
+        pipe = Pipeline(f"{prefix}-pipe{p}")
+        for s in range(stages):
+            stg = Stage(f"{prefix}-p{p}s{s}")
+            stg.add_tasks([
+                Task(name=f"{prefix}-{p}-{s}-{t}",
+                     executable=f"sleep://{duration}", max_retries=retries)
+                for t in range(tasks)])
+            pipe.add_stages(stg)
+        out.append(pipe)
+    return out
+
+
+def test_basic_execution_all_done():
+    amgr = AppManager(resources=ResourceDescription(slots=4))
+    amgr.workflow = _workflow(2, 2, 3, prefix="basic")
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    # every pipeline reached DONE
+    assert all(p.state == st.PIPELINE_DONE for p in amgr.workflow)
+
+
+def test_stage_ordering_within_pipeline():
+    """PST semantics: no task of stage i+1 may start before stage i ends."""
+    events = []
+    lock = threading.Lock()
+
+    def fi(task):
+        with lock:
+            events.append((task.name, time.monotonic()))
+        return False
+
+    amgr = AppManager(resources=ResourceDescription(slots=8),
+                      rts_factory=lambda: LocalRTS(fault_injector=fi))
+    amgr.workflow = _workflow(1, 3, 2, prefix="order")
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    by_stage = {}
+    for name, t in events:
+        stage = name.split("-")[2]
+        by_stage.setdefault(stage, []).append(t)
+    assert max(by_stage["0"]) <= min(by_stage["1"])
+    assert max(by_stage["1"]) <= min(by_stage["2"])
+
+
+def test_failed_task_resubmitted_until_budget():
+    attempts = {}
+
+    def fi(task):
+        attempts[task.name] = attempts.get(task.name, 0) + 1
+        return attempts[task.name] <= 2  # fail twice, succeed third
+
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      rts_factory=lambda: LocalRTS(fault_injector=fi))
+    amgr.workflow = _workflow(1, 1, 2, retries=3, prefix="retry")
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert all(v == 3 for v in attempts.values())
+
+
+def test_failure_beyond_budget_is_final_and_stage_continues():
+    def fi(task):
+        return task.name.endswith("-0")  # first task always fails
+
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      rts_factory=lambda: LocalRTS(fault_injector=fi))
+    amgr.workflow = _workflow(1, 1, 3, retries=1, prefix="fail")
+    amgr.run(timeout=60)
+    states = [t.state for p in amgr.workflow for s in p.stages
+              for t in s.tasks]
+    assert states.count(st.FAILED) == 1
+    assert states.count(st.DONE) == 2
+    assert amgr.workflow[0].state == st.PIPELINE_DONE  # continue policy
+
+
+def test_rts_failure_restart_and_resubmit():
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      heartbeat_interval=0.1)
+    amgr.workflow = _workflow(1, 1, 6, duration=0.3, prefix="rtsfail")
+
+    def kill():
+        time.sleep(0.35)
+        amgr.emgr.rts.simulate_dead = True
+
+    threading.Thread(target=kill, daemon=True).start()
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert amgr.emgr.rts_restarts == 1
+
+
+def test_rts_restart_budget_exhaustion_raises():
+    amgr = AppManager(resources=ResourceDescription(slots=1),
+                      heartbeat_interval=0.05, max_rts_restarts=1)
+    amgr.workflow = _workflow(1, 1, 2, duration=5.0, prefix="budget")
+
+    def keep_killing():
+        while not amgr._stop.is_set():
+            if amgr.emgr is not None and amgr.emgr.rts is not None:
+                amgr.emgr.rts.simulate_dead = True
+            time.sleep(0.05)
+
+    threading.Thread(target=keep_killing, daemon=True).start()
+    with pytest.raises(Exception):
+        amgr.run(timeout=20)
+
+
+def test_journal_resume_skips_done(tmp_path):
+    jp = str(tmp_path / "wal.jsonl")
+
+    def build(prefix):
+        pipe = Pipeline("resume")
+        s1, s2 = Stage(), Stage()
+        s1.add_tasks([Task(name=f"a{i}", executable="sleep://0.01")
+                      for i in range(2)])
+        s2.add_tasks([Task(name=f"b{i}", executable="sleep://0.01")
+                      for i in range(2)])
+        pipe.add_stages([s1, s2])
+        return [pipe]
+
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      journal_path=jp, flush_every=1,
+                      rts_factory=lambda: LocalRTS(
+                          fault_injector=lambda t: t.name.startswith("b")))
+    amgr.workflow = build("one")
+    amgr.run(timeout=60)
+    assert amgr.states_of(["a0"])["a0"] == st.DONE
+    assert amgr.states_of(["b0"])["b0"] == st.FAILED
+
+    ran = []
+    amgr2 = AppManager(resources=ResourceDescription(slots=2),
+                       journal_path=jp, flush_every=1,
+                       rts_factory=lambda: LocalRTS(
+                           fault_injector=lambda t: ran.append(t.name)
+                           and False))
+    amgr2.workflow = build("two")
+    amgr2.run(resume=True, timeout=60)
+    assert amgr2.all_done
+    assert all(n.startswith("b") for n in ran)  # a* never re-executed
+
+
+def test_straggler_speculation_wins():
+    def stall(task):
+        return 10.0 if task.name.endswith("slow") else 0.0
+
+    amgr = AppManager(resources=ResourceDescription(slots=4),
+                      straggler_factor=3.0, heartbeat_interval=0.1,
+                      rts_factory=lambda: LocalRTS(
+                          straggler_injector=stall))
+    pipe = Pipeline()
+    stg = Stage()
+    stg.add_tasks([Task(name="spec-slow", executable="sleep://0.05",
+                        duration_hint=0.05),
+                   Task(name="spec-fast", executable="sleep://0.05",
+                        duration_hint=0.05)])
+    pipe.add_stages(stg)
+    amgr.workflow = [pipe]
+    t0 = time.monotonic()
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    assert time.monotonic() - t0 < 8.0  # speculation beat the 10 s stall
+    assert amgr.emgr.speculation_wins >= 1
+
+
+def test_component_crash_restart():
+    """A dying Dequeue thread is restarted and the workflow completes."""
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      heartbeat_interval=0.1)
+    amgr.workflow = _workflow(1, 2, 3, duration=0.1, prefix="crash")
+    fired = []
+
+    def crash_once():
+        if not fired:
+            fired.append(1)
+            raise RuntimeError("injected dequeue crash")
+
+    # arm the crash after setup by deferring via a thread
+    def arm():
+        while amgr.wfp is None:
+            time.sleep(0.01)
+        amgr.wfp.dequeue_crash_hook = crash_once
+
+    threading.Thread(target=arm, daemon=True).start()
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert amgr.component_restarts >= 1
+
+
+def test_adaptive_post_exec_appends_stage():
+    seen = []
+
+    def post(stage, pipe):
+        seen.append(stage.name)
+        if len(seen) < 3:
+            nxt = Stage(f"gen{len(seen)}")
+            nxt.add_tasks(Task(name=f"adapt-{len(seen)}",
+                               executable="sleep://0.01"))
+            nxt.post_exec = post
+            pipe.add_stages(nxt)
+
+    pipe = Pipeline("adaptive")
+    s0 = Stage("gen0")
+    s0.add_tasks(Task(name="adapt-0", executable="sleep://0.01"))
+    s0.post_exec = post
+    pipe.add_stages(s0)
+    amgr = AppManager(resources=ResourceDescription(slots=1))
+    amgr.workflow = [pipe]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    assert len(pipe.stages) == 3  # two stages appended at runtime
+
+
+def test_simulated_rts_deterministic():
+    def run_once():
+        amgr = AppManager(
+            resources=ResourceDescription(slots=8, platform="titan"),
+            rts_factory=lambda: SimulatedRTS(seed=7),
+            heartbeat_interval=5.0)
+        amgr.workflow = _workflow(1, 1, 16, duration=100,
+                                  prefix=f"det{time.monotonic_ns()}")
+        amgr.run(timeout=60)
+        return amgr.emgr.rts.vnow
+
+    assert abs(run_once() - run_once()) < 1e-6
+
+
+def test_elastic_resize_mid_run():
+    amgr = AppManager(resources=ResourceDescription(slots=1),
+                      heartbeat_interval=0.1)
+    amgr.workflow = _workflow(1, 1, 6, duration=0.2, prefix="elastic")
+
+    def grow():
+        time.sleep(0.3)
+        amgr.emgr.resize(6)
+
+    threading.Thread(target=grow, daemon=True).start()
+    t0 = time.monotonic()
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    # serial would take ≥1.2 s; elastic growth must beat it
+    assert time.monotonic() - t0 < 1.15
