@@ -40,13 +40,14 @@ def _app(pipelines: int, stages: int, tasks: int, duration: float
 
 
 def _run(pipelines: int, stages: int, tasks: int, duration: float,
-         platform: str, slots: int = 16) -> Dict[str, float]:
+         platform: str, slots: int = 16, timeout: float = 300.0
+         ) -> Dict[str, float]:
     amgr = AppManager(
         resources=ResourceDescription(slots=slots, platform=platform),
         rts_factory=lambda: SimulatedRTS(seed=0),
         heartbeat_interval=5.0)
     amgr.workflow = _app(pipelines, stages, tasks, duration)
-    totals = amgr.run(timeout=300)
+    totals = amgr.run(timeout=timeout)
     rts = amgr.emgr.rts
     return {
         "entk_setup_s": totals.get(ENTK_SETUP, 0.0),
@@ -125,6 +126,63 @@ def experiment_4() -> List[Dict]:
     for (p, s, t) in ((16, 1, 1), (1, 16, 1), (1, 1, 16)):
         rows.append(dict(_run(p, s, t, 100.0, "supermic"),
                          experiment="exp4", variant=f"({p},{s},{t})"))
+    return rows
+
+
+def scheduler_scaling(sizes=(100, 1_000, 10_000), duration: float = 100.0,
+                      slots: int = 1024, repeats: int = 3) -> List[Dict]:
+    """Scheduler-scaling experiment: per-task management cost vs the number
+    of pipelines (P × 1 stage × 1 task — wide and shallow).
+
+    The paper's O(10⁴)-task requirement (§IV, Figs. 6–8) is only met if
+    per-task management cost is independent of the pipeline count: a
+    polling/scanning control plane pays O(P) per event (the seed's
+    ``_find_pipeline`` scan + 10 ms full sweeps), so its per-task cost
+    climbs with P and its total cost is O(P²).
+
+    Headline metric: **marginal toolkit CPU per task** between consecutive
+    cells — (cpu(Pᵢ₊₁) − cpu(Pᵢ)) / (Pᵢ₊₁ − Pᵢ), with each cell's CPU the
+    *minimum* over ``repeats`` (scheduler interference only ever adds CPU
+    — lock-convoy sys time — so the minimum is the cleanest estimate of
+    intrinsic work). Differencing cancels the fixed
+    interpreter/setup/teardown cost that dominates small cells, and CPU
+    (rather than elapsed) measures work instead of GIL/scheduler wait on
+    small shared hosts. An event-driven O(1)-per-event core keeps the
+    marginal cost flat (±20%) from 10² to 10⁴ pipelines. Elapsed
+    EnTK-management time per task is reported alongside for reference.
+    """
+    import resource
+    import statistics
+    import time as _time
+
+    def _cpu() -> float:
+        ru = resource.getrusage(resource.RUSAGE_SELF)
+        return ru.ru_utime + ru.ru_stime
+
+    rows = []
+    for p in sizes:
+        cpu_runs, mgmt_runs, base = [], [], None
+        # small cells are cheap but their minima converge slowly: give
+        # them extra repeats so the marginal differences are stable
+        reps = repeats + 1 if p >= 10_000 else repeats * 2
+        for _ in range(reps):
+            c0 = _cpu()
+            t0 = _time.perf_counter()
+            r = _run(p, 1, 1, duration, "supermic", slots=slots,
+                     timeout=1800)
+            wall = _time.perf_counter() - t0
+            cpu_runs.append(_cpu() - c0)
+            mgmt_runs.append(r["entk_management_s"] / p * 1e6)
+            base = dict(r, n_pipelines=p, n_tasks=p, wallclock_s=wall)
+        rows.append(dict(
+            base, experiment="sched", variant=f"{p}_pipelines",
+            repeats=reps,
+            cpu_s=min(cpu_runs),
+            mgmt_us_per_task=statistics.median(mgmt_runs)))
+    for prev, cur in zip(rows, rows[1:]):
+        cur["marginal_cpu_us_per_task"] = (
+            (cur["cpu_s"] - prev["cpu_s"])
+            / (cur["n_pipelines"] - prev["n_pipelines"]) * 1e6)
     return rows
 
 

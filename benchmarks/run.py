@@ -53,6 +53,20 @@ def fig7_overheads(quick: bool) -> None:
              all_done=r["all_done"])
 
 
+def sched_scaling(quick: bool) -> None:
+    from benchmarks import overheads
+    sizes = (100, 1_000) if quick else (100, 1_000, 10_000)
+    for r in overheads.scheduler_scaling(sizes, repeats=2 if quick else 3):
+        _row(f"sched_{r['n_pipelines']}p", r["mgmt_us_per_task"],
+             n_pipelines=r["n_pipelines"],
+             marginal_cpu_us_per_task=round(
+                 r.get("marginal_cpu_us_per_task", 0.0), 1),
+             cpu_s=round(r["cpu_s"], 3),
+             mgmt_s=round(r["entk_management_s"], 3),
+             wallclock_s=round(r["wallclock_s"], 2),
+             all_done=r["all_done"])
+
+
 def fig8_weak(quick: bool) -> None:
     from benchmarks import scaling
     sizes = (256, 512, 1024) if quick else (512, 1024, 2048, 4096)
@@ -147,6 +161,7 @@ def roofline_table(quick: bool) -> None:
 BENCHES = {
     "fig6": fig6_prototype,
     "fig7": fig7_overheads,
+    "sched": sched_scaling,
     "fig8": fig8_weak,
     "fig9": fig9_strong,
     "fig10": fig10_seismic,

@@ -29,4 +29,5 @@ from .exceptions import (EnTKError, RTSFailure, StateTransitionError,  # noqa: F
                          TaskFailure)
 from .journal import Journal  # noqa: F401
 from .profiler import Profiler  # noqa: F401
-from .pst import Pipeline, Stage, Task, register_executable  # noqa: F401
+from .pst import (Pipeline, Stage, Task, WorkflowIndex,  # noqa: F401
+                  register_executable)

@@ -29,7 +29,7 @@ from .broker import Broker
 from .exceptions import EnTKError, ValueError_
 from .journal import Journal
 from .profiler import (ENTK_SETUP, ENTK_TEARDOWN, Profiler)
-from .pst import Pipeline, Task
+from .pst import Pipeline, WorkflowIndex
 from .execmanager import ExecManager
 from .state_service import StateService
 from .synchronizer import Synchronizer
@@ -78,7 +78,9 @@ class AppManager:
         self.workflow: List[Pipeline] = []
         self.prof = Profiler()
         self.state_table: Dict[str, str] = {}
-        self.task_index: Dict[str, Task] = {}
+        # O(1) uid -> object routing shared by WFProcessor and ExecManager
+        # (replaces the bare task_index dict + linear pipeline/stage scans)
+        self.index = WorkflowIndex()
 
         self.broker: Optional[Broker] = None
         self.journal: Optional[Journal] = None
@@ -110,9 +112,7 @@ class AppManager:
 
     def _index_tasks(self) -> None:
         for p in self.workflow:
-            for s in p.stages:
-                for t in s.tasks:
-                    self.task_index[t.uid] = t
+            self.index.add_pipeline(p)
 
     # -- main entry -------------------------------------------------------------#
 
@@ -145,15 +145,16 @@ class AppManager:
                                flush_every=self.flush_every)
         self.journal.session("resume" if resume else "start",
                              pipelines=len(self.workflow))
-        self.svc = StateService(self.broker, strict=self.strict_transactions)
+        self.svc = StateService(self.broker, strict=self.strict_transactions,
+                                durable=self.journal.enabled)
         self.sync = Synchronizer(self.broker, self.journal, self.state_table)
         self.sync.start()
         self.wfp = WFProcessor(
-            self.broker, self.svc, self.prof, self.workflow, self.task_index,
+            self.broker, self.svc, self.prof, self.workflow, self.index,
             on_task_failure=self.on_task_failure, resumed_done=resumed_done)
         self.emgr = ExecManager(
             self.broker, self.svc, self.prof, self.rts_factory,
-            self.resources, self.task_index,
+            self.resources, self.index,
             heartbeat_interval=self.heartbeat_interval,
             max_rts_restarts=self.max_rts_restarts,
             straggler_factor=self.straggler_factor)
@@ -171,30 +172,43 @@ class AppManager:
 
         try:
             deadline = time.monotonic() + timeout
-            while not self.wfp.workflow_final:
+            # event-driven wait: the WFProcessor sets done_event when the
+            # last pipeline finalizes; the short timeout only bounds how
+            # quickly errors/timeout are noticed, it does no scheduling work
+            while not self.wfp.done_event.wait(timeout=0.05):
                 if time.monotonic() > deadline:
                     raise EnTKError(f"workflow timed out after {timeout}s")
                 if (self.emgr.component_errors
                         and "restart budget exhausted"
                         in self.emgr.component_errors[-1]):
                     raise EnTKError("RTS restart budget exhausted")
-                time.sleep(0.02)
         finally:
             self._terminate()
         return self.prof.totals()
 
     def cancel(self) -> None:
-        """Cancel all outstanding work and finalize."""
+        """Cancel all outstanding work and finalize.
+
+        Takes each pipeline's lock (serializing against the WFProcessor's
+        completion chains) AND the ExecManager's lock (serializing against
+        the submission chain, which runs outside pipeline locks) so the
+        CANCELED transition can neither interleave with nor be overwritten
+        by a concurrent multi-hop advance on the same task."""
+        import contextlib
+
         if self.emgr is not None and self.emgr.rts is not None:
             self.emgr.rts.cancel(self.emgr.rts.in_flight())
+        emgr_lock = (self.emgr._lock if self.emgr is not None
+                     else contextlib.nullcontext())
         for p in self.workflow:
-            for s in p.stages:
-                for t in s.tasks:
-                    if not t.is_final and self.svc is not None:
-                        try:
-                            self.svc.advance(t, st.CANCELED)
-                        except Exception:  # noqa: BLE001
-                            pass
+            with p.lock, emgr_lock:
+                for s in p.stages:
+                    for t in s.tasks:
+                        if not t.is_final and self.svc is not None:
+                            try:
+                                self.svc.advance(t, st.CANCELED)
+                            except Exception:  # noqa: BLE001
+                                pass
 
     # -- teardown ------------------------------------------------------------#
 
@@ -225,7 +239,9 @@ class AppManager:
     def _supervise(self) -> None:
         """Restart dead component threads (EnTK-component failure model)."""
         while not self._stop.is_set():
-            time.sleep(self.heartbeat_interval)
+            # interruptible wait: _terminate must not block on a sleeping
+            # supervisor for a join-timeout at every shutdown
+            self._stop.wait(self.heartbeat_interval)
             if self._stop.is_set():
                 return
             try:
@@ -238,6 +254,7 @@ class AppManager:
                     alive = self.wfp.threads_alive()
                     if not alive["enqueue"]:
                         self.wfp.enqueue_crash_hook = None
+                        self.broker.requeue_unacked("schedule")
                         self.wfp.start_enqueue()
                         self.component_restarts += 1
                     if not alive["dequeue"]:
@@ -246,10 +263,17 @@ class AppManager:
                         self.wfp.start_dequeue()
                         self.component_restarts += 1
                 if self.emgr is not None:
-                    if not self.emgr.threads_alive()["emgr"]:
+                    ealive = self.emgr.threads_alive()
+                    if not ealive["emgr"]:
                         self.emgr.emgr_crash_hook = None
                         self.broker.requeue_unacked("pending")
                         self.emgr.start_emgr()
+                        self.component_restarts += 1
+                    if not ealive["heartbeat"]:
+                        self.emgr.start_heartbeat()
+                        self.component_restarts += 1
+                    if not ealive.get("watchdog", True):
+                        self.emgr.start_watchdog()
                         self.component_restarts += 1
             except Exception:  # noqa: BLE001 - supervisor must survive anything
                 pass

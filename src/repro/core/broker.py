@@ -11,6 +11,15 @@ acknowledgement and redelivery:
   message *unacknowledged*; a consumer that dies without ``ack`` leaves the
   message eligible for redelivery via :meth:`requeue_unacked`.
 * ``ack(queue, tag)`` — marks the message consumed.
+* ``kick(queue)`` — wakes every consumer blocked on the queue *without*
+  delivering a message (their ``get`` returns ``None``/``[]``). This is the
+  event-driven core's wakeup channel: consumer loops block with
+  ``timeout=None`` instead of sleep-polling, and producers of *state* (not
+  messages) — task completions freeing slots, pilot resizes, component
+  shutdown — kick the relevant queue so the consumer re-evaluates.
+* ``get(..., abort=event)`` — a set ``abort`` event makes a blocked (or
+  about-to-block) consumer return immediately; combined with ``kick`` this
+  closes the set-stop-then-wake race without any polling timeout.
 
 The broker records counters used by the Fig.-6 prototype benchmark
 (messages in/out, peak depth) and is intentionally dependency-free so that
@@ -30,7 +39,7 @@ from .exceptions import ValueError_
 
 class _Queue:
     __slots__ = ("name", "messages", "unacked", "cv", "put_count",
-                 "get_count", "ack_count", "peak_depth")
+                 "get_count", "ack_count", "peak_depth", "kick_pending")
 
     def __init__(self, name: str) -> None:
         self.name = name
@@ -41,6 +50,7 @@ class _Queue:
         self.get_count = 0
         self.ack_count = 0
         self.peak_depth = 0
+        self.kick_pending = False
 
 
 class Broker:
@@ -83,7 +93,13 @@ class Broker:
             depth = len(q.messages)
             if depth > q.peak_depth:
                 q.peak_depth = depth
-            q.cv.notify()
+            # Wake a consumer only on the empty→nonempty transition: while
+            # messages are already pending, any sleeping consumer was
+            # notified when the first one arrived and whoever is awake will
+            # drain the rest. This collapses one-notify-per-message storms
+            # (and their GIL handoffs) into one notify per idle period.
+            if depth == 1:
+                q.cv.notify()
 
     def put_many(self, name: str, msgs: Iterable[Any]) -> None:
         q = self._q(name)
@@ -94,16 +110,28 @@ class Broker:
             q.put_count += added
             if len(q.messages) > q.peak_depth:
                 q.peak_depth = len(q.messages)
-            q.cv.notify_all()
+            if before == 0 and added:
+                q.cv.notify_all()
 
-    def get(self, name: str, timeout: Optional[float] = None
+    def get(self, name: str, timeout: Optional[float] = None,
+            abort: Optional[threading.Event] = None
             ) -> Optional[Tuple[int, Any]]:
-        """Pop one message; returns (delivery_tag, msg) or None on timeout."""
+        """Pop one message; returns (delivery_tag, msg), or None on timeout,
+        broker close, queue kick, or a set ``abort`` event."""
         q = self._q(name)
         deadline = None if timeout is None else time.monotonic() + timeout
         with q.cv:
             while not q.messages:
                 if self._closed:
+                    return None
+                if q.kick_pending:
+                    # kicks are latched, not edge-triggered: one delivered
+                    # while the consumer was busy processing is consumed by
+                    # its NEXT get, so capacity-change wakeups are never
+                    # lost between blocking calls
+                    q.kick_pending = False
+                    return None
+                if abort is not None and abort.is_set():
                     return None
                 if deadline is None:
                     q.cv.wait()
@@ -118,10 +146,11 @@ class Broker:
             q.get_count += 1
             return tag, msg
 
-    def get_many(self, name: str, max_n: int, timeout: Optional[float] = None
+    def get_many(self, name: str, max_n: int, timeout: Optional[float] = None,
+                 abort: Optional[threading.Event] = None
                  ) -> List[Tuple[int, Any]]:
         """Batch pop of up to ``max_n`` messages (at least one, else [])."""
-        first = self.get(name, timeout=timeout)
+        first = self.get(name, timeout=timeout, abort=abort)
         if first is None:
             return []
         out = [first]
@@ -135,11 +164,30 @@ class Broker:
                 out.append((tag, msg))
         return out
 
+    def kick(self, name: str) -> None:
+        """Wake a consumer of ``name`` without a message: its current (or,
+        if it is busy, its next) ``get`` returns None (``get_many`` → []).
+        The kick is latched until consumed, so it is never lost to the
+        window between two blocking calls."""
+        q = self._q(name)
+        with q.cv:
+            q.kick_pending = True
+            q.cv.notify_all()
+
     def ack(self, name: str, tag: int) -> None:
         q = self._q(name)
         with q.cv:
             q.unacked.pop(tag, None)
             q.ack_count += 1
+
+    def ack_many(self, name: str, tags: Iterable[int]) -> None:
+        """Acknowledge a batch under one lock acquisition (consumers that
+        ack message-by-message measurably serialize their producers)."""
+        q = self._q(name)
+        with q.cv:
+            for tag in tags:
+                q.unacked.pop(tag, None)
+                q.ack_count += 1
 
     def requeue_unacked(self, name: str) -> int:
         """Redeliver every unacknowledged message (consumer-failure recovery)."""

@@ -3,10 +3,18 @@
 Subcomponents (threads):
 
 * **Rmgr** — acquires/releases resources (starts the pilot) via the RTS.
-* **Emgr** — pulls tasks from the ``pending`` queue, translates them into
-  RTS submissions, tracks the submitted set.
+* **Emgr** — pulls tasks from the ``pending`` queue into a submission
+  backlog and translates them into RTS submissions. Submission is
+  **slot-aware**: each round asks the RTS for its free-slot count
+  (:meth:`~repro.rts.base.RTS.free_slots`) and packs the backlog into the
+  available capacity with largest-fit backfill keyed on ``task.slots``, so
+  wide tasks stop head-of-line-blocking narrow ones and the RTS queue never
+  balloons. A starvation guard falls back to strict FIFO draining when the
+  backlog head has been passed over too often, so no task waits forever.
+  The loop is event-driven: it blocks on the pending queue and is kicked
+  awake by completions (slots freed), pilot resizes and RTS restarts.
 * **RTSCallback** — receives completion events from the RTS and pushes them
-  onto the ``done`` queue.
+  onto the ``done`` queue (and kicks the Emgr: capacity changed).
 * **Heartbeat** — probes RTS liveness; on failure the AppManager tears the
   RTS down, starts a fresh instance and resubmits exactly the lost in-flight
   tasks (black-box RTS fault tolerance, §II-B.4).
@@ -18,15 +26,18 @@ Subcomponents (threads):
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 import traceback
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
 
 from . import states as st
 from .broker import Broker
 from .profiler import ENTK_MANAGEMENT, RTS_OVERHEAD, RTS_TEARDOWN, Profiler
-from .pst import Task
+from .pst import Task, WorkflowIndex
 from .state_service import StateService
 from .wfprocessor import DONE_QUEUE, PENDING_QUEUE
 from ..rts.base import RTS, ResourceDescription, TaskCompletion
@@ -40,26 +51,37 @@ class ExecManager:
         prof: Profiler,
         rts_factory: Callable[[], RTS],
         resources: ResourceDescription,
-        task_index: Dict[str, Task],
+        index: WorkflowIndex,
         heartbeat_interval: float = 0.5,
         max_rts_restarts: int = 3,
         straggler_factor: float = 0.0,  # 0 disables speculation
         straggler_min_seconds: float = 1.0,
+        starvation_limit: int = 8,
     ) -> None:
         self.broker = broker
         self.svc = svc
         self.prof = prof
         self.rts_factory = rts_factory
         self.resources = resources
-        self.task_index = task_index
+        self.index = index
         self.heartbeat_interval = heartbeat_interval
         self.max_rts_restarts = max_rts_restarts
         self.straggler_factor = straggler_factor
         self.straggler_min_seconds = straggler_min_seconds
+        self.starvation_limit = starvation_limit
 
         self.rts: Optional[RTS] = None
         self.rts_restarts = 0
         self._submitted: Dict[str, Task] = {}   # uid -> task, in RTS custody
+        # Submission backlog: pulled from the pending queue, awaiting free
+        # slots. Lives on the instance (not the loop) so an Emgr-thread crash
+        # + restart does not strand tasks. Stored as width buckets (one FIFO
+        # deque of (seq, task) per task.slots value) so each submit round
+        # costs O(batch + distinct widths), not O(backlog log backlog).
+        self._backlog: Dict[int, Deque] = {}
+        self._backlog_uids: set = set()
+        self._backlog_seq = itertools.count()
+        self._head_skips = 0                    # rounds the head was passed over
         self._spec_of: Dict[str, str] = {}      # clone uid -> original uid
         self._spec_for: Dict[str, str] = {}     # original uid -> clone uid
         self._speculated: set = set()           # originals already cloned
@@ -72,6 +94,10 @@ class ExecManager:
         self.component_errors: List[str] = []
         self.speculations = 0
         self.speculation_wins = 0
+        # Observability for the no-busy-wait tests: wakeups only happen on
+        # pending messages or capacity kicks, never on a poll timer.
+        self.emgr_wakeups = 0
+        self.submit_rounds = 0
 
     # -- Rmgr ------------------------------------------------------------------#
 
@@ -87,23 +113,22 @@ class ExecManager:
                 self.rts.stop()
 
     def resize(self, slots: int) -> None:
-        """Elastic scaling passthrough."""
+        """Elastic scaling passthrough; wakes the Emgr (capacity changed).
+        ``resources.slots`` records what the RTS actually granted — a
+        backend may clamp (JaxRTS: device inventory), and an unclamped
+        value here would break the Emgr's pilot-idle starvation escape."""
         if self.rts is not None:
-            self.rts.resize(slots)
-            self.resources.slots = slots
+            self.resources.slots = self.rts.resize(slots)
+            self.broker.kick(PENDING_QUEUE)
 
     # -- lifecycle ----------------------------------------------------------#
 
     def start(self) -> None:
         self._stop.clear()
         self.start_emgr()
-        self._hb_thread = threading.Thread(target=self._heartbeat_loop,
-                                           daemon=True, name="em-heartbeat")
-        self._hb_thread.start()
+        self.start_heartbeat()
         if self.straggler_factor > 0:
-            self._wd_thread = threading.Thread(target=self._watchdog_loop,
-                                               daemon=True, name="em-watchdog")
-            self._wd_thread.start()
+            self.start_watchdog()
 
     def start_emgr(self) -> None:
         self._emgr_thread = threading.Thread(
@@ -111,8 +136,21 @@ class ExecManager:
             daemon=True, name="em-emgr")
         self._emgr_thread.start()
 
+    def start_heartbeat(self) -> None:
+        self._hb_thread = threading.Thread(
+            target=self._guarded, args=(self._heartbeat_loop, "heartbeat"),
+            daemon=True, name="em-heartbeat")
+        self._hb_thread.start()
+
+    def start_watchdog(self) -> None:
+        self._wd_thread = threading.Thread(
+            target=self._guarded, args=(self._watchdog_loop, "watchdog"),
+            daemon=True, name="em-watchdog")
+        self._wd_thread.start()
+
     def stop(self) -> None:
         self._stop.set()
+        self.broker.kick(PENDING_QUEUE)
         for t in (self._emgr_thread, self._hb_thread, self._wd_thread):
             if t is not None:
                 t.join(timeout=5.0)
@@ -120,8 +158,16 @@ class ExecManager:
         self.release_resources()
 
     def threads_alive(self) -> Dict[str, bool]:
-        return {"emgr": bool(self._emgr_thread
-                             and self._emgr_thread.is_alive())}
+        """Liveness of every ExecManager thread, so the AppManager's
+        component-restart logic can observe (and heal) any of them dying."""
+        alive = {
+            "emgr": bool(self._emgr_thread and self._emgr_thread.is_alive()),
+            "heartbeat": bool(self._hb_thread and self._hb_thread.is_alive()),
+        }
+        if self.straggler_factor > 0:
+            alive["watchdog"] = bool(self._wd_thread
+                                     and self._wd_thread.is_alive())
+        return alive
 
     def _guarded(self, fn: Callable[[], None], name: str) -> None:
         try:
@@ -134,30 +180,174 @@ class ExecManager:
 
     def _emgr_loop(self) -> None:
         while not self._stop.is_set():
+            msgs = self.broker.get_many(PENDING_QUEUE, 128, timeout=None,
+                                        abort=self._stop)
+            if self._stop.is_set():
+                return
             if self.emgr_crash_hook is not None:
                 self.emgr_crash_hook()
-            msgs = self.broker.get_many(PENDING_QUEUE, 128, timeout=0.05)
-            if not msgs:
-                continue
-            t0 = time.perf_counter()
-            batch: List[Task] = []
-            for tag, uid in msgs:
-                task = self.task_index.get(uid)
-                self.broker.ack(PENDING_QUEUE, tag)
-                if task is None:
-                    continue
-                self.svc.advance(task, st.SUBMITTING, transact=False)
+            self.emgr_wakeups += 1
+            if msgs:
+                t0 = time.perf_counter()
                 with self._lock:
-                    self._submitted[task.uid] = task
-                batch.append(task)
-            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
-            if batch:
-                t1 = time.perf_counter()
-                self.rts.submit(batch)
-                for task in batch:
-                    task.submitted_at = time.time()
-                    self.svc.advance(task, st.SUBMITTED, transact=False)
-                self.prof.add(RTS_OVERHEAD, time.perf_counter() - t1)
+                    for tag, uid in msgs:
+                        task = self.index.task(uid)
+                        # SUBMITTING is advanced at submission time (one
+                        # coalesced SUBMITTING→SUBMITTED hop per task);
+                        # backlogged tasks stay SCHEDULED
+                        if (task is not None and not task.is_final
+                                and uid not in self._backlog_uids
+                                and uid not in self._submitted):
+                            self._backlog.setdefault(
+                                task.slots, deque()).append(
+                                    (next(self._backlog_seq), task))
+                            self._backlog_uids.add(uid)
+                self.broker.ack_many(PENDING_QUEUE, [t for t, _ in msgs])
+                self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
+            self._submit_ready()
+
+    def _submit_ready(self) -> None:
+        """Pack backlog tasks into the RTS's free slots and submit them."""
+        rts = self.rts
+        if rts is None:
+            return
+        try:
+            free = rts.free_slots()
+        except Exception:  # noqa: BLE001 - a dying RTS: heartbeat handles it
+            return
+        with self._lock:
+            batch = self._pick_batch_locked(free)
+            for task in batch:
+                self._submitted[task.uid] = task
+        if not batch:
+            return
+        self.submit_rounds += 1
+        t1 = time.perf_counter()
+        # SUBMITTED before the actual hand-off: an instantly-completing task
+        # must never race its DONE transition past SUBMITTING. If submit()
+        # fails, the heartbeat restart path resubmits from self._submitted.
+        # The advance chain runs under self._lock: AppManager.cancel takes
+        # the same lock, so a concurrent CANCELED can never interleave with
+        # (or be overwritten by) the SUBMITTING→SUBMITTED hops.
+        now = time.time()
+        sink: List = []
+        submittable: List[Task] = []
+        with self._lock:
+            for task in batch:
+                try:
+                    self.svc.advance_seq(task, (st.SUBMITTING, st.SUBMITTED),
+                                         transact=False, sink=sink)
+                except Exception:  # noqa: BLE001 - canceled concurrently
+                    self._submitted.pop(task.uid, None)
+                    continue
+                task.submitted_at = now
+                submittable.append(task)
+        self.svc.flush(sink)  # publish before the RTS can complete anything
+        if not submittable:
+            return
+        rts.submit(submittable)
+        self.prof.add(RTS_OVERHEAD, time.perf_counter() - t1)
+
+    def _prune_fronts_locked(self) -> None:
+        """Drop finalized (e.g. canceled-while-waiting) tasks from bucket
+        fronts and delete empty buckets; interior finals are skipped lazily
+        when the backfill reaches them."""
+        for width in list(self._backlog):
+            dq = self._backlog[width]
+            while dq and dq[0][1].is_final:
+                _, stale = dq.popleft()
+                self._backlog_uids.discard(stale.uid)
+            if not dq:
+                del self._backlog[width]
+
+    def _head_locked(self) -> Optional[Task]:
+        """The globally oldest live backlog task (min seq over fronts)."""
+        best = None
+        for dq in self._backlog.values():
+            seq, task = dq[0]
+            if best is None or seq < best[0]:
+                best = (seq, task)
+        return best[1] if best else None
+
+    def _take_locked(self, width: int, batch: List[Task],
+                     remaining: int) -> int:
+        """Move fitting live tasks of one width bucket into ``batch``."""
+        dq = self._backlog.get(width)
+        while dq and width <= remaining:
+            _, task = dq.popleft()
+            self._backlog_uids.discard(task.uid)
+            if task.is_final:
+                continue  # lazily pruned
+            batch.append(task)
+            remaining -= width
+        if dq is not None and not dq:
+            del self._backlog[width]
+        return remaining
+
+    def _pick_batch_locked(self, free: Optional[int]) -> List[Task]:
+        """Largest-fit backfill of the backlog into ``free`` slots.
+
+        ``free is None`` means the RTS does not report capacity (e.g. the
+        SimulatedRTS's virtual clock makes wallclock capacity meaningless):
+        drain the backlog FIFO, as the pre-slot-aware Emgr did.
+
+        Fairness: if the FIFO head was passed over ``starvation_limit``
+        times, it is placed FIRST on the round it fits, and while it does
+        not fit nothing younger may jump it (conservative backfill). A head
+        wider than the whole idle pilot is submitted anyway — the RTS, not
+        the Emgr, owns that error.
+        """
+        self._prune_fronts_locked()
+        if not self._backlog:
+            return []
+        if free is None:
+            # full FIFO drain: merge the width buckets back into seq order
+            merged = heapq.merge(*self._backlog.values())
+            batch = [task for _, task in merged if not task.is_final]
+            self._backlog.clear()
+            self._backlog_uids.clear()
+            return batch
+        head = self._head_locked()
+        if head is None:
+            return []
+        batch: List[Task] = []
+        remaining = free
+        if head.slots > free:
+            pilot_idle = free >= max(1, self.resources.slots)
+            if pilot_idle and not self._submitted:
+                # the head can never fit: hand it over, let the RTS decide
+                self._backlog[head.slots].popleft()
+                if not self._backlog[head.slots]:
+                    del self._backlog[head.slots]
+                self._backlog_uids.discard(head.uid)
+                self._head_skips = 0
+                return [head]
+            if self._head_skips >= self.starvation_limit:
+                return []  # hold everything: drain until the head fits
+        elif self._head_skips >= self.starvation_limit:
+            # starved head goes first, then backfill with what still fits
+            self._backlog[head.slots].popleft()
+            if not self._backlog[head.slots]:
+                del self._backlog[head.slots]
+            self._backlog_uids.discard(head.uid)
+            batch.append(head)
+            remaining -= head.slots
+            self._head_skips = 0
+        for width in sorted(self._backlog, reverse=True):
+            if remaining <= 0:
+                break
+            remaining = self._take_locked(width, batch, remaining)
+        if not batch:
+            return []
+        if any(t.uid == head.uid for t in batch):
+            self._head_skips = 0
+        else:
+            self._head_skips += 1
+        return batch
+
+    def n_backlogged(self) -> int:
+        with self._lock:
+            return sum(len(dq) for dq in self._backlog.values())
 
     # -- RTSCallback -------------------------------------------------------------#
 
@@ -195,9 +385,9 @@ class ExecManager:
                 pass
         if task is None:
             return  # duplicate completion (losing speculative attempt)
-        task_state = self.task_index.get(uid)
-        if task_state is not None and task_state.state == st.SUBMITTED:
-            self.svc.advance(task_state, st.EXECUTED, transact=False)
+        # No state advance here: this runs on the RTS's own thread, and the
+        # Dequeue coalesces EXECUTED into the completion chain. The callback
+        # only converts the event into a message.
         self.broker.put(DONE_QUEUE, {
             "uid": uid,
             "exit_code": c.exit_code,
@@ -207,13 +397,19 @@ class ExecManager:
             "execution_seconds": c.execution_seconds,
             "staging_seconds": c.staging_seconds,
         })
+        # capacity freed: wake the Emgr — but only when it actually holds
+        # tasks back for slots (unconditional kicks would wake it once per
+        # completion for nothing). Racing a concurrent backlog append is
+        # benign: the appender's own loop runs _submit_ready afterwards.
+        if self._backlog:
+            self.broker.kick(PENDING_QUEUE)
 
     # -- Heartbeat ------------------------------------------------------------#
 
     def _heartbeat_loop(self) -> None:
         misses = 0
         while not self._stop.is_set():
-            time.sleep(self.heartbeat_interval)
+            self._stop.wait(self.heartbeat_interval)
             if self._stop.is_set():
                 return
             try:
@@ -234,6 +430,7 @@ class ExecManager:
             self.component_errors.append(
                 "rts: restart budget exhausted")
             self._stop.set()
+            self.broker.kick(PENDING_QUEUE)
             return
         self.rts_restarts += 1
         with self._lock:
@@ -253,12 +450,16 @@ class ExecManager:
             t0 = time.perf_counter()
             self.rts.submit(lost)
             self.prof.add(RTS_OVERHEAD, time.perf_counter() - t0)
+        # fresh pilot, fresh capacity: let the Emgr re-evaluate its backlog
+        self.broker.kick(PENDING_QUEUE)
 
     # -- Watchdog (straggler speculation) ------------------------------------#
 
     def _watchdog_loop(self) -> None:
         while not self._stop.is_set():
-            time.sleep(self.heartbeat_interval)
+            self._stop.wait(self.heartbeat_interval)
+            if self._stop.is_set():
+                return
             rts = self.rts
             if rts is None or not hasattr(rts, "running_since"):
                 continue

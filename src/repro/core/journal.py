@@ -49,6 +49,11 @@ class Journal:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
             self._fh = open(path, "a", encoding="utf-8")
 
+    @property
+    def enabled(self) -> bool:
+        """True when a write-ahead file actually backs this journal."""
+        return self._fh is not None
+
     # -- write ----------------------------------------------------------------#
 
     def append(self, record: Dict[str, Any]) -> None:

@@ -213,10 +213,17 @@ class Task:
 # --------------------------------------------------------------------------- #
 
 class Stage:
-    """A set of mutually independent tasks, executed concurrently."""
+    """A set of mutually independent tasks, executed concurrently.
+
+    Stage closure is O(1) per task completion: when the stage is scheduled
+    the WFProcessor arms ``begin_execution`` with the number of tasks still
+    expected to reach a final state, and every final completion decrements
+    that counter via ``note_task_final``. The counters are only ever touched
+    under the WFProcessor's lock, so they are plain ints.
+    """
 
     __slots__ = ("uid", "name", "tasks", "state", "state_history",
-                 "post_exec", "parent_pipeline")
+                 "post_exec", "parent_pipeline", "_pending", "_nfailed")
 
     def __init__(self, name: str = "",
                  post_exec: Optional[Callable[["Stage", "Pipeline"], None]] = None
@@ -233,6 +240,8 @@ class Stage:
         # pipeline (the paper's branching-as-decision-task).
         self.post_exec = post_exec
         self.parent_pipeline: Optional[str] = None
+        self._pending = -1      # armed by begin_execution; -1 = not scheduled
+        self._nfailed = 0
 
     def add_tasks(self, tasks: Any) -> None:
         if isinstance(tasks, Task):
@@ -255,6 +264,29 @@ class Stage:
     def is_final(self) -> bool:
         return self.state in states.STAGE_FINAL
 
+    # -- O(1) closure accounting -------------------------------------------- #
+
+    def begin_execution(self, pending: int) -> None:
+        """Arm the completion countdown: ``pending`` tasks still owe a final
+        state (retries keep a task pending; resumed tasks never count)."""
+        self._pending = pending
+
+    def note_task_final(self, failed: bool) -> None:
+        """Record one task reaching a *terminal* final state (no retry left)."""
+        if self._pending > 0:
+            self._pending -= 1
+        if failed:
+            self._nfailed += 1
+
+    @property
+    def pending_tasks(self) -> int:
+        """Tasks still expected to complete; -1 until the stage is scheduled."""
+        return self._pending
+
+    @property
+    def failed_tasks(self) -> int:
+        return self._nfailed
+
     def to_dict(self) -> Dict[str, Any]:
         return {
             "uid": self.uid,
@@ -276,7 +308,7 @@ class Pipeline:
     """An ordered list of stages. Stage *i* starts only after *i-1* is final."""
 
     __slots__ = ("uid", "name", "stages", "state", "state_history",
-                 "_cursor", "lock")
+                 "_cursor", "lock", "_nfailed", "_append_listener")
 
     def __init__(self, name: str = "") -> None:
         self.uid = uid.generate("pipeline")
@@ -290,6 +322,16 @@ class Pipeline:
         # Adaptive post_exec callbacks append stages concurrently with the
         # WFProcessor reading them; both sides take this lock.
         self.lock = threading.RLock()
+        self._nfailed = 0         # terminally-failed tasks, pipeline-wide
+        # Dirty-notification hook: the WFProcessor registers a callback so
+        # stages appended at runtime (post_exec adaptivity, or any other
+        # thread) mark this pipeline dirty instead of relying on a poll.
+        self._append_listener: Optional[Callable[[str], None]] = None
+
+    def set_append_listener(self,
+                            cb: Optional[Callable[[str], None]]) -> None:
+        """Register ``cb(pipeline_uid)`` to fire whenever stages are added."""
+        self._append_listener = cb
 
     def add_stages(self, stage_or_stages: Any) -> None:
         if isinstance(stage_or_stages, Stage):
@@ -303,6 +345,9 @@ class Pipeline:
                 for t in s.tasks:
                     t.parent_pipeline = self.uid
                 self.stages.append(s)
+            listener = self._append_listener
+        if listener is not None:
+            listener(self.uid)
 
     def advance(self, to_state: str) -> None:
         states.validate_transition("pipeline", self.uid, self.state, to_state)
@@ -340,6 +385,16 @@ class Pipeline:
     def is_final(self) -> bool:
         return self.state in states.PIPELINE_FINAL
 
+    # -- O(1) closure accounting -------------------------------------------- #
+
+    def note_task_failed(self) -> None:
+        """Record one terminally-failed task (WFProcessor-lock protected)."""
+        self._nfailed += 1
+
+    @property
+    def failed_tasks(self) -> int:
+        return self._nfailed
+
     @property
     def ntasks(self) -> int:
         with self.lock:
@@ -358,3 +413,96 @@ class Pipeline:
     def __repr__(self) -> str:  # pragma: no cover
         return (f"<Pipeline {self.uid} [{self.state}] "
                 f"nstages={len(self.stages)} cursor={self._cursor}>")
+
+
+# --------------------------------------------------------------------------- #
+# WorkflowIndex
+# --------------------------------------------------------------------------- #
+
+class WorkflowIndex:
+    """O(1) uid → object routing tables for a live workflow.
+
+    Replaces the bare ``task_index`` dict and the WFProcessor's linear
+    ``_find_pipeline``/``_find_stage`` scans: a completion event resolves
+    task → Stage object → Pipeline object in three dict lookups, so per-task
+    completion routing is independent of the number of pipelines/stages
+    (the paper's O(10⁴)-task scalability requirement).
+
+    Stages appended at runtime by adaptive ``post_exec`` hooks are registered
+    through :meth:`add_stage` when the WFProcessor first schedules them.
+    """
+
+    __slots__ = ("_tasks", "_stages", "_pipelines", "_lock")
+
+    def __init__(self) -> None:
+        self._tasks: Dict[str, Task] = {}
+        self._stages: Dict[str, Stage] = {}
+        self._pipelines: Dict[str, Pipeline] = {}
+        self._lock = threading.RLock()
+
+    # -- registration ------------------------------------------------------- #
+
+    def add_pipeline(self, pipe: Pipeline) -> None:
+        with self._lock:
+            self._pipelines[pipe.uid] = pipe
+            with pipe.lock:
+                for stage in pipe.stages:
+                    self._stages[stage.uid] = stage
+                    for task in stage.tasks:
+                        self._tasks[task.uid] = task
+
+    def add_stage(self, stage: Stage) -> None:
+        with self._lock:
+            self._stages[stage.uid] = stage
+            for task in stage.tasks:
+                self._tasks[task.uid] = task
+
+    def add_task(self, task: Task) -> None:
+        with self._lock:
+            self._tasks[task.uid] = task
+
+    # -- O(1) lookups ------------------------------------------------------- #
+
+    def task(self, uid: str) -> Optional[Task]:
+        return self._tasks.get(uid)
+
+    def stage(self, uid: str) -> Optional[Stage]:
+        return self._stages.get(uid)
+
+    def pipeline(self, uid: str) -> Optional[Pipeline]:
+        return self._pipelines.get(uid)
+
+    def stage_of(self, task: Task) -> Optional[Stage]:
+        if task.parent_stage is None:
+            return None
+        return self._stages.get(task.parent_stage)
+
+    def pipeline_of(self, task: Task) -> Optional[Pipeline]:
+        if task.parent_pipeline is None:
+            return None
+        return self._pipelines.get(task.parent_pipeline)
+
+    def route(self, uid: str
+              ) -> "tuple[Optional[Task], Optional[Stage], Optional[Pipeline]]":
+        """Resolve a completion uid to its (task, stage, pipeline) triple."""
+        task = self._tasks.get(uid)
+        if task is None:
+            return None, None, None
+        return task, self.stage_of(task), self.pipeline_of(task)
+
+    # -- introspection ------------------------------------------------------ #
+
+    @property
+    def ntasks(self) -> int:
+        return len(self._tasks)
+
+    @property
+    def nstages(self) -> int:
+        return len(self._stages)
+
+    @property
+    def npipelines(self) -> int:
+        return len(self._pipelines)
+
+    def __len__(self) -> int:
+        return len(self._tasks)

@@ -46,6 +46,7 @@ class Synchronizer:
                     break
                 threading.Event().wait(0.01)
         self._stop.set()
+        self.broker.kick(STATES_QUEUE)
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
@@ -56,18 +57,25 @@ class Synchronizer:
 
     def _loop(self) -> None:
         while not self._stop.is_set():
+            # event-driven: block until transitions arrive (or stop kicks);
+            # popped messages are always processed, even mid-shutdown, so a
+            # transactional advance is never left waiting on its ack
+            msgs = self.broker.get_many(STATES_QUEUE, self.batch, timeout=None,
+                                        abort=self._stop)
             if self.crash_hook is not None:
                 self.crash_hook()
-            msgs = self.broker.get_many(STATES_QUEUE, self.batch, timeout=0.05)
             if not msgs:
                 continue
             needs_flush = False
             for _tag, msg in msgs:
                 if msg.get("type") != "transition":
                     continue
+                extra = dict(msg.get("extra", {}))
+                if "via" in msg:  # coalesced transition chain
+                    extra["via"] = msg["via"]
                 self.journal.transition(
                     kind=msg["kind"], uid=msg["uid"], name=msg["name"],
-                    frm=msg["frm"], to=msg["to"], **msg.get("extra", {}))
+                    frm=msg["frm"], to=msg["to"], **extra)
                 self.state_table[f"{msg['kind']}:{msg['name']}"] = msg["to"]
                 self.processed += 1
                 if self.on_transition is not None:
@@ -77,8 +85,8 @@ class Synchronizer:
             if needs_flush:
                 # transactional messages: force the WAL to disk before acking
                 self.journal.flush()
-            for tag, msg in msgs:
+            for _tag, msg in msgs:
                 ack = msg.get("_ack")
                 if ack is not None:
                     ack.set()
-                self.broker.ack(STATES_QUEUE, tag)
+            self.broker.ack_many(STATES_QUEUE, [tag for tag, _ in msgs])

@@ -1,13 +1,18 @@
 """WFProcessor: the workflow-management component (paper §II-B.2/3).
 
-Two subcomponents, each a restartable thread:
+Two subcomponents, each a restartable thread, both **event-driven** (no
+sleep-polling anywhere on the hot path):
 
-* **Enqueue** — walks the pipelines, tags schedulable tasks (stage-ordering
-  semantics of the PST model) and pushes them onto the ``pending`` queue.
-* **Dequeue** — pulls completions from the ``done`` queue, tags tasks DONE /
-  FAILED / CANCELED from the RTS return code, drives resubmission of failed
-  tasks within their retry budgets, closes out stages and pipelines, and
-  fires the adaptivity (``post_exec``) hooks.
+* **Enqueue** — blocks on the ``schedule`` queue of *dirty pipeline* uids.
+  A pipeline is marked dirty when it first enters the workflow, when one of
+  its stages closes, or when an adaptive ``post_exec`` hook appends stages
+  at runtime (the Pipeline's append listener fires on ``add_stages``). Each
+  wakeup schedules exactly the pipelines that changed — per-event cost is
+  O(changed pipelines), not O(all pipelines).
+* **Dequeue** — blocks on the ``done`` queue. Each completion routes to its
+  (task, stage, pipeline) triple through the :class:`WorkflowIndex` in O(1)
+  and closes stages/pipelines through per-stage pending counters in O(1),
+  instead of re-scanning ``all(t.is_final ...)`` per event.
 
 Both loops are stateless between iterations: all state lives in the master
 PST objects and the queues, which is what makes component restart after a
@@ -25,11 +30,12 @@ from . import states as st
 from .broker import Broker
 from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
                        Profiler)
-from .pst import Pipeline, Stage, Task
+from .pst import Pipeline, Stage, WorkflowIndex
 from .state_service import StateService
 
 PENDING_QUEUE = "pending"
 DONE_QUEUE = "done"
+SCHEDULE_QUEUE = "schedule"   # dirty-pipeline notification channel
 
 
 class WFProcessor:
@@ -41,7 +47,7 @@ class WFProcessor:
         svc: StateService,
         prof: Profiler,
         pipelines: List[Pipeline],
-        task_index: Dict[str, Task],
+        index: WorkflowIndex,
         on_task_failure: str = "continue",  # or "fail_stage"
         resumed_done: Optional[set] = None,
     ) -> None:
@@ -49,25 +55,43 @@ class WFProcessor:
         self.svc = svc
         self.prof = prof
         self.pipelines = pipelines
-        self.task_index = task_index
+        self.index = index
         self.on_task_failure = on_task_failure
         self.resumed_done = resumed_done or set()
         broker.declare(PENDING_QUEUE)
         broker.declare(DONE_QUEUE)
+        broker.declare(SCHEDULE_QUEUE)
         self._stop = threading.Event()
         self._enqueue_thread: Optional[threading.Thread] = None
         self._dequeue_thread: Optional[threading.Thread] = None
+        # fallback for completions that cannot be routed to a pipeline
+        # (scheduling/closure otherwise lock per-pipeline) + closure counting
         self._lock = threading.RLock()
         self.enqueue_crash_hook: Optional[Callable[[], None]] = None
         self.dequeue_crash_hook: Optional[Callable[[], None]] = None
         self.component_errors: List[str] = []
+        # Event-driven completion signal: the AppManager waits on this
+        # instead of polling workflow_final.
+        self.done_event = threading.Event()
+        self._open_pipelines = len(pipelines)
+        # Iteration counters (observability + the no-busy-wait tests): a
+        # schedule pass only happens when a pipeline was actually dirty, so
+        # an idle workflow performs zero passes no matter how long it idles.
+        self.schedule_passes = 0
+        self.dequeue_batches = 0
 
     # -- lifecycle ----------------------------------------------------------#
 
     def start(self) -> None:
         self._stop.clear()
+        for pipe in self.pipelines:
+            pipe.set_append_listener(self._mark_dirty)
         self.start_enqueue()
         self.start_dequeue()
+        # Seed the ready set: every pipeline is dirty until first scheduled
+        # (one queue operation, not one per pipeline).
+        self.broker.put_many(SCHEDULE_QUEUE,
+                             [pipe.uid for pipe in self.pipelines])
 
     def start_enqueue(self) -> None:
         self._enqueue_thread = threading.Thread(
@@ -83,6 +107,8 @@ class WFProcessor:
 
     def stop(self) -> None:
         self._stop.set()
+        self.broker.kick(SCHEDULE_QUEUE)
+        self.broker.kick(DONE_QUEUE)
         for t in (self._enqueue_thread, self._dequeue_thread):
             if t is not None:
                 t.join(timeout=5.0)
@@ -110,166 +136,275 @@ class WFProcessor:
     def workflow_final(self) -> bool:
         return all(p.is_final for p in self.pipelines)
 
+    # -- dirty-pipeline channel ----------------------------------------------#
+
+    def _mark_dirty(self, pipe_uid: str) -> None:
+        """Notify Enqueue that ``pipe_uid`` needs a scheduling visit."""
+        self.broker.put(SCHEDULE_QUEUE, pipe_uid)
+
     # -- Enqueue ------------------------------------------------------------#
 
     def _enqueue_loop(self) -> None:
         while not self._stop.is_set():
+            msgs = self.broker.get_many(SCHEDULE_QUEUE, 256, timeout=None,
+                                        abort=self._stop)
+            if self._stop.is_set():
+                return
             if self.enqueue_crash_hook is not None:
                 self.enqueue_crash_hook()
-            worked = self._schedule_pass()
-            if not worked:
-                time.sleep(0.01)
+            if not msgs:
+                continue  # kicked awake; nothing dirty
+            t0 = time.perf_counter()
+            seen = set()
+            done_tags = []
+            sink: List[Any] = []
+            pending: List[str] = []
+            try:
+                for tag, uid in msgs:
+                    # schedule before ack: a crash mid-batch leaves dirty
+                    # marks unacked for redelivery; re-visits are idempotent
+                    if uid not in seen:
+                        seen.add(uid)
+                        pipe = self.index.pipeline(uid)
+                        if pipe is not None:
+                            self.schedule_passes += 1
+                            self._schedule_pipeline(pipe, sink, pending)
+                    done_tags.append(tag)
+            finally:
+                self.svc.flush(sink)
+                if pending:
+                    # one pending-queue hand-off for the whole dirty batch
+                    self.broker.put_many(PENDING_QUEUE, pending)
+                self.broker.ack_many(SCHEDULE_QUEUE, done_tags)
+            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
 
-    def _schedule_pass(self) -> bool:
-        """One scheduling sweep; returns True if any work was done."""
-        t0 = time.perf_counter()
-        worked = False
-        with self._lock:
-            for pipe in self.pipelines:
+    def _schedule_pipeline(self, pipe: Pipeline,
+                           sink: Optional[List[Any]] = None,
+                           pending: Optional[List[str]] = None) -> None:
+        """Visit one dirty pipeline: advance its cursor as far as possible.
+
+        Locking is per-pipeline: Enqueue scheduling pipeline A never
+        contends with Dequeue closing a task of pipeline B (a global lock
+        here measurably dominated management overhead at O(10⁴) pipelines).
+        State publishes defer into ``sink``; ordering toward Dequeue is
+        guaranteed because the pending hand-off (which is what makes
+        completions for these objects possible at all) happens only after
+        the sink is flushed — see the ``finally`` ordering in the enqueue
+        loop and in this function's own-buffer path.
+        """
+        own = sink is None
+        if own:
+            sink = []
+        own_pending: List[str] = [] if pending is None else None
+        if own_pending is not None:
+            pending = own_pending
+        try:
+            with pipe.lock:
                 if pipe.is_final:
-                    continue
+                    return
                 if pipe.state == st.PIPELINE_INITIAL:
                     self.svc.advance(pipe, st.PIPELINE_SCHEDULING,
-                                     transact=False)
-                    worked = True
-                stage = pipe.next_stage()
-                if stage is None:
-                    if pipe.completed and not pipe.is_final:
-                        self._finalize_pipeline(pipe)
-                        worked = True
-                    continue
-                if stage.state == st.STAGE_INITIAL:
-                    self._schedule_stage(pipe, stage)
-                    worked = True
-        if worked:
-            self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
-        return worked
+                                     transact=False, sink=sink)
+                while True:
+                    stage = pipe.next_stage()
+                    if stage is None:
+                        if pipe.completed and not pipe.is_final:
+                            self._finalize_pipeline(pipe, sink=sink)
+                        return
+                    if stage.state != st.STAGE_INITIAL:
+                        return  # current stage still executing
+                    self._schedule_stage(pipe, stage, sink, pending)
+                    if not stage.is_final:
+                        return  # in flight; completions drive progress
+                    # stage closed instantly (fully resumed): advance on
+        finally:
+            if own:
+                self.svc.flush(sink)
+            if own_pending:
+                self.broker.put_many(PENDING_QUEUE, own_pending)
 
-    def _schedule_stage(self, pipe: Pipeline, stage: Stage) -> None:
-        self.svc.advance(stage, st.STAGE_SCHEDULING, transact=False)
+    def _schedule_stage(self, pipe: Pipeline, stage: Stage,
+                        sink: Optional[List[Any]] = None,
+                        pending: Optional[List[str]] = None) -> None:
+        # register here (not only at startup): adaptive post_exec hooks
+        # append stages at runtime and their tasks must be resolvable by the
+        # ExecManager and Dequeue through the WorkflowIndex
+        self.index.add_stage(stage)
         payload = []
         for task in stage.tasks:
-            # index here (not only at startup): adaptive post_exec hooks
-            # append stages at runtime and their tasks must be resolvable
-            # by the ExecManager and Dequeue
-            self.task_index[task.uid] = task
-            if task.name in self.resumed_done and not task.is_final:
+            if (task.name in self.resumed_done
+                    and task.state == st.INITIAL):
                 # resume: completed in a previous session, skip execution
-                self.svc.advance(task, st.SCHEDULING, transact=False)
-                self.svc.advance(task, st.SCHEDULED, transact=False)
-                self.svc.advance(task, st.SUBMITTING, transact=False)
-                self.svc.advance(task, st.SUBMITTED, transact=False)
-                self.svc.advance(task, st.EXECUTED, transact=False)
-                self.svc.advance(task, st.DONE, resumed=True)
+                self.svc.advance_seq(
+                    task, (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING,
+                           st.SUBMITTED, st.EXECUTED, st.DONE),
+                    resumed=True, sink=sink)
                 continue
             if task.is_final:
                 continue
-            self.svc.advance(task, st.SCHEDULING, transact=False)
-            payload.append(task.uid)
-            self.svc.advance(task, st.SCHEDULED, transact=False)
+            if task.state == st.INITIAL:
+                self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
+                                     transact=False, sink=sink)
+                payload.append(task.uid)
+            elif task.state == st.SCHEDULED:
+                # crash-recovery re-visit: the task was advanced but the
+                # pending hand-off may have been lost — hand it off again
+                # (the ExecManager deduplicates against its backlog and
+                # custody), and never re-run the SCHEDULING chain
+                payload.append(task.uid)
+            # other states: already with the ExecManager/RTS
+        # Arm the O(1) closure countdown before any completion can race in
+        # (we hold pipe.lock; Dequeue takes it before decrementing).
+        # Counting non-final tasks (not len(payload)) keeps re-visits exact.
+        stage.begin_execution(sum(1 for t in stage.tasks if not t.is_final))
         if payload:
-            self.broker.put_many(PENDING_QUEUE, payload)
-        self.svc.advance(stage, st.STAGE_SCHEDULED, transact=False)
+            if pending is not None:
+                # deferred hand-off: the caller publishes the whole dirty
+                # batch to the pending queue in one operation, after the
+                # state sink is flushed
+                pending.extend(payload)
+            else:
+                if sink is not None:
+                    # the ExecManager may advance these tasks as soon as
+                    # they are visible on the pending queue
+                    self.svc.flush(sink)
+                self.broker.put_many(PENDING_QUEUE, payload)
+        self.svc.advance_seq(stage, (st.STAGE_SCHEDULING, st.STAGE_SCHEDULED),
+                             transact=False, sink=sink)
         # A stage whose every task was resumed completes immediately.
-        self._maybe_finalize_stage(pipe, stage)
+        self._maybe_finalize_stage(pipe, stage, sink=sink)
 
     # -- Dequeue ------------------------------------------------------------#
 
     def _dequeue_loop(self) -> None:
         while not self._stop.is_set():
+            msgs = self.broker.get_many(DONE_QUEUE, 256, timeout=None,
+                                        abort=self._stop)
+            if self._stop.is_set():
+                return
             if self.dequeue_crash_hook is not None:
                 self.dequeue_crash_hook()
-            msgs = self.broker.get_many(DONE_QUEUE, 256, timeout=0.05)
             if not msgs:
-                continue
+                continue  # kicked awake
+            self.dequeue_batches += 1
             t0 = time.perf_counter()
-            for tag, msg in msgs:
-                try:
-                    self._handle_completion(msg)
-                finally:
-                    self.broker.ack(DONE_QUEUE, tag)
+            done_tags = []
+            sink: List[Any] = []
+            exec_s = staging_s = 0.0
+            n_handled = 0
+            try:
+                for tag, msg in msgs:
+                    # tag first: a message that crashes the handler is acked
+                    # (dropped) rather than redelivered into a crash loop
+                    done_tags.append(tag)
+                    if self._handle_completion(msg, sink):
+                        exec_s += float(msg.get("execution_seconds", 0.0))
+                        staging_s += float(msg.get("staging_seconds", 0.0))
+                        n_handled += 1
+            finally:
+                self.svc.flush(sink)
+                # one lock round for the whole batch; a crash mid-batch
+                # leaves only the untouched suffix for redelivery
+                self.broker.ack_many(DONE_QUEUE, done_tags)
+            if n_handled:
+                # per-batch accumulation: Profiler.add takes a global lock
+                self.prof.add(TASK_EXECUTION, exec_s, count=n_handled)
+                self.prof.add(DATA_STAGING, staging_s, count=n_handled)
             self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
 
-    def _handle_completion(self, msg: Dict[str, Any]) -> None:
+    def _handle_completion(self, msg: Dict[str, Any],
+                           sink: Optional[List[Any]] = None) -> bool:
+        """Process one completion; returns False for filtered duplicates
+        (the caller accounts execution/staging time for handled ones)."""
         uid = msg["uid"]
-        task = self.task_index.get(uid)
+        task, stage, pipe = self.index.route(uid)
         if task is None or task.is_final:
-            return  # duplicate (e.g. the losing speculative attempt)
+            return False  # duplicate (e.g. the losing speculative attempt)
         task.exit_code = msg.get("exit_code")
         task.exception = msg.get("exception")
         task.result = msg.get("result")
         task.completed_at = msg.get("completed_at")
-        self.prof.add(TASK_EXECUTION, float(msg.get("execution_seconds", 0.0)))
-        self.prof.add(DATA_STAGING, float(msg.get("staging_seconds", 0.0)))
 
-        with self._lock:
+        with (pipe.lock if pipe is not None else self._lock):
+            if task.is_final:
+                return False  # canceled under the lock while we waited
+            failed = False
+            # the RTS callback no longer advances EXECUTED from the RTS's
+            # own thread (one less hot-path synchronization point); the
+            # completion chain is coalesced into a single published message
+            prefix = (st.EXECUTED,) if task.state == st.SUBMITTED else ()
             if msg.get("canceled") or msg.get("exit_code") == -2:
-                self.svc.advance(task, st.CANCELED)
+                self.svc.advance_seq(task, prefix + (st.CANCELED,), sink=sink)
             elif msg.get("exit_code") == 0:
-                self.svc.advance(task, st.DONE)
+                self.svc.advance_seq(task, prefix + (st.DONE,), sink=sink)
             else:
-                self.svc.advance(task, st.FAILED,
-                                 exc=str(msg.get("exception", ""))[:500])
+                exc = str(msg.get("exception", ""))[:500]
                 if task.retries < task.max_retries:
                     # resubmission path (paper: multiple attempts without
-                    # restarting completed tasks)
+                    # restarting completed tasks); the task stays pending in
+                    # its stage's countdown. The FAILED hop is published as
+                    # its own message — Journal.replay counts discrete
+                    # to=FAILED records to restore retry budgets on resume.
                     task.retries += 1
-                    self.svc.advance(task, st.SCHEDULING, transact=False,
-                                     retry=task.retries)
-                    self.svc.advance(task, st.SCHEDULED, transact=False)
+                    self.svc.advance_seq(task, prefix + (st.FAILED,),
+                                         exc=exc, sink=sink)
+                    self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
+                                         transact=False,
+                                         retry=task.retries, sink=sink)
+                    if sink is not None:
+                        self.svc.flush(sink)  # hand-off to the ExecManager
                     self.broker.put(PENDING_QUEUE, task.uid)
-                    return
-            stage = self._find_stage(task)
-            pipe = self._find_pipeline(task)
+                    return True
+                self.svc.advance_seq(task, prefix + (st.FAILED,), exc=exc,
+                                     sink=sink)
+                failed = True
             if stage is not None and pipe is not None:
-                self._maybe_finalize_stage(pipe, stage)
+                stage.note_task_final(failed)
+                if failed:
+                    pipe.note_task_failed()
+                self._maybe_finalize_stage(pipe, stage, sink=sink)
+        return True
 
     # -- stage / pipeline closure -----------------------------------------------#
 
-    def _find_stage(self, task: Task) -> Optional[Stage]:
-        pipe = self._find_pipeline(task)
-        if pipe is None:
-            return None
-        for s in pipe.stages:
-            if s.uid == task.parent_stage:
-                return s
-        return None
-
-    def _find_pipeline(self, task: Task) -> Optional[Pipeline]:
-        for p in self.pipelines:
-            if p.uid == task.parent_pipeline:
-                return p
-        return None
-
-    def _maybe_finalize_stage(self, pipe: Pipeline, stage: Stage) -> None:
+    def _maybe_finalize_stage(self, pipe: Pipeline, stage: Stage,
+                              sink: Optional[List[Any]] = None) -> None:
         if stage.state != st.STAGE_SCHEDULED:
             return
-        if not all(t.is_final for t in stage.tasks):
+        if stage.pending_tasks != 0:
             return
-        any_failed = any(t.state == st.FAILED for t in stage.tasks)
-        if any_failed and self.on_task_failure == "fail_stage":
-            self.svc.advance(stage, st.STAGE_FAILED)
+        if stage.failed_tasks and self.on_task_failure == "fail_stage":
+            self.svc.advance(stage, st.STAGE_FAILED, sink=sink)
             pipe.mark_stage_final(stage.uid)
-            self.svc.advance(pipe, st.PIPELINE_FAILED)
+            self._finalize_pipeline(pipe, failed=True, sink=sink)
             return
-        self.svc.advance(stage, st.STAGE_DONE)
+        self.svc.advance(stage, st.STAGE_DONE, sink=sink)
         pipe.mark_stage_final(stage.uid)
         if stage.post_exec is not None:
-            # adaptivity: the hook may append stages to the pipeline
+            # adaptivity: the hook may append stages to the pipeline (the
+            # append listener marks it dirty for Enqueue)
             try:
                 stage.post_exec(stage, pipe)
             except Exception:  # noqa: BLE001 - user hook, never fatal
                 self.component_errors.append(
                     f"post_exec[{stage.uid}]: {traceback.format_exc(limit=5)}")
-        if pipe.completed and not pipe.is_final:
-            self._finalize_pipeline(pipe)
+        if pipe.completed:
+            if not pipe.is_final:
+                self._finalize_pipeline(pipe, sink=sink)
+        else:
+            self._mark_dirty(pipe.uid)  # next stage is ready to schedule
 
-    def _finalize_pipeline(self, pipe: Pipeline) -> None:
-        any_failed = any(
-            t.state == st.FAILED for s in pipe.stages for t in s.tasks)
-        to = st.PIPELINE_FAILED if (any_failed and
-                                    self.on_task_failure == "fail_stage") \
-            else st.PIPELINE_DONE
-        if pipe.state == st.PIPELINE_INITIAL:
-            self.svc.advance(pipe, st.PIPELINE_SCHEDULING, transact=False)
-        self.svc.advance(pipe, to)
+    def _finalize_pipeline(self, pipe: Pipeline,
+                           failed: Optional[bool] = None,
+                           sink: Optional[List[Any]] = None) -> None:
+        if failed is None:
+            failed = (pipe.failed_tasks > 0
+                      and self.on_task_failure == "fail_stage")
+        to = st.PIPELINE_FAILED if failed else st.PIPELINE_DONE
+        prefix = ((st.PIPELINE_SCHEDULING,)
+                  if pipe.state == st.PIPELINE_INITIAL else ())
+        self.svc.advance_seq(pipe, prefix + (to,), sink=sink)
+        with self._lock:  # closures arrive under different pipeline locks
+            self._open_pipelines -= 1
+            if self._open_pipelines <= 0:
+                self.done_event.set()

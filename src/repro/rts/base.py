@@ -60,6 +60,17 @@ class TaskCompletion:
 CompletionCallback = Callable[[TaskCompletion], None]
 
 
+class RequeueTask(Exception):
+    """Raised by an RTS-internal execution hook to return the task to the
+    runtime's queue instead of completing it (no completion is delivered,
+    the task's slots are released, and it is retried when capacity frees).
+
+    Used e.g. by the JaxRTS when a device lease would come up short: with
+    slot-aware submission the Emgr never over-submits, so a short lease is
+    a transient inventory race to retry — never a silent partial grant.
+    """
+
+
 class RTS(ABC):
     """Abstract runtime system.
 
@@ -102,10 +113,26 @@ class RTS(ABC):
     def in_flight(self) -> List[str]:
         """Uids submitted but not yet reported complete."""
 
+    # -- capacity (slot-aware submission) -------------------------------------#
+
+    def free_slots(self) -> Optional[int]:
+        """Slots not currently occupied by running tasks, or ``None`` when
+        the backend cannot (or should not) report wallclock capacity.
+
+        The ExecManager uses this to pack its submission backlog into the
+        pilot with largest-fit backfill instead of blind FIFO. Returning
+        ``None`` opts out: the Emgr then drains its backlog FIFO exactly as
+        the pre-slot-aware toolkit did. New RTS backends should implement
+        this whenever their slot occupancy is meaningful in wallclock time.
+        """
+        return None
+
     # -- elasticity (beyond paper: required for 1000+-node operation) ---------#
 
-    def resize(self, slots: int) -> None:  # pragma: no cover - optional
-        """Grow/shrink the pilot. Default: unsupported."""
+    def resize(self, slots: int) -> int:  # pragma: no cover - optional
+        """Grow/shrink the pilot; returns the slot count actually granted
+        (a backend may clamp, e.g. to its physical device inventory).
+        Default: unsupported."""
         raise NotImplementedError(f"{type(self).__name__} is not elastic")
 
     # -- callback plumbing ------------------------------------------------------#

@@ -6,6 +6,12 @@ scheduler with a device inventory: when a task starts it is leased a concrete
 set of devices, delivered to the task callable through the ``devices=``
 keyword (if accepted) so the callable can build its mesh / place its arrays.
 
+Leases are all-or-nothing: with slot-aware Emgr submission the toolkit never
+over-submits, so a lease that would come up short is a transient inventory
+race (e.g. an elastic resize beyond the physical pool), answered by
+re-queueing the task (:class:`~repro.rts.base.RequeueTask`) — never by
+silently granting fewer devices than ``task.slots``.
+
 On this CPU container the inventory is logical (``slot_oversubscribe``
 logical slots share the physical CPU device) — the accounting, leasing and
 isolation logic is identical to the pod case; only the device objects differ.
@@ -15,10 +21,11 @@ from __future__ import annotations
 
 import inspect
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.pst import Task
-from .base import Pilot, ResourceDescription
+from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
 
 
@@ -34,6 +41,7 @@ class JaxRTS(LocalRTS):
         self._pool: List[int] = []
         self._leases: Dict[str, List[int]] = {}
         self._pool_lock = threading.Lock()
+        self.lease_requeues = 0   # short-lease races answered by requeue
 
     def start(self, resources: ResourceDescription) -> Pilot:
         n_logical = len(self._devices) * self._oversubscribe
@@ -44,10 +52,50 @@ class JaxRTS(LocalRTS):
             self._leases = {}
         return super().start(resources)
 
+    def resize(self, slots: int) -> int:
+        # never grow past the physical inventory: slots without devices
+        # behind them would turn every lease into a requeue storm
+        slots = min(slots, len(self._devices) * self._oversubscribe)
+        return super().resize(slots)
+
+    def free_slots(self) -> Optional[int]:
+        """Devices actually leasable right now (inventory, not arithmetic)."""
+        with self._pool_lock:
+            return len(self._pool)
+
+    def submit(self, tasks: List[Task]) -> None:
+        """Reject tasks wider than the whole device inventory immediately:
+        they could never start (`_can_start` stays false forever), and
+        silently queueing them would hang the workflow until its timeout."""
+        inventory = len(self._devices) * self._oversubscribe
+        runnable: List[Task] = []
+        for task in tasks:
+            if task.slots > inventory:
+                now = time.time()
+                self._deliver(TaskCompletion(
+                    uid=task.uid, exit_code=2,
+                    exception=(f"task requires {task.slots} device slots, "
+                               f"inventory is {inventory}"),
+                    started_at=now, completed_at=now))
+            else:
+                runnable.append(task)
+        if runnable:
+            super().submit(runnable)
+
+    def _can_start(self, task: Task) -> bool:
+        with self._pool_lock:
+            return len(self._pool) >= task.slots
+
     def _lease(self, task: Task) -> List[Any]:
         with self._pool_lock:
-            ids = [self._pool.pop() for _ in range(min(task.slots,
-                                                       len(self._pool)))]
+            if len(self._pool) < task.slots:
+                # short lease: undo nothing, requeue the task — a partial
+                # device set would silently break the task's mesh
+                self.lease_requeues += 1
+                raise RequeueTask(
+                    f"{task.uid} needs {task.slots} device slots, "
+                    f"{len(self._pool)} in pool")
+            ids = [self._pool.pop() for _ in range(task.slots)]
             self._leases[task.uid] = ids
         return [self._devices[i % len(self._devices)] for i in ids]
 

@@ -26,7 +26,8 @@ from typing import Callable, Dict, List, Optional
 
 from ..core import uid as uidgen
 from ..core.pst import Task
-from .base import RTS, Pilot, ResourceDescription, TaskCompletion
+from .base import (RTS, Pilot, RequeueTask, ResourceDescription,
+                   TaskCompletion)
 
 
 class _Running:
@@ -116,7 +117,7 @@ class LocalRTS(RTS):
         return self._alive and (self._scheduler is not None
                                 and self._scheduler.is_alive())
 
-    def resize(self, slots: int) -> None:
+    def resize(self, slots: int) -> int:
         """Elastic pilot resize; queued work is rescheduled on the new size."""
         with self._work:
             delta = slots - self._slots_total
@@ -125,6 +126,7 @@ class LocalRTS(RTS):
             self._work.notify_all()
         if self.pilot is not None:
             self.pilot.description.slots = slots
+        return slots
 
     # -- execution ------------------------------------------------------------#
 
@@ -147,6 +149,11 @@ class LocalRTS(RTS):
         with self._lock:
             return [t.uid for t in self._queue] + list(self._running)
 
+    def free_slots(self) -> Optional[int]:
+        """Unoccupied slots (slot-aware Emgr submission)."""
+        with self._lock:
+            return max(0, self._slots_free)
+
     def running_since(self) -> Dict[str, float]:
         """uid -> seconds running (ExecManager straggler watchdog input)."""
         now = time.monotonic()
@@ -155,13 +162,18 @@ class LocalRTS(RTS):
 
     # -- internals ------------------------------------------------------------#
 
+    def _can_start(self, task: Task) -> bool:
+        """Subclass eligibility hook, checked beyond slot arithmetic (e.g.
+        the JaxRTS requires enough physical devices in its lease pool)."""
+        return True
+
     def _schedule_loop(self) -> None:
         while not self._stop.is_set():
             with self._work:
                 task = None
                 # FIFO with first-fit skip: find first task that fits free slots
                 for i, cand in enumerate(self._queue):
-                    if cand.slots <= self._slots_free:
+                    if cand.slots <= self._slots_free and self._can_start(cand):
                         task = cand
                         del self._queue[i]
                         break
@@ -187,6 +199,7 @@ class LocalRTS(RTS):
         staging_s = 0.0
         exit_code = 0
         result = None
+        requeue = False
         exc: Optional[str] = None
         try:
             if cancel_event.is_set():
@@ -202,11 +215,21 @@ class LocalRTS(RTS):
                     task, cancel_event, stall)
                 if exit_code == 0:
                     staging_s += self._stage(task.copy_output_data)
+        except RequeueTask:
+            # transient resource race (e.g. device-lease shortage): the task
+            # goes back in the queue and no completion is delivered
+            requeue = True
         except Exception:  # noqa: BLE001 - RTS must never crash on a task
             exit_code = 1
             exc = traceback.format_exc(limit=10)
         finally:
             self._release(task)
+        if requeue:
+            if not self._stop.is_set():
+                with self._work:
+                    self._queue.append(task)
+                    self._work.notify_all()
+            return
         self._deliver(TaskCompletion(
             uid=task.uid, exit_code=exit_code, result=result, exception=exc,
             started_at=started, completed_at=time.time(),

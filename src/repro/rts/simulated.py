@@ -105,11 +105,12 @@ class SimulatedRTS(RTS):
             return False
         return self._thread is not None and self._thread.is_alive()
 
-    def resize(self, slots: int) -> None:
+    def resize(self, slots: int) -> int:
         with self._cv:
             self._slots_free += slots - self._slots_total
             self._slots_total = slots
             self._cv.notify_all()
+        return slots
 
     # -- execution ------------------------------------------------------------#
 
@@ -135,6 +136,14 @@ class SimulatedRTS(RTS):
         with self._cv:
             return ([t.uid for t in self._pending_arrivals]
                     + [t.uid for t in self._waiting] + list(self._running))
+
+    def free_slots(self) -> Optional[int]:
+        """Opt out of slot-aware submission: slot occupancy here lives on
+        the *virtual* clock, so throttling wallclock submission against it
+        would only serialize arrivals and perturb the deterministic replay.
+        Returning None makes the Emgr drain FIFO, exactly like the paper's
+        measured EnTK (submit everything, let the pilot queue)."""
+        return None
 
     def drain(self, timeout: float = 60.0) -> bool:
         """Block until the simulation has no outstanding work (benchmarks)."""
@@ -216,8 +225,12 @@ class SimulatedRTS(RTS):
 
     def _try_start_locked(self) -> bool:
         started = False
+        if self._slots_free <= 0 or not self._waiting:
+            return started  # full pilot: don't scan the backlog at all
         i = 0
         while i < len(self._waiting):
+            if self._slots_free <= 0:
+                break
             task = self._waiting[i]
             if task.slots <= self._slots_free:
                 del self._waiting[i]

@@ -1,0 +1,51 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+``hypothesis`` is not part of the runtime dependency set, so a clean
+checkout must collect and pass without it (the tier-1 gate). Test modules
+import ``given``/``settings``/``strategies`` from here instead of from
+``hypothesis`` directly:
+
+* when hypothesis is installed (e.g. in CI), the real decorators are
+  re-exported and the property tests run normally;
+* when it is missing, the stand-ins turn each ``@given``-decorated test
+  into a skip (reported, not silently dropped), while every plain test in
+  the same module keeps running.
+
+This deliberately avoids ``pytest.importorskip("hypothesis")`` at module
+scope, which would skip the *whole* module including the non-property tests.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = _fn.__name__
+            _skipped.__doc__ = _fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Answers any ``st.<name>(...)`` with an inert placeholder."""
+
+        def __getattr__(self, _name):
+            def _strategy(*_args, **_kwargs):
+                return None
+            return _strategy
+
+    strategies = _StrategyStub()

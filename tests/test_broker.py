@@ -2,7 +2,7 @@
 
 import threading
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.broker import Broker
 

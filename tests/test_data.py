@@ -1,7 +1,7 @@
 """Data pipeline: determinism + shard-partition properties."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLMStream
 

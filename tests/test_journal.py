@@ -4,7 +4,7 @@ import json
 import os
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.exceptions import JournalCorruption
 from repro.core.journal import Journal

@@ -4,7 +4,7 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.pst import Task
 from repro.rts.base import ResourceDescription, TaskCompletion

@@ -1,0 +1,595 @@
+"""Event-driven scheduler core: O(1) routing, wakeups, slot-aware batching."""
+
+import threading
+import time
+
+from repro.core import AppManager, Pipeline, Stage, Task, WorkflowIndex
+from repro.core import states as st
+from repro.core.broker import Broker
+from repro.core.journal import Journal
+from repro.core.profiler import Profiler
+from repro.core.execmanager import ExecManager
+from repro.core.state_service import StateService
+from repro.core.synchronizer import Synchronizer
+from repro.core.wfprocessor import WFProcessor
+from repro.rts.base import RequeueTask, ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+from repro.rts.local import LocalRTS
+
+
+def _workflow(pipelines=1, stages=1, tasks=1, duration=0.01, retries=0,
+              prefix="sc"):
+    out = []
+    for p in range(pipelines):
+        pipe = Pipeline(f"{prefix}-pipe{p}")
+        for s in range(stages):
+            stg = Stage(f"{prefix}-p{p}s{s}")
+            stg.add_tasks([
+                Task(name=f"{prefix}-{p}-{s}-{t}",
+                     executable=f"sleep://{duration}", max_retries=retries)
+                for t in range(tasks)])
+            pipe.add_stages(stg)
+        out.append(pipe)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# WorkflowIndex: O(1) routing
+# --------------------------------------------------------------------------- #
+
+def test_workflow_index_routes_task_stage_pipeline():
+    idx = WorkflowIndex()
+    [pipe] = _workflow(1, 3, 4, prefix="idx")
+    idx.add_pipeline(pipe)
+    assert idx.npipelines == 1 and idx.nstages == 3 and idx.ntasks == 12
+    task = pipe.stages[1].tasks[2]
+    t, s, p = idx.route(task.uid)
+    assert t is task
+    assert s is pipe.stages[1]
+    assert p is pipe
+    assert idx.route("task.does-not-exist") == (None, None, None)
+
+
+def test_workflow_index_covers_runtime_appended_stages():
+    """Stages appended by post_exec at runtime must be routable too."""
+    seen = []
+
+    def post(stage, pipe):
+        seen.append(stage.name)
+        if len(seen) < 3:
+            nxt = Stage(f"idxgen{len(seen)}")
+            nxt.add_tasks(Task(name=f"idx-adapt-{len(seen)}",
+                               executable="sleep://0.01"))
+            nxt.post_exec = post
+            pipe.add_stages(nxt)
+
+    pipe = Pipeline("idx-adaptive")
+    s0 = Stage("idxgen0")
+    s0.add_tasks(Task(name="idx-adapt-0", executable="sleep://0.01"))
+    s0.post_exec = post
+    pipe.add_stages(s0)
+    amgr = AppManager(resources=ResourceDescription(slots=1))
+    amgr.workflow = [pipe]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    assert len(pipe.stages) == 3
+    for stage in pipe.stages:
+        for task in stage.tasks:
+            t, s, p = amgr.index.route(task.uid)
+            assert (t, s, p) == (task, stage, pipe)
+
+
+# --------------------------------------------------------------------------- #
+# Stage-closure counters
+# --------------------------------------------------------------------------- #
+
+class _Harness:
+    """A WFProcessor wired to a live Synchronizer but no Enqueue/Dequeue
+    threads, so completions can be driven by hand deterministically."""
+
+    def __init__(self, pipelines, on_task_failure="continue"):
+        self.broker = Broker()
+        self.svc = StateService(self.broker)
+        self.journal = Journal(None)
+        self.state_table = {}
+        self.sync = Synchronizer(self.broker, self.journal, self.state_table)
+        self.sync.start()
+        self.index = WorkflowIndex()
+        for p in pipelines:
+            self.index.add_pipeline(p)
+        self.wfp = WFProcessor(self.broker, self.svc, Profiler(), pipelines,
+                               self.index, on_task_failure=on_task_failure)
+
+    def submit_all(self, stage):
+        """Walk every scheduled task of a stage to the EXECUTED-ready state."""
+        for task in stage.tasks:
+            if task.state == st.SCHEDULED:
+                self.svc.advance(task, st.SUBMITTING, transact=False)
+                self.svc.advance(task, st.SUBMITTED, transact=False)
+
+    def complete(self, task, exit_code=0, canceled=False):
+        if task.state == st.SUBMITTED:
+            self.svc.advance(task, st.EXECUTED, transact=False)
+        self.wfp._handle_completion(
+            {"uid": task.uid, "exit_code": exit_code, "canceled": canceled})
+
+    def close(self):
+        self.sync.stop()
+
+
+def test_stage_counter_retry_keeps_task_pending():
+    [pipe] = _workflow(1, 1, 2, retries=2, prefix="cnt-retry")
+    h = _Harness([pipe])
+    try:
+        stage = pipe.stages[0]
+        h.wfp._schedule_pipeline(pipe)
+        assert stage.pending_tasks == 2
+        t0, t1 = stage.tasks
+        h.submit_all(stage)
+        h.complete(t0, exit_code=1)          # fails, retry budget left
+        assert t0.state == st.SCHEDULED      # resubmitted
+        assert stage.pending_tasks == 2      # still owed a final state
+        assert not stage.is_final
+        h.complete(t1, exit_code=0)
+        assert stage.pending_tasks == 1
+        # the retried task completes on its second attempt
+        h.svc.advance(t0, st.SUBMITTING, transact=False)
+        h.svc.advance(t0, st.SUBMITTED, transact=False)
+        h.complete(t0, exit_code=0)
+        assert stage.pending_tasks == 0
+        assert stage.state == st.STAGE_DONE
+        assert pipe.state == st.PIPELINE_DONE
+        assert h.wfp.done_event.is_set()
+    finally:
+        h.close()
+
+
+def test_stage_counter_terminal_failure_and_cancellation():
+    [pipe] = _workflow(1, 1, 3, retries=0, prefix="cnt-fail")
+    h = _Harness([pipe])
+    try:
+        stage = pipe.stages[0]
+        h.wfp._schedule_pipeline(pipe)
+        t0, t1, t2 = stage.tasks
+        h.submit_all(stage)
+        h.complete(t0, exit_code=1)          # terminal failure (no budget)
+        assert t0.state == st.FAILED
+        assert stage.pending_tasks == 2 and stage.failed_tasks == 1
+        assert pipe.failed_tasks == 1
+        h.complete(t1, exit_code=-2)         # canceled counts as final
+        assert t1.state == st.CANCELED
+        assert stage.pending_tasks == 1 and stage.failed_tasks == 1
+        h.complete(t2, exit_code=0)
+        assert stage.pending_tasks == 0
+        # continue policy: stage/pipeline close DONE despite the failure
+        assert stage.state == st.STAGE_DONE
+        assert pipe.state == st.PIPELINE_DONE
+    finally:
+        h.close()
+
+
+def test_stage_counter_ignores_speculative_duplicate_completions():
+    [pipe] = _workflow(1, 1, 2, prefix="cnt-dup")
+    h = _Harness([pipe])
+    try:
+        stage = pipe.stages[0]
+        h.wfp._schedule_pipeline(pipe)
+        t0, t1 = stage.tasks
+        h.submit_all(stage)
+        h.complete(t0, exit_code=0)
+        # duplicate completions (e.g. the losing speculative attempt) must
+        # not double-decrement the countdown or flip states
+        h.complete(t0, exit_code=1)
+        h.complete(t0, exit_code=-2)
+        assert t0.state == st.DONE
+        assert stage.pending_tasks == 1
+        assert not stage.is_final
+        h.complete(t1, exit_code=0)
+        assert stage.pending_tasks == 0
+        assert stage.state == st.STAGE_DONE
+    finally:
+        h.close()
+
+
+def test_fail_stage_policy_closes_pipeline_failed():
+    [pipe] = _workflow(1, 2, 1, prefix="cnt-failstage")
+    h = _Harness([pipe], on_task_failure="fail_stage")
+    try:
+        stage = pipe.stages[0]
+        h.wfp._schedule_pipeline(pipe)
+        h.submit_all(stage)
+        h.complete(stage.tasks[0], exit_code=1)
+        assert stage.state == st.STAGE_FAILED
+        assert pipe.state == st.PIPELINE_FAILED
+        assert h.wfp.done_event.is_set()
+        # the second stage was never scheduled
+        assert pipe.stages[1].state == st.STAGE_INITIAL
+    finally:
+        h.close()
+
+
+def test_journal_counts_each_retry_attempt(tmp_path):
+    """Resume restores retry budgets from discrete to=FAILED records; the
+    coalesced retry chain must not fold the FAILED hop into its tail."""
+    jp = str(tmp_path / "wal.jsonl")
+    attempts = {}
+
+    def fi(task):
+        attempts[task.name] = attempts.get(task.name, 0) + 1
+        return attempts[task.name] <= 2     # fail twice, succeed third
+
+    amgr = AppManager(resources=ResourceDescription(slots=1),
+                      journal_path=jp, flush_every=1,
+                      rts_factory=lambda: LocalRTS(fault_injector=fi))
+    pipe = Pipeline("jretry")
+    stg = Stage()
+    stg.add_tasks(Task(name="jr0", executable="sleep://0.01", max_retries=3))
+    pipe.add_stages(stg)
+    amgr.workflow = [pipe]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    replay = Journal.replay(jp)
+    assert replay["retries"].get("jr0", 0) == 2
+
+
+# --------------------------------------------------------------------------- #
+# Blocking broker / no busy-wait
+# --------------------------------------------------------------------------- #
+
+def test_broker_get_blocks_until_kick():
+    b = Broker()
+    b.declare("q")
+    out = {}
+
+    def consumer():
+        out["r"] = b.get("q", timeout=None)
+
+    t = threading.Thread(target=consumer, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    assert t.is_alive()          # blocked, no message
+    b.kick("q")
+    t.join(timeout=2)
+    assert not t.is_alive()
+    assert out["r"] is None      # woken without a message
+
+
+def test_broker_kick_is_latched_not_lost():
+    """A kick delivered while the consumer is busy (not blocked in get)
+    must be consumed by its NEXT get instead of being lost."""
+    b = Broker()
+    b.declare("q")
+    b.kick("q")                      # consumer is elsewhere right now
+    t0 = time.monotonic()
+    assert b.get("q", timeout=None) is None   # returns immediately
+    assert time.monotonic() - t0 < 0.5
+    # latch is consumed: a subsequent get blocks again until timeout
+    assert b.get("q", timeout=0.05) is None
+    assert b.depth("q") == 0
+
+
+def test_broker_get_aborts_on_event():
+    b = Broker()
+    b.declare("q")
+    ev = threading.Event()
+    ev.set()
+    t0 = time.monotonic()
+    assert b.get("q", timeout=None, abort=ev) is None
+    assert time.monotonic() - t0 < 0.5
+
+
+def test_idle_workflow_performs_zero_schedule_passes():
+    """The no-busy-wait contract: while a workflow merely waits on task
+    execution, Enqueue/Dequeue/Emgr perform zero loop iterations."""
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      heartbeat_interval=5.0)
+    amgr.workflow = _workflow(1, 1, 2, duration=0.9, prefix="idle")
+    counts = {}
+
+    def probe():
+        # sample twice while the sleep:// tasks are executing
+        time.sleep(0.25)
+        counts["first"] = (amgr.wfp.schedule_passes,
+                           amgr.wfp.dequeue_batches,
+                           amgr.emgr.emgr_wakeups)
+        time.sleep(0.45)
+        counts["second"] = (amgr.wfp.schedule_passes,
+                            amgr.wfp.dequeue_batches,
+                            amgr.emgr.emgr_wakeups)
+
+    t = threading.Thread(target=probe, daemon=True)
+    t.start()
+    amgr.run(timeout=30)
+    t.join(timeout=5)
+    assert amgr.all_done
+    assert counts["second"] == counts["first"]  # zero idle iterations
+    # total work is bounded by events, not by elapsed-time polling
+    assert amgr.wfp.schedule_passes <= 4
+    assert amgr.emgr.emgr_wakeups <= 8
+
+
+# --------------------------------------------------------------------------- #
+# Slot-aware submission
+# --------------------------------------------------------------------------- #
+
+class _RecordingRTS(LocalRTS):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.batches = []
+
+    def submit(self, tasks):
+        self.batches.append([t.slots for t in tasks])
+        super().submit(tasks)
+
+
+def test_emgr_never_oversubmits_beyond_free_slots():
+    rts_holder = {}
+
+    def factory():
+        rts_holder["rts"] = _RecordingRTS()
+        return rts_holder["rts"]
+
+    amgr = AppManager(resources=ResourceDescription(slots=4),
+                      rts_factory=factory, heartbeat_interval=5.0)
+    pipe = Pipeline("slots")
+    stg = Stage("slots-s0")
+    widths = [4, 1, 2, 1, 2, 1, 4, 1]
+    stg.add_tasks([Task(name=f"w{i}", executable="sleep://0.05", slots=w)
+                   for i, w in enumerate(widths)])
+    pipe.add_stages(stg)
+    amgr.workflow = [pipe]
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    for batch in rts_holder["rts"].batches:
+        assert sum(batch) <= 4, rts_holder["rts"].batches
+
+
+def _mk_emgr(slots=8, starvation_limit=3):
+    broker = Broker()
+    svc = StateService(broker)
+    index = WorkflowIndex()
+    return ExecManager(broker, svc, Profiler(), LocalRTS,
+                       ResourceDescription(slots=slots), index,
+                       starvation_limit=starvation_limit)
+
+
+def _backlog_tasks(emgr, widths):
+    from collections import deque
+    tasks = [Task(name=f"b{i}", executable="sleep://0", slots=w)
+             for i, w in enumerate(widths)]
+    for t in tasks:
+        emgr._backlog.setdefault(t.slots, deque()).append(
+            (next(emgr._backlog_seq), t))
+        emgr._backlog_uids.add(t.uid)
+    return tasks
+
+
+def _backlog_widths(emgr):
+    return sorted(w for w, dq in emgr._backlog.items() for _ in dq)
+
+
+def test_pick_batch_largest_fit_backfill():
+    emgr = _mk_emgr(slots=8)
+    tasks = _backlog_tasks(emgr, [3, 2, 2, 1])
+    batch = emgr._pick_batch_locked(4)
+    # largest-fit: the 3-wide head first, then the 1-wide backfills
+    assert [t.slots for t in batch] == [3, 1]
+    assert _backlog_widths(emgr) == [2, 2]
+    assert tasks[0] in batch
+
+
+def test_pick_batch_fifo_drain_when_capacity_unknown():
+    emgr = _mk_emgr(slots=8)
+    _backlog_tasks(emgr, [3, 2, 2, 1])
+    batch = emgr._pick_batch_locked(None)
+    assert [t.slots for t in batch] == [3, 2, 2, 1]   # FIFO, everything
+    assert not emgr._backlog and not emgr._backlog_uids
+
+
+def test_pick_batch_starvation_guard_blocks_younger_tasks():
+    """A wide head passed over too often freezes submission until it fits."""
+    emgr = _mk_emgr(slots=8, starvation_limit=3)
+    _backlog_tasks(emgr, [6])            # wide head
+    for round_no in range(3):
+        _backlog_tasks(emgr, [1])        # stream of narrow arrivals
+        batch = emgr._pick_batch_locked(2)   # head never fits in 2
+        assert [t.slots for t in batch] == [1], round_no
+    # limit reached: narrow tasks may no longer jump the queue
+    _backlog_tasks(emgr, [1, 1])
+    assert emgr._pick_batch_locked(2) == []
+    assert emgr._pick_batch_locked(5) == []
+    # once capacity drains enough for the head, it goes first
+    batch = emgr._pick_batch_locked(6)
+    assert batch[0].slots == 6
+    assert emgr._head_skips == 0
+
+
+def test_pick_batch_starved_head_goes_first_even_if_wider_fits():
+    """On the round a starved head fits, younger wider tasks that also fit
+    must not preempt it (the guard places the head before backfilling)."""
+    emgr = _mk_emgr(slots=8, starvation_limit=2)
+    _backlog_tasks(emgr, [4])                # head needs 4
+    for _ in range(2):
+        _backlog_tasks(emgr, [8])            # younger full-width stream
+        batch = emgr._pick_batch_locked(8)   # 8-wide wins the backfill
+        assert [t.slots for t in batch] == [8]
+    # limit reached and the head fits: head first, 8-wide must wait
+    _backlog_tasks(emgr, [8])
+    batch = emgr._pick_batch_locked(8)
+    assert batch[0].slots == 4
+    assert all(t.slots != 8 for t in batch)
+
+
+def test_pick_batch_impossible_head_is_handed_to_rts():
+    """A task wider than the whole idle pilot is submitted anyway: the RTS
+    (not the Emgr) owns the insufficient-resources error."""
+    emgr = _mk_emgr(slots=4)
+    _backlog_tasks(emgr, [9, 1])
+    batch = emgr._pick_batch_locked(4)   # pilot fully idle
+    assert [t.slots for t in batch] == [9]
+
+
+def test_heartbeat_and_watchdog_visible_in_threads_alive():
+    amgr = AppManager(resources=ResourceDescription(slots=2),
+                      straggler_factor=10.0, heartbeat_interval=0.1)
+    amgr.workflow = _workflow(1, 1, 2, duration=0.3, prefix="alive")
+    snapshot = {}
+
+    def probe():
+        time.sleep(0.15)
+        snapshot["alive"] = amgr.emgr.threads_alive()
+
+    t = threading.Thread(target=probe, daemon=True)
+    t.start()
+    amgr.run(timeout=30)
+    t.join(timeout=5)
+    assert snapshot["alive"] == {"emgr": True, "heartbeat": True,
+                                 "watchdog": True}
+
+
+# --------------------------------------------------------------------------- #
+# JaxRTS strict leases
+# --------------------------------------------------------------------------- #
+
+def test_jax_rts_rejects_task_wider_than_inventory():
+    """A task no lease could ever satisfy fails immediately (exit 2)
+    instead of sitting in the scheduler queue until the workflow times
+    out."""
+    rts = JaxRTS(devices=["d0", "d1"])
+    rts.start(ResourceDescription(slots=2))
+    done = []
+    ev = threading.Event()
+    rts.set_callback(lambda c: (done.append(c), ev.set()))
+    try:
+        rts.submit([Task(name="too-wide", executable="sleep://0", slots=16)])
+        assert ev.wait(5)
+        assert done[0].exit_code == 2
+        assert "inventory" in done[0].exception
+    finally:
+        rts.stop()
+
+
+def test_jax_rts_short_lease_raises_requeue():
+    rts = JaxRTS(devices=["d0", "d1"])
+    rts.start(ResourceDescription(slots=2))
+    try:
+        wide = Task(name="wide", executable="sleep://0", slots=3)
+        try:
+            rts._lease(wide)
+            raise AssertionError("short lease must not be granted")
+        except RequeueTask:
+            pass
+        assert rts.lease_requeues == 1
+        assert len(rts._pool) == 2           # nothing leaked from the pool
+    finally:
+        rts.stop()
+
+
+def test_jax_rts_requeues_then_completes_on_lease_race():
+    """A transient inventory shortage requeues the task instead of running
+    it with fewer devices; it completes once the pool refills."""
+    rts = JaxRTS(devices=["d0", "d1"])
+    rts._can_start = lambda task: True       # force the race window
+    rts.start(ResourceDescription(slots=2))
+    done = []
+    ev = threading.Event()
+    rts.set_callback(lambda c: (done.append(c), ev.set()))
+    with rts._pool_lock:
+        stolen = rts._pool.pop()             # inventory goes short
+    task = Task(name="mesh2", executable="sleep://0.01", slots=2)
+    rts.submit([task])
+    deadline = time.monotonic() + 3
+    while rts.lease_requeues == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert rts.lease_requeues >= 1
+    assert not done                          # no completion was fabricated
+    with rts._pool_lock:
+        rts._pool.append(stolen)             # inventory recovers
+    assert ev.wait(10)
+    rts.stop()
+    assert done[0].exit_code == 0
+
+
+def test_jax_rts_resize_clamped_to_inventory():
+    rts = JaxRTS(devices=["d0", "d1"], slot_oversubscribe=2)
+    rts.start(ResourceDescription(slots=4))
+    try:
+        assert rts.resize(64) == 4           # reports the granted count
+        assert rts.free_slots() == 4         # clamped to 2 devices × 2
+        assert rts._slots_total == 4
+    finally:
+        rts.stop()
+
+
+def test_emgr_resize_records_granted_not_requested():
+    """ExecManager.resources.slots must track what the RTS granted — an
+    unclamped value breaks the Emgr's pilot-idle starvation escape."""
+    broker = Broker()
+    svc = StateService(broker)
+    broker.declare("pending")
+    emgr = ExecManager(broker, svc, Profiler(),
+                       lambda: JaxRTS(devices=["d0", "d1"]),
+                       ResourceDescription(slots=2), WorkflowIndex())
+    emgr.acquire_resources()
+    try:
+        emgr.resize(64)
+        assert emgr.resources.slots == 2     # granted, not requested
+    finally:
+        emgr.release_resources()
+
+
+def test_schedule_stage_revisit_after_crash_is_idempotent():
+    """A crash between task advances and the stage advance must not
+    crash-loop the restarted Enqueue: the re-visit re-hands-off SCHEDULED
+    tasks without re-running their transition chain."""
+    [pipe] = _workflow(1, 1, 2, prefix="revisit")
+    h = _Harness([pipe])
+    try:
+        stage = pipe.stages[0]
+        t0, t1 = stage.tasks
+        # simulate the crash window: tasks advanced, stage still DESCRIBED
+        h.svc.advance_seq(t0, (st.SCHEDULING, st.SCHEDULED), transact=False)
+        assert stage.state == st.STAGE_INITIAL
+        h.wfp._schedule_pipeline(pipe)       # supervisor-restart re-visit
+        assert stage.state == st.STAGE_SCHEDULED
+        assert t0.state == st.SCHEDULED and t1.state == st.SCHEDULED
+        assert stage.pending_tasks == 2
+        # both tasks were handed off to the pending queue exactly once each
+        got = []
+        while True:
+            r = h.broker.get("pending", timeout=0)
+            if r is None:
+                break
+            got.append(r[1])
+        assert sorted(got) == sorted([t0.uid, t1.uid])
+    finally:
+        h.close()
+
+
+def test_canceled_backlog_task_never_submitted_and_completion_ignored():
+    """cancel() racing the Emgr/Dequeue: a task canceled while backlogged
+    is dropped (not submitted), and a late completion is a duplicate."""
+    [pipe] = _workflow(1, 1, 2, prefix="cxl")
+    h = _Harness([pipe])
+    try:
+        stage = pipe.stages[0]
+        t0, t1 = stage.tasks
+        h.wfp._schedule_pipeline(pipe)
+        emgr = ExecManager(h.broker, h.svc, Profiler(), LocalRTS,
+                           ResourceDescription(slots=2), h.index)
+        from collections import deque
+        for t in (t0, t1):
+            emgr._backlog.setdefault(t.slots, deque()).append(
+                (next(emgr._backlog_seq), t))
+            emgr._backlog_uids.add(t.uid)
+        with pipe.lock:
+            h.svc.advance(t0, st.CANCELED)   # user cancel mid-flight
+        batch = emgr._pick_batch_locked(2)
+        assert batch == [t1]                 # canceled task dropped
+        assert t0.uid not in emgr._backlog_uids
+        # a late RTS completion for the canceled task is a duplicate
+        assert h.wfp._handle_completion({"uid": t0.uid, "exit_code": 0}) \
+            is False
+        assert t0.state == st.CANCELED
+    finally:
+        h.close()

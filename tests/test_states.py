@@ -1,7 +1,7 @@
 """State-machine unit + property tests."""
 
 import pytest
-from hypothesis import given, strategies as st_
+from _hypothesis_compat import given, strategies as st_
 
 from repro.core import states as st
 from repro.core.exceptions import StateTransitionError
