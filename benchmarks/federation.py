@@ -1,0 +1,87 @@
+"""Federation throughput benchmark (`--only fed`).
+
+Three configurations over an embarrassingly-parallel load of fixed-duration
+tasks, LocalRTS members, wallclock measured:
+
+* ``1x4``       — one member, 4 slots (the single-pilot baseline),
+* ``4x4``       — four members × 4 slots (the fleet; ≥2× the baseline
+  throughput is the acceptance bar, ~4× expected),
+* ``4x4_kill1`` — the same fleet with one member killed mid-run: failover
+  cost shows up as the throughput gap to ``4x4``, and ``all_done`` proves
+  zero lost completions.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+
+def _run_config(shape: List[int], n_tasks: int, duration: float,
+                kill_member: Optional[int]) -> Dict[str, object]:
+    from repro.core import AppManager, Pipeline, Stage, Task
+    from repro.rts.base import ResourceDescription
+    from repro.rts.local import LocalRTS
+
+    rds = [ResourceDescription(slots=s, extra={"name": f"m{i}"})
+           for i, s in enumerate(shape)]
+    amgr = AppManager(resources=rds, rts_factory=LocalRTS,
+                      heartbeat_interval=0.05)
+    pipe = Pipeline("fed-bench")
+    stg = Stage("load")
+    tasks = [Task(name=f"fed-{i}", executable=f"sleep://{duration}")
+             for i in range(n_tasks)]
+    stg.add_tasks(tasks)
+    pipe.add_stages(stg)
+    amgr.workflow = [pipe]
+
+    if kill_member is not None:
+        # kill once ~25% of the load completed, so the member is guaranteed
+        # to die mid-run (a wallclock delay can miss a fast fleet entirely)
+        def kill() -> None:
+            deadline = time.monotonic() + 60
+            while time.monotonic() < deadline:
+                if sum(t.state == "DONE" for t in tasks) >= n_tasks // 4:
+                    break
+                time.sleep(0.01)
+            fed = amgr.emgr.rts if amgr.emgr is not None else None
+            if fed is not None and hasattr(fed, "members"):
+                fed.members[kill_member].rts.simulate_dead = True
+
+        threading.Thread(target=kill, daemon=True).start()
+
+    t0 = time.perf_counter()
+    amgr.run(timeout=300.0)
+    wall = time.perf_counter() - t0
+    fed = amgr.emgr.rts
+    return {
+        "members": len(shape),
+        "total_slots": sum(shape),
+        "n_tasks": n_tasks,
+        "wallclock_s": wall,
+        "tasks_per_s": n_tasks / wall,
+        "all_done": amgr.all_done,
+        "members_lost": getattr(fed, "members_lost", 0),
+        "pilot_lost_requeues": getattr(fed, "pilot_lost_requeues", 0),
+    }
+
+
+def run(quick: bool = False, n_tasks: Optional[int] = None,
+        duration: float = 0.1) -> List[Dict[str, object]]:
+    n = n_tasks if n_tasks is not None else (48 if quick else 96)
+    configs = [
+        ("1x4", [4], None),
+        ("4x4", [4, 4, 4, 4], None),
+        ("4x4_kill1", [4, 4, 4, 4], 1),
+    ]
+    rows = []
+    for name, shape, kill in configs:
+        r = _run_config(shape, n, duration, kill)
+        r["config"] = name
+        rows.append(r)
+    base = next(r for r in rows if r["config"] == "1x4")
+    for r in rows:
+        r["speedup_vs_1x4"] = (r["tasks_per_s"] / base["tasks_per_s"]
+                               if base["tasks_per_s"] else 0.0)
+    return rows

@@ -12,17 +12,25 @@ Usage::
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
     PYTHONPATH=src python -m benchmarks.run --only fig6,fig8
+    PYTHONPATH=src python -m benchmarks.run --json out.json   # CI artifact
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+# every emitted row, mirrored as dicts so --json can persist the run as a
+# machine-readable artifact (the CI uploads it per-PR)
+_ROWS: list = []
 
 
 def _row(name: str, us_per_call: float, **derived) -> None:
     dv = ";".join(f"{k}={v}" for k, v in derived.items())
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                  **derived})
     print(f"{name},{us_per_call:.3f},{dv}", flush=True)
 
 
@@ -129,6 +137,26 @@ def fig11_anen(quick: bool) -> None:
          repeats=len(rows))
 
 
+def fed_throughput(quick: bool) -> None:
+    from benchmarks import federation
+    rows = federation.run(quick)
+    for r in rows:
+        _row(f"fed_{r['config']}", 1e6 / max(1e-9, r["tasks_per_s"]),
+             members=r["members"], total_slots=r["total_slots"],
+             n_tasks=r["n_tasks"],
+             tasks_per_s=round(r["tasks_per_s"], 1),
+             speedup_vs_1x4=round(r["speedup_vs_1x4"], 2),
+             wallclock_s=round(r["wallclock_s"], 2),
+             members_lost=r["members_lost"],
+             pilot_lost_requeues=r["pilot_lost_requeues"],
+             all_done=r["all_done"])
+    # zero-lost-completions is the acceptance bar, not a statistic: a lost
+    # task must fail the bench (and with it the CI smoke job)
+    incomplete = [r["config"] for r in rows if not r["all_done"]]
+    if incomplete:
+        raise RuntimeError(f"federation lost completions in: {incomplete}")
+
+
 def roofline_table(quick: bool) -> None:
     import os
     from benchmarks import roofline
@@ -166,6 +194,7 @@ BENCHES = {
     "fig9": fig9_strong,
     "fig10": fig10_seismic,
     "fig11": fig11_anen,
+    "fed": fed_throughput,
     "roofline": roofline_table,
 }
 
@@ -175,6 +204,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write the rows as a JSON artifact")
     args = ap.parse_args()
     picks = [s for s in args.only.split(",") if s] or list(BENCHES)
     print("name,us_per_call,derived")
@@ -185,6 +216,18 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 - report, keep benching
             _row(f"{name}_ERROR", 0.0, error=f"{type(e).__name__}:{e}")
         sys.stderr.write(f"[bench] {name} took {time.time()-t0:.1f}s\n")
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump({"benchmarks": picks, "quick": args.quick,
+                       "rows": _ROWS}, fh, indent=2, default=str)
+        sys.stderr.write(f"[bench] wrote {len(_ROWS)} rows to "
+                         f"{args.json}\n")
+    errors = [r["name"] for r in _ROWS if r["name"].endswith("_ERROR")]
+    if errors:
+        # a crashed benchmark must fail the harness (the CI smoke job
+        # uploads the artifact either way, but goes red)
+        sys.stderr.write(f"[bench] FAILED: {errors}\n")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

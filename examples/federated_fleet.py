@@ -1,0 +1,101 @@
+"""Federated fleet: one workflow across heterogeneous pilots, with failover.
+
+A mixed fleet — a CPU pool (LocalRTS) plus a device pool (JaxRTS over the
+host's JAX devices) plus a spare CPU pool — serves one ensemble:
+
+* preprocessing tasks are free to run anywhere (least-loaded spill),
+* "train" tasks are pinned to the device pool with ``Task(backend="devices")``
+  (hard affinity: a device-shaped task must never land on a CPU pilot),
+* mid-run, the spare pool's pilot is killed: its in-flight tasks are
+  re-journaled as FAILED-with-requeue (no retry budget consumed) and finish
+  on the surviving members — zero lost completions.
+
+    PYTHONPATH=src python examples/federated_fleet.py
+"""
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import threading  # noqa: E402
+import time  # noqa: E402
+
+from repro.core import AppManager, Pipeline, Stage, Task  # noqa: E402
+from repro.core.pst import register_executable  # noqa: E402
+from repro.rts.base import ResourceDescription  # noqa: E402
+from repro.rts.jax_rts import JaxRTS  # noqa: E402
+from repro.rts.local import LocalRTS  # noqa: E402
+
+
+def train_step(shard, devices=None):
+    """A stand-in jitted step; the JaxRTS leases it real device objects."""
+    time.sleep(0.05)
+    return {"shard": shard, "devices": [str(d) for d in (devices or [])]}
+
+
+def main() -> None:
+    register_executable("train_step", train_step)
+
+    # --- the fleet: three differently-shaped pilots --------------------- #
+    resources = [
+        ResourceDescription(slots=4, extra={"name": "cpu"}),
+        ResourceDescription(slots=2, extra={"name": "devices"}),
+        ResourceDescription(slots=2, extra={"name": "spare"}),
+    ]
+    factories = [
+        LocalRTS,
+        lambda: JaxRTS(slot_oversubscribe=2),  # host devices, 2× logical
+        LocalRTS,
+    ]
+
+    # --- the workflow: spill-anywhere prep, device-pinned training ------ #
+    pipe = Pipeline("fleet")
+    prep = Stage("prep")
+    prep.add_tasks([Task(name=f"prep-{i}", executable="sleep://0.2")
+                    for i in range(16)])
+    train = Stage("train")
+    train.add_tasks([Task(name=f"train-{i}", executable="reg://train_step",
+                          args=(i,), backend="devices")
+                     for i in range(4)])
+    pipe.add_stages([prep, train])
+
+    amgr = AppManager(resources=resources, rts_factory=factories,
+                      heartbeat_interval=0.1)
+    amgr.workflow = [pipe]
+
+    # --- kill the spare pool mid-run: failover, not failure ------------- #
+    def kill_spare():
+        # wait for the fleet to be live (JAX device init can take a while)
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            fed = amgr.emgr.rts if amgr.emgr is not None else None
+            if (fed is not None and getattr(fed, "_started", False)
+                    and fed.members[2].rts is not None):
+                break
+            time.sleep(0.02)
+        else:
+            return
+        time.sleep(0.25)
+        fed.members[2].rts.simulate_dead = True
+        print("!! spare pool pilot killed mid-run")
+
+    threading.Thread(target=kill_spare, daemon=True).start()
+
+    amgr.run(timeout=120)
+    fed = amgr.emgr.rts
+
+    print(f"all tasks DONE: {amgr.all_done}")
+    print(f"fleet: {[(m.name, m.granted) for m in fed.members]}")
+    print(f"members lost: {fed.members_lost}, "
+          f"tasks failed over: {fed.pilot_lost_requeues}, "
+          f"re-admitted: {fed.members_readmitted}")
+    for m in fed.members:
+        print(f"  {m.name:8s} executed {m.tasks_run} task attempts")
+    done = [t for t in pipe.stages[1].tasks]
+    print(f"train results on devices: "
+          f"{[t.result['devices'] for t in done if t.result]}")
+
+
+if __name__ == "__main__":
+    main()

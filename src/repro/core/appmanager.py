@@ -19,6 +19,7 @@ resizing, straggler speculation (see ExecManager), pluggable RTS factories.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
 import time
@@ -35,6 +36,7 @@ from .state_service import StateService
 from .synchronizer import Synchronizer
 from .wfprocessor import WFProcessor
 from ..rts.base import RTS, ResourceDescription
+from ..rts.federation import FederatedRTS, MemberSpec
 from ..rts.local import LocalRTS
 
 
@@ -49,12 +51,24 @@ class AppManager:
 
     ``rts_factory`` defaults to :class:`LocalRTS`. ``journal_path`` enables
     durable transactions and resume.
+
+    **Multi-resource (federated) runs**: pass a *list* of resource
+    descriptions — one per pilot — and, optionally, a matching list of RTS
+    factories (a single factory is reused for every member). The AppManager
+    then drives a :class:`~repro.rts.federation.FederatedRTS` over the whole
+    fleet: one workflow spans every pilot, tasks optionally pin to a member
+    through ``Task.backend`` (member names come from
+    ``description.extra['name']``, defaulting to ``member<i>``), and a pilot
+    that dies mid-run fails over onto the surviving members.
+    ``member_restarts`` budgets rebuilding a dead member from its factory.
     """
 
     def __init__(
         self,
-        resources: Optional[ResourceDescription] = None,
-        rts_factory: Optional[Callable[[], RTS]] = None,
+        resources: Optional[Union[ResourceDescription,
+                                  List[ResourceDescription]]] = None,
+        rts_factory: Optional[Union[Callable[[], RTS],
+                                    List[Callable[[], RTS]]]] = None,
         journal_path: Optional[str] = None,
         strict_transactions: bool = False,
         on_task_failure: str = "continue",
@@ -63,9 +77,27 @@ class AppManager:
         straggler_factor: float = 0.0,
         component_supervision: bool = True,
         flush_every: int = 32,
+        member_restarts: int = 0,
     ) -> None:
-        self.resources = resources or ResourceDescription(slots=4)
-        self.rts_factory = rts_factory or LocalRTS
+        if isinstance(resources, (list, tuple)):
+            specs = self._member_specs(list(resources), rts_factory)
+            self.resources = ResourceDescription(
+                slots=sum(rd.slots for rd in resources),
+                platform="federated")
+            self.rts_factory = lambda: FederatedRTS(
+                specs, heartbeat_interval=heartbeat_interval,
+                member_restarts=member_restarts)
+        else:
+            if isinstance(rts_factory, (list, tuple)):
+                raise ValueError_(
+                    "a list of rts factories requires a matching list of "
+                    "resource descriptions")
+            rd = resources or ResourceDescription(slots=4)
+            # own copy: the toolkit records granted-not-requested capacity
+            # into its description (acquire/resize), and that bookkeeping
+            # must never write through into the caller's object
+            self.resources = dataclasses.replace(rd, extra=dict(rd.extra))
+            self.rts_factory = rts_factory or LocalRTS
         self.journal_path = journal_path
         self.strict_transactions = strict_transactions
         self.on_task_failure = on_task_failure
@@ -92,6 +124,33 @@ class AppManager:
         self._stop = threading.Event()
         self.component_restarts = 0
         self._terminated = False
+
+    @staticmethod
+    def _member_specs(
+        rds: List[ResourceDescription],
+        rts_factory: Optional[Union[Callable[[], RTS],
+                                    List[Callable[[], RTS]]]],
+    ) -> List[MemberSpec]:
+        if not rds:
+            raise ValueError_("multi-resource run requires >= 1 description")
+        if isinstance(rts_factory, (list, tuple)):
+            factories = list(rts_factory)
+            if len(factories) != len(rds):
+                raise ValueError_(
+                    f"{len(rds)} resource descriptions but "
+                    f"{len(factories)} rts factories")
+        else:
+            factories = [rts_factory or LocalRTS] * len(rds)
+        specs = []
+        for i, (rd, factory) in enumerate(zip(rds, factories)):
+            name = str(rd.extra.get("name", f"member{i}"))
+            specs.append(MemberSpec(name=name, factory=factory, resources=rd))
+        names = [s.name for s in specs]
+        if len(names) != len(set(names)):
+            # fail fast at construction — the FederatedRTS factory would
+            # only surface this at resource-acquisition time
+            raise ValueError_(f"duplicate federation member names: {names}")
+        return specs
 
     # -- workflow handling -----------------------------------------------------#
 

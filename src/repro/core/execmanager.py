@@ -105,7 +105,25 @@ class ExecManager:
         with self.prof.measure(RTS_OVERHEAD):
             self.rts = self.rts_factory()
             self.rts.set_callback(self._rts_callback)
-            self.rts.start(self.resources)
+            if hasattr(self.rts, "set_capacity_callback"):
+                # federation: member re-admission announces new capacity so
+                # the backlog re-evaluates without polling
+                self.rts.set_capacity_callback(self._on_capacity_change)
+            pilot = self.rts.start(self.resources)
+            # Record granted-not-requested: a backend may clamp (JaxRTS:
+            # device inventory; federation: aggregate of member grants) and
+            # reports the granted count through the pilot description instead
+            # of mutating the caller's ResourceDescription in place.
+            granted = getattr(getattr(pilot, "description", None), "slots",
+                              None)
+            if isinstance(granted, int) and granted > 0:
+                self.resources.slots = granted
+
+    def _on_capacity_change(self) -> None:
+        # same contract as the completion kick: only wake the Emgr when it
+        # actually holds tasks back for capacity
+        if self._backlog:
+            self.broker.kick(PENDING_QUEUE)
 
     def release_resources(self) -> None:
         if self.rts is not None:
@@ -207,18 +225,41 @@ class ExecManager:
             self._submit_ready()
 
     def _submit_ready(self) -> None:
-        """Pack backlog tasks into the RTS's free slots and submit them."""
+        """Pack backlog tasks into the RTS's free slots and submit them.
+
+        Against a federated RTS (one exposing :meth:`member_slots`) the
+        packer is placement-aware: largest-fit backfill *within* each member,
+        least-loaded spill *across* members, hard ``task.backend`` affinity,
+        and the starvation guard preserved federation-wide. Each placed task
+        carries its member in ``task.tags['_fed_member']`` so the federation
+        routes it without re-deciding."""
         rts = self.rts
         if rts is None:
             return
-        try:
-            free = rts.free_slots()
-        except Exception:  # noqa: BLE001 - a dying RTS: heartbeat handles it
-            return
-        with self._lock:
-            batch = self._pick_batch_locked(free)
-            for task in batch:
-                self._submitted[task.uid] = task
+        member_slots = getattr(rts, "member_slots", None)
+        if member_slots is not None:
+            try:
+                slots_map = member_slots()
+            except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
+                return
+            known = getattr(rts, "member_names", lambda: list(slots_map))()
+            with self._lock:
+                placements = self._pick_batch_federated_locked(
+                    slots_map, set(known))
+                batch = []
+                for name, task in placements:
+                    task.tags["_fed_member"] = name
+                    self._submitted[task.uid] = task
+                    batch.append(task)
+        else:
+            try:
+                free = rts.free_slots()
+            except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
+                return
+            with self._lock:
+                batch = self._pick_batch_locked(free)
+                for task in batch:
+                    self._submitted[task.uid] = task
         if not batch:
             return
         self.submit_rounds += 1
@@ -259,6 +300,15 @@ class ExecManager:
                 self._backlog_uids.discard(stale.uid)
             if not dq:
                 del self._backlog[width]
+
+    def _pop_head_locked(self, head: Task) -> None:
+        """Remove ``head`` from the front of its width bucket (it is always
+        a bucket front: heads are picked from fronts only)."""
+        dq = self._backlog[head.slots]
+        dq.popleft()
+        if not dq:
+            del self._backlog[head.slots]
+        self._backlog_uids.discard(head.uid)
 
     def _head_locked(self) -> Optional[Task]:
         """The globally oldest live backlog task (min seq over fronts)."""
@@ -316,20 +366,14 @@ class ExecManager:
             pilot_idle = free >= max(1, self.resources.slots)
             if pilot_idle and not self._submitted:
                 # the head can never fit: hand it over, let the RTS decide
-                self._backlog[head.slots].popleft()
-                if not self._backlog[head.slots]:
-                    del self._backlog[head.slots]
-                self._backlog_uids.discard(head.uid)
+                self._pop_head_locked(head)
                 self._head_skips = 0
                 return [head]
             if self._head_skips >= self.starvation_limit:
                 return []  # hold everything: drain until the head fits
         elif self._head_skips >= self.starvation_limit:
             # starved head goes first, then backfill with what still fits
-            self._backlog[head.slots].popleft()
-            if not self._backlog[head.slots]:
-                del self._backlog[head.slots]
-            self._backlog_uids.discard(head.uid)
+            self._pop_head_locked(head)
             batch.append(head)
             remaining -= head.slots
             self._head_skips = 0
@@ -344,6 +388,129 @@ class ExecManager:
         else:
             self._head_skips += 1
         return batch
+
+    def _pick_batch_federated_locked(
+            self, slots_map: Dict[str, "tuple[int, int]"],
+            known: set) -> List["tuple[str, Task]"]:
+        """Placement-aware backfill over a federation's members.
+
+        ``slots_map``: ``{member: (free, total)}`` for *active* members;
+        ``known``: every member name, active or quarantined. Returns
+        ``(member, task)`` placements.
+
+        Policy: hard ``task.backend`` affinity (a task pinned to a
+        quarantined member is *parked* — skipped without blocking its width
+        bucket or the starvation guard; a task pinned to a member the
+        federation has never heard of is forwarded anyway so the RTS can
+        reject it, mirroring the wide-head hand-over); otherwise largest-fit
+        backfill with least-loaded spill (most-free member that fits). The
+        starvation guard is federation-wide: the oldest placeable task is
+        the guard's head exactly as in the single-member packer.
+        """
+        self._prune_fronts_locked()
+        if not self._backlog:
+            return []
+        free = {n: f for n, (f, _t) in slots_map.items()}
+        totals = {n: t for n, (_f, t) in slots_map.items()}
+        placements: List["tuple[str, Task]"] = []
+
+        def eligible(task: Task) -> Optional[List[str]]:
+            """Members the task may run on; None ⇒ parked (member exists
+            but is quarantined); [] ⇒ unknown member, forward-and-reject."""
+            if task.backend is None:
+                return list(free)
+            if task.backend in free:
+                return [task.backend]
+            return None if task.backend in known else []
+
+        def try_place(task: Task) -> str:
+            names = eligible(task)
+            if names is None:
+                return "park"
+            if not names and task.backend is not None:
+                placements.append((task.backend, task))
+                return "placed"  # unknown member: the RTS owns the error
+            fits = [n for n in names if free[n] >= task.slots]
+            if not fits:
+                return "full"
+            pick = max(fits, key=lambda n: free[n])
+            free[pick] -= task.slots
+            placements.append((pick, task))
+            return "placed"
+
+        # federation-wide starvation head: oldest bucket-front that is not
+        # parked (a parked task cannot make progress, so it must not hold
+        # the rest of the fleet hostage through the guard)
+        head = None
+        for dq in self._backlog.values():
+            seq, task = dq[0]
+            if (task.backend is not None and task.backend not in free
+                    and task.backend in known):
+                continue
+            if head is None or seq < head[0]:
+                head = (seq, task)
+        if head is not None:
+            htask = head[1]
+            elig = eligible(htask) or []
+            fits_now = (htask.backend is not None
+                        and htask.backend not in known) or any(
+                            free[n] >= htask.slots for n in elig)
+            if not fits_now:
+                cap = [totals[n] for n in elig] or [0]
+                fed_idle = sum(free.values()) >= max(1, sum(totals.values()))
+                if (htask.slots > max(cap) and fed_idle
+                        and not self._submitted):
+                    # the head can never fit any member: hand it to the
+                    # largest eligible pilot, the RTS owns that error
+                    self._pop_head_locked(htask)
+                    self._head_skips = 0
+                    target = max(elig, key=lambda n: totals[n]) if elig \
+                        else htask.backend
+                    return [(target, htask)]
+                if self._head_skips >= self.starvation_limit:
+                    return []  # hold everything: drain until the head fits
+            elif self._head_skips >= self.starvation_limit:
+                # starved head goes first, then backfill with what still fits
+                self._pop_head_locked(htask)
+                try_place(htask)
+                self._head_skips = 0
+        for width in sorted(self._backlog, reverse=True):
+            self._take_federated_locked(width, try_place)
+        if not placements:
+            return []
+        if head is None or any(t.uid == head[1].uid for _, t in placements):
+            self._head_skips = 0
+        else:
+            self._head_skips += 1
+        return placements
+
+    def _take_federated_locked(self, width: int,
+                               try_place: Callable[[Task], str]) -> None:
+        """Scan one width bucket: place what fits, skip over parked tasks,
+        stop at the first task that is eligible but out of capacity (strict
+        FIFO within a width, exactly like the single-member packer)."""
+        dq = self._backlog.get(width)
+        if dq is None:
+            return
+        kept: Deque = deque()
+        while dq:
+            seq, task = dq.popleft()
+            if task.is_final:
+                self._backlog_uids.discard(task.uid)
+                continue
+            res = try_place(task)
+            if res == "placed":
+                self._backlog_uids.discard(task.uid)
+            elif res == "park":
+                kept.append((seq, task))
+            else:  # full
+                kept.append((seq, task))
+                kept.extend(dq)
+                dq.clear()
+        if kept:
+            self._backlog[width] = kept
+        else:
+            del self._backlog[width]
 
     def n_backlogged(self) -> int:
         with self._lock:
@@ -396,6 +563,7 @@ class ExecManager:
             "completed_at": c.completed_at,
             "execution_seconds": c.execution_seconds,
             "staging_seconds": c.staging_seconds,
+            "pilot_lost": getattr(c, "pilot_lost", False),
         })
         # capacity freed: wake the Emgr — but only when it actually holds
         # tasks back for slots (unconditional kicks would wake it once per
@@ -495,12 +663,17 @@ class ExecManager:
 
     @staticmethod
     def _clone_for_speculation(task: Task) -> Task:
+        # drop the federation placement hint: the clone should be free to
+        # land on a different (less loaded / healthier) member than the
+        # straggling original; the affinity constraint itself is kept
+        tags = {k: v for k, v in task.tags.items() if k != "_fed_member"}
         clone = Task(
             name=f"{task.name}#spec",
             executable=task._fn if task._fn is not None else task.executable,
             args=task.args, kwargs=task.kwargs, slots=task.slots,
             duration_hint=task.duration_hint,
-            tags={**task.tags, "speculative_of": task.uid},
+            tags={**tags, "speculative_of": task.uid},
+            backend=task.backend,
         )
         return clone
 

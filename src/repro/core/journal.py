@@ -129,7 +129,12 @@ class Journal:
             if rec.get("rec") == "transition":
                 key = (rec["kind"], rec.get("name") or rec["uid"])
                 state[key] = rec["to"]
-                if rec["kind"] == "task" and rec["to"] == "FAILED":
+                # pilot_lost FAILED hops are infrastructure failures
+                # (federation member death): journaled for the audit trail,
+                # but they never consumed the task's retry budget, so they
+                # must not be restored into it on resume either
+                if (rec["kind"] == "task" and rec["to"] == "FAILED"
+                        and not rec.get("pilot_lost")):
                     retries[key[1]] = retries.get(key[1], 0) + 1
             elif rec.get("rec") == "session":
                 sessions.append(rec)

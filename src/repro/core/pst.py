@@ -69,14 +69,20 @@ class Task:
     ``slots`` expresses the resource requirement in device-slots (the paper's
     cores-per-task, our TPU-devices-per-task). ``max_retries`` is the
     resubmission budget of the paper's failure model.
+
+    ``backend`` is an optional placement affinity for federated execution: the
+    name of the :class:`~repro.rts.federation.FederatedRTS` member the task
+    must run on (e.g. a device pool vs a CPU pool in one mixed fleet). Unset
+    means the task may run on any member (least-loaded spill).
     """
 
     __slots__ = (
         "uid", "name", "executable", "args", "kwargs", "slots",
         "duration_hint", "max_retries", "retries", "state", "state_history",
         "exit_code", "result", "exception", "upload_input_data",
-        "copy_input_data", "copy_output_data", "tags", "parent_stage",
-        "parent_pipeline", "submitted_at", "completed_at", "_fn",
+        "copy_input_data", "copy_output_data", "tags", "backend",
+        "parent_stage", "parent_pipeline", "submitted_at", "completed_at",
+        "_fn",
     )
 
     def __init__(
@@ -92,6 +98,7 @@ class Task:
         copy_input_data: Optional[List[str]] = None,
         copy_output_data: Optional[List[str]] = None,
         tags: Optional[Dict[str, Any]] = None,
+        backend: Optional[str] = None,
     ) -> None:
         if not isinstance(slots, int) or slots < 1:
             raise ValueError_(f"task slots must be a positive int, got {slots!r}")
@@ -123,6 +130,7 @@ class Task:
         self.copy_input_data = list(copy_input_data or [])
         self.copy_output_data = list(copy_output_data or [])
         self.tags = dict(tags or {})
+        self.backend = backend
         self.parent_stage: Optional[str] = None
         self.parent_pipeline: Optional[str] = None
         self.submitted_at: Optional[float] = None
@@ -172,6 +180,7 @@ class Task:
             "copy_input_data": self.copy_input_data,
             "copy_output_data": self.copy_output_data,
             "tags": self.tags,
+            "backend": self.backend,
             "parent_stage": self.parent_stage,
             "parent_pipeline": self.parent_pipeline,
         }
@@ -198,6 +207,7 @@ class Task:
         t.copy_input_data = list(d.get("copy_input_data", ()))
         t.copy_output_data = list(d.get("copy_output_data", ()))
         t.tags = dict(d.get("tags", {}))
+        t.backend = d.get("backend")
         t.parent_stage = d.get("parent_stage")
         t.parent_pipeline = d.get("parent_pipeline")
         t.submitted_at = None

@@ -333,6 +333,22 @@ class WFProcessor:
             # own thread (one less hot-path synchronization point); the
             # completion chain is coalesced into a single published message
             prefix = (st.EXECUTED,) if task.state == st.SUBMITTED else ()
+            if msg.get("pilot_lost"):
+                # The pilot executing the task died (federation member
+                # failover) — an infrastructure failure, not a task failure.
+                # Re-journal FAILED (marked ``pilot_lost`` so resume does not
+                # charge it against the retry budget) and requeue
+                # unconditionally onto the surviving members: failover must
+                # lose zero completions even for max_retries=0 tasks.
+                exc = str(msg.get("exception", ""))[:500]
+                self.svc.advance_seq(task, prefix + (st.FAILED,), exc=exc,
+                                     pilot_lost=True, sink=sink)
+                self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
+                                     transact=False, sink=sink)
+                if sink is not None:
+                    self.svc.flush(sink)  # hand-off to the ExecManager
+                self.broker.put(PENDING_QUEUE, task.uid)
+                return True
             if msg.get("canceled") or msg.get("exit_code") == -2:
                 self.svc.advance_seq(task, prefix + (st.CANCELED,), sink=sink)
             elif msg.get("exit_code") == 0:

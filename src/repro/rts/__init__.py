@@ -13,11 +13,15 @@ package provides the RTS interface plus four implementations:
   devices with device leasing (the production path on a pod). The multi-pod
   dry-run reuses it with ``reg://compile_cell`` tasks — compiling *is* the
   task, so no dedicated dry-run RTS is needed.
+* :class:`repro.rts.federation.FederatedRTS` — N heterogeneous member pilots
+  (any mix of the above) behind one RTS interface: placement-aware packing,
+  member-level heartbeat, pilot failover with quarantine/re-admission.
 """
 
 from .base import RTS, Pilot, ResourceDescription, TaskCompletion  # noqa: F401
+from .federation import FederatedRTS, MemberSpec  # noqa: F401
 from .local import LocalRTS  # noqa: F401
 from .simulated import SimulatedRTS  # noqa: F401
 
 __all__ = ["RTS", "Pilot", "ResourceDescription", "TaskCompletion",
-           "LocalRTS", "SimulatedRTS"]
+           "LocalRTS", "SimulatedRTS", "FederatedRTS", "MemberSpec"]

@@ -45,7 +45,13 @@ class Pilot:
 
 @dataclasses.dataclass
 class TaskCompletion:
-    """Completion event delivered by the RTS callback."""
+    """Completion event delivered by the RTS callback.
+
+    ``pilot_lost`` marks a *synthetic* completion fabricated because the
+    pilot executing the task died (federation member failover): the task
+    itself did not fail, so the WFProcessor re-journals it as FAILED with an
+    unconditional requeue that does not consume the task's retry budget.
+    """
 
     uid: str
     exit_code: int
@@ -55,6 +61,7 @@ class TaskCompletion:
     completed_at: float = 0.0
     staging_seconds: float = 0.0
     execution_seconds: float = 0.0
+    pilot_lost: bool = False
 
 
 CompletionCallback = Callable[[TaskCompletion], None]

@@ -19,6 +19,7 @@ isolation logic is identical to the pod case; only the device objects differ.
 
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import threading
 import time
@@ -46,7 +47,11 @@ class JaxRTS(LocalRTS):
     def start(self, resources: ResourceDescription) -> Pilot:
         n_logical = len(self._devices) * self._oversubscribe
         if resources.slots > n_logical:
-            resources.slots = n_logical  # clamp to inventory
+            # clamp a COPY to the inventory: the caller's description must
+            # not be mutated; the granted count is reported through the
+            # returned pilot's description (the Emgr records it from there)
+            resources = dataclasses.replace(resources, slots=n_logical,
+                                            extra=dict(resources.extra))
         with self._pool_lock:
             self._pool = list(range(n_logical))
             self._leases = {}

@@ -1,0 +1,344 @@
+"""Federation layer: heterogeneous multi-pilot execution, placement,
+pilot failover (quarantine / re-admission / member restart), and the
+granted-not-requested ResourceDescription contract."""
+
+import threading
+import time
+
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.core import states as st
+from repro.core.journal import Journal
+from repro.rts.base import ResourceDescription
+from repro.rts.federation import FederatedRTS, MemberSpec
+from repro.rts.jax_rts import JaxRTS
+from repro.rts.local import LocalRTS
+
+
+def _flat(amgr):
+    return [t for p in amgr.workflow for s in p.stages for t in s.tasks]
+
+
+def _stage_of(tasks, name="s0"):
+    stg = Stage(name)
+    stg.add_tasks(tasks)
+    pipe = Pipeline(f"p-{name}")
+    pipe.add_stages(stg)
+    return pipe
+
+
+def _recorder(ran, name):
+    def fi(task):
+        ran.setdefault(name, []).append(task.name)
+        return False
+    return fi
+
+
+# --------------------------------------------------------------------------- #
+# Basic federation
+# --------------------------------------------------------------------------- #
+
+def test_federated_run_distributes_across_members():
+    ran = {}
+    rds = [ResourceDescription(slots=2, extra={"name": f"m{i}"})
+           for i in range(4)]
+    facts = [lambda n=f"m{i}": LocalRTS(fault_injector=_recorder(ran, n))
+             for i in range(4)]
+    amgr = AppManager(resources=rds, rts_factory=facts,
+                      heartbeat_interval=0.2)
+    amgr.workflow = [_stage_of([Task(name=f"d{i}", executable="sleep://0.05")
+                                for i in range(16)])]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    # least-loaded spill: with 16 × 50 ms tasks on 4 × 2 slots, every member
+    # must have executed some of the load
+    assert len(ran) == 4, ran
+    assert sum(len(v) for v in ran.values()) == 16
+    # the Emgr records the aggregate granted capacity
+    assert amgr.resources.slots == 8
+
+
+def test_federated_free_slot_aggregation():
+    specs = [MemberSpec("a", LocalRTS, ResourceDescription(slots=2)),
+             MemberSpec("b", LocalRTS, ResourceDescription(slots=3))]
+    fed = FederatedRTS(specs, heartbeat_interval=5.0)
+    fed.start(ResourceDescription(slots=0))
+    try:
+        assert fed.free_slots() == 5
+        assert fed.member_slots() == {"a": (2, 2), "b": (3, 3)}
+        assert sorted(fed.member_names()) == ["a", "b"]
+        done = threading.Event()
+        fed.set_callback(lambda c: done.set())
+        task = Task(name="wide", executable="sleep://0.3", slots=2,
+                    backend="a")
+        fed.submit([task])
+        deadline = time.monotonic() + 5
+        while fed.member_slots()["a"][0] != 0 \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert fed.member_slots()["a"] == (0, 2)   # occupied on a only
+        assert fed.member_slots()["b"] == (3, 3)
+        assert task.uid in fed.in_flight()
+        assert done.wait(5)
+    finally:
+        fed.stop()
+
+
+def test_spill_placement_is_slot_aware():
+    """Untagged spill must respect task width: a wide task goes to the
+    member that can actually run it, not to whichever has the most free
+    slots right now."""
+    specs = [MemberSpec("narrow", LocalRTS, ResourceDescription(slots=2)),
+             MemberSpec("wide", LocalRTS, ResourceDescription(slots=4))]
+    fed = FederatedRTS(specs, heartbeat_interval=5.0)
+    fed.start(ResourceDescription(slots=0))
+    try:
+        done = []
+        ev = threading.Event()
+        fed.set_callback(lambda c: (done.append(c), ev.set()))
+        # occupy the wide member so 'narrow' reports the most free slots...
+        blocker = Task(name="blocker", executable="sleep://0.4", slots=3,
+                       backend="wide")
+        fed.submit([blocker])
+        deadline = time.monotonic() + 5
+        while fed.member_slots()["wide"][0] != 1 \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        # ...then submit an untagged 3-slot task: it can only ever run on
+        # 'wide' (narrow's whole pilot is 2 slots), so it must queue there
+        wide_task = Task(name="w3", executable="sleep://0.01", slots=3)
+        fed.submit([wide_task])
+        with fed._lock:
+            owner = fed._owner[wide_task.uid].name
+        assert owner == "wide"
+        deadline = time.monotonic() + 10
+        while len(done) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert {c.uid for c in done} == {blocker.uid, wide_task.uid}
+        assert all(c.exit_code == 0 for c in done)
+    finally:
+        fed.stop()
+
+
+def test_backend_affinity_is_hard():
+    """Tasks pinned to the device member never spill to the CPU member."""
+    ran = {}
+    rds = [ResourceDescription(slots=2, extra={"name": "cpu"}),
+           ResourceDescription(slots=2, extra={"name": "acc"})]
+    facts = [lambda: LocalRTS(fault_injector=_recorder(ran, "cpu")),
+             lambda: JaxRTS(devices=["d0", "d1"],
+                            fault_injector=_recorder(ran, "acc"))]
+    amgr = AppManager(resources=rds, rts_factory=facts,
+                      heartbeat_interval=0.2)
+    acc_tasks = [Task(name=f"a{i}", executable="sleep://0.05", backend="acc")
+                 for i in range(4)]
+    free_tasks = [Task(name=f"f{i}", executable="sleep://0.05")
+                  for i in range(4)]
+    amgr.workflow = [_stage_of(acc_tasks + free_tasks)]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    assert {n for n in ran.get("cpu", [])}.isdisjoint(
+        {t.name for t in acc_tasks}), ran
+    assert {t.name for t in acc_tasks} <= set(ran.get("acc", [])), ran
+
+
+def test_unknown_affinity_member_fails_fast():
+    """A task pinned to a member the federation has never heard of must
+    fail immediately (exit 2) instead of hanging the run to its timeout."""
+    rds = [ResourceDescription(slots=2, extra={"name": "only"})]
+    amgr = AppManager(resources=rds, heartbeat_interval=0.2)
+    amgr.workflow = [_stage_of(
+        [Task(name="ghost", executable="sleep://0.01", backend="nope"),
+         Task(name="fine", executable="sleep://0.01")])]
+    t0 = time.monotonic()
+    amgr.run(timeout=30)
+    assert time.monotonic() - t0 < 10
+    states = amgr.states_of(["ghost", "fine"])
+    assert states["ghost"] == st.FAILED
+    assert states["fine"] == st.DONE
+    [ghost] = [t for t in _flat(amgr) if t.name == "ghost"]
+    assert "unknown federation member" in (ghost.exception or "")
+
+
+# --------------------------------------------------------------------------- #
+# Failover
+# --------------------------------------------------------------------------- #
+
+def test_member_failover_zero_lost_completions():
+    """Kill one of four members mid-run: every task still reaches DONE, no
+    whole-RTS restart is triggered, and pilot failover never consumes the
+    tasks' own retry budgets (max_retries stays 0)."""
+    rds = [ResourceDescription(slots=2, extra={"name": f"m{i}"})
+           for i in range(4)]
+    amgr = AppManager(resources=rds, rts_factory=LocalRTS,
+                      heartbeat_interval=0.1)
+    amgr.workflow = [_stage_of([Task(name=f"k{i}", executable="sleep://0.3")
+                                for i in range(16)])]
+
+    def kill():
+        time.sleep(0.4)
+        amgr.emgr.rts.members[1].rts.simulate_dead = True
+
+    threading.Thread(target=kill, daemon=True).start()
+    amgr.run(timeout=60)
+    fed = amgr.emgr.rts
+    assert amgr.all_done
+    assert fed.members_lost == 1
+    assert fed.pilot_lost_requeues >= 1        # in-flight work was requeued
+    assert amgr.emgr.rts_restarts == 0         # absorbed below the Emgr
+    assert all(t.retries == 0 for t in _flat(amgr))
+
+
+def test_failover_journal_and_resume(tmp_path):
+    """The failover path journals pilot_lost FAILED hops that (1) do not
+    restore into retry budgets on replay and (2) never cause a resumed
+    AppManager to re-run tasks that completed on the dead member."""
+    jp = str(tmp_path / "fed.jsonl")
+
+    def build():
+        return [_stage_of([Task(name=f"j{i}", executable="sleep://0.25")
+                           for i in range(12)], name="jrn")]
+
+    amgr = AppManager(
+        resources=[ResourceDescription(slots=2, extra={"name": f"m{i}"})
+                   for i in range(2)],
+        rts_factory=LocalRTS, heartbeat_interval=0.1,
+        journal_path=jp, flush_every=1)
+    amgr.workflow = build()
+
+    def kill():
+        time.sleep(0.35)
+        amgr.emgr.rts.members[1].rts.simulate_dead = True
+
+    threading.Thread(target=kill, daemon=True).start()
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert amgr.emgr.rts.pilot_lost_requeues >= 1
+
+    replay = Journal.replay(jp)
+    # every task ended DONE; pilot_lost hops were journaled but must not be
+    # charged to the retry budget on resume
+    assert all(replay["state"][("task", f"j{i}")] == st.DONE
+               for i in range(12))
+    assert replay["retries"] == {}
+
+    ran = []
+    amgr2 = AppManager(
+        resources=[ResourceDescription(slots=2, extra={"name": f"m{i}"})
+                   for i in range(2)],
+        rts_factory=[lambda: LocalRTS(
+            fault_injector=lambda t: ran.append(t.name) and False)] * 2,
+        heartbeat_interval=0.2, journal_path=jp, flush_every=1)
+    amgr2.workflow = build()
+    amgr2.run(resume=True, timeout=30)
+    assert amgr2.all_done
+    assert ran == []   # everything completed before; nothing re-executed
+
+
+def test_quarantined_member_readmitted_on_recovery():
+    rds = [ResourceDescription(slots=1, extra={"name": "A"}),
+           ResourceDescription(slots=1, extra={"name": "B"})]
+    amgr = AppManager(resources=rds, rts_factory=LocalRTS,
+                      heartbeat_interval=0.1)
+    amgr.workflow = [_stage_of([Task(name=f"r{i}", executable="sleep://0.2")
+                                for i in range(8)])]
+
+    def kill_then_revive():
+        time.sleep(0.3)
+        member = amgr.emgr.rts.members[1]
+        member.rts.simulate_dead = True
+        deadline = time.monotonic() + 10
+        while not member.quarantined and time.monotonic() < deadline:
+            time.sleep(0.02)
+        member.rts.simulate_dead = False   # the pilot answers again
+
+    threading.Thread(target=kill_then_revive, daemon=True).start()
+    amgr.run(timeout=60)
+    fed = amgr.emgr.rts
+    assert amgr.all_done
+    assert fed.members_lost == 1
+    assert fed.members_readmitted == 1
+    assert fed.members[1].active
+
+
+def test_member_restart_budget_rebuilds_dead_member():
+    """With a restart budget, a dead member is rebuilt from its factory
+    instead of waiting for spontaneous recovery."""
+    built = []
+
+    def factory():
+        rts = LocalRTS()
+        built.append(rts)
+        return rts
+
+    specs = [MemberSpec("solo", factory, ResourceDescription(slots=2))]
+    fed = FederatedRTS(specs, heartbeat_interval=0.05, member_restarts=1)
+    fed.start(ResourceDescription(slots=0))
+    try:
+        fed.members[0].rts.simulate_dead = True   # stays dead: needs rebuild
+        deadline = time.monotonic() + 10
+        while fed.members_restarted == 0 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert fed.members_restarted == 1
+        assert len(built) == 2                    # factory ran again
+        assert fed.members[0].active
+        assert fed.alive()
+        done = threading.Event()
+        fed.set_callback(lambda c: done.set())
+        fed.submit([Task(name="post", executable="sleep://0.01")])
+        assert done.wait(5)                       # rebuilt member serves
+    finally:
+        fed.stop()
+
+
+def test_all_members_dead_escalates_to_whole_rts_restart():
+    """Losing every member is a whole-RTS failure: the ExecManager's
+    heartbeat restarts the federation and resubmits the lost tasks."""
+    rds = [ResourceDescription(slots=1, extra={"name": f"m{i}"})
+           for i in range(2)]
+    amgr = AppManager(resources=rds, rts_factory=LocalRTS,
+                      heartbeat_interval=0.1)
+    amgr.workflow = [_stage_of([Task(name=f"w{i}", executable="sleep://0.3")
+                                for i in range(6)])]
+
+    def kill_all():
+        time.sleep(0.35)
+        for m in amgr.emgr.rts.members:
+            m.rts.simulate_dead = True
+
+    threading.Thread(target=kill_all, daemon=True).start()
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert amgr.emgr.rts_restarts == 1
+
+
+# --------------------------------------------------------------------------- #
+# Granted-not-requested (JaxRTS clamp bugfix)
+# --------------------------------------------------------------------------- #
+
+def test_jax_rts_start_does_not_mutate_callers_description():
+    rd = ResourceDescription(slots=16, extra={"k": "v"})
+    rts = JaxRTS(devices=["d0", "d1"])
+    pilot = rts.start(rd)
+    try:
+        assert rd.slots == 16                    # caller's object untouched
+        assert pilot.description.slots == 2      # granted via the pilot
+        assert pilot.description.extra == {"k": "v"}
+        assert rts.free_slots() == 2
+    finally:
+        rts.stop()
+
+
+def test_emgr_records_granted_slots_from_pilot():
+    """The Emgr must observe the clamped grant (pilot-idle starvation escape
+    depends on resources.slots being the real capacity) even though the RTS
+    no longer mutates the caller's description."""
+    rd = ResourceDescription(slots=16)
+    amgr = AppManager(resources=rd,
+                      rts_factory=lambda: JaxRTS(devices=["d0", "d1"]),
+                      heartbeat_interval=0.2)
+    amgr.workflow = [_stage_of([Task(name=f"g{i}", executable="sleep://0.02")
+                                for i in range(4)])]
+    amgr.run(timeout=30)
+    assert amgr.all_done
+    assert amgr.resources.slots == 2   # toolkit bookkeeping: granted
+    assert rd.slots == 16              # the caller's object: untouched
