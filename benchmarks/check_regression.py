@@ -1,0 +1,82 @@
+"""Compare a scheduler-scaling benchmark run against a checked-in baseline.
+
+CI gate: the declarative API (and anything else riding the hot path) must
+stay compile-time only — marginal toolkit-CPU per task at the largest
+common pipeline count may not regress more than ``--factor`` (default 2x,
+generous because GitHub runners are noisy) versus the PR-1 baseline.
+
+    python -m benchmarks.check_regression current.json baseline.json
+
+Exit 0 = within budget; exit 1 = regression (or unusable inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+
+def _sched_rows(path: str) -> Dict[int, dict]:
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    rows = {}
+    for row in data.get("rows", []):
+        if row.get("name", "").startswith("sched_") and "n_pipelines" in row:
+            rows[int(row["n_pipelines"])] = row
+    return rows
+
+
+def _metric(row: dict, field: str) -> Optional[float]:
+    m = float(row.get(field, 0.0) or 0.0)
+    return m if m > 0 else None
+
+
+def _pick_field(cur: dict, base: dict) -> Optional[str]:
+    """Both rows must be compared on the SAME field: marginal CPU µs/task
+    when both runs produced a meaningful one, else mgmt µs/task for both
+    (a noisy runner can difference to <= 0; silently mixing fields would
+    let a real regression pass — or fail a healthy run)."""
+    for field in ("marginal_cpu_us_per_task", "us_per_call"):
+        if (_metric(cur, field) is not None
+                and _metric(base, field) is not None):
+            return field
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="bench JSON from this run")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed current/baseline ratio")
+    args = ap.parse_args()
+
+    cur = _sched_rows(args.current)
+    base = _sched_rows(args.baseline)
+    common = sorted(set(cur) & set(base))
+    if not common:
+        print(f"[check] no common sched sizes between {args.current} "
+              f"({sorted(cur)}) and {args.baseline} ({sorted(base)})")
+        return 1
+    n = common[-1]   # the largest size is where O(P) growth would show
+    field = _pick_field(cur[n], base[n])
+    if field is None:
+        print(f"[check] no shared usable metric at {n} pipelines: "
+              f"current={cur[n]} baseline={base[n]}")
+        return 1
+    c, b = _metric(cur[n], field), _metric(base[n], field)
+    ratio = c / b
+    verdict = "OK" if ratio <= args.factor else "REGRESSION"
+    print(f"[check] sched @ {n} pipelines [{field}]: current {c:.1f} "
+          f"us/task vs baseline {b:.1f} us/task -> x{ratio:.2f} "
+          f"(budget x{args.factor:.1f}) {verdict}")
+    if not cur[n].get("all_done", True):
+        print(f"[check] current run did not complete: {cur[n]}")
+        return 1
+    return 0 if ratio <= args.factor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

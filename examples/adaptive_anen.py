@@ -1,22 +1,19 @@
 """Adaptive Analog Ensemble (paper use case §III-B, Fig. 11).
 
-Runs the AUA (adaptive) and random-placement analog searches under EnTK —
-the AUA iterations are appended at runtime by ``post_exec`` hooks (the
-paper's branching-as-decision-task) — and compares error convergence.
+Runs the AUA (adaptive) and random-placement analog searches, described as
+``api.repeat_until`` loops over ``api.ensemble`` rounds — the compiler
+lowers them onto EnTK's runtime stage-appending (the paper's
+branching-as-decision-task) — and compares error convergence.
 
-    PYTHONPATH=src python examples/adaptive_anen.py [--repeats 3]
+    pip install -e .   (or: PYTHONPATH=src)
+    python examples/adaptive_anen.py [--repeats 3]
 """
 
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+import numpy as np
 
-import numpy as np  # noqa: E402
-
-from repro.apps.anen.workflow import run_adaptive, run_random  # noqa: E402
+from repro.apps.anen.workflow import run_adaptive, run_random
 
 
 def main() -> None:
@@ -33,6 +30,10 @@ def main() -> None:
     for seed in range(args.repeats):
         a = run_adaptive(seed=seed, **kw)
         r = run_random(seed=seed, **kw)
+        # the adaptive loop must actually have adapted: every round past the
+        # first was appended at runtime by the repeat_until machinery
+        assert a["all_done"] and r["all_done"], (a, r)
+        assert a["rounds"] >= 2, f"no adaptive round ran: {a}"
         aua_final.append(a["final_rmse"])
         rnd_final.append(r["final_rmse"])
         print(f"seed {seed}:")

@@ -1,0 +1,84 @@
+"""The declarative ensemble API in one tour: futures, combinators, adaptivity.
+
+A parameter sweep feeds a reduction; the reduction's value steers a branch;
+an adaptive repeat_until loop refines until a tolerance is met. The whole
+description compiles onto PST (``api.compile``) and runs on the unchanged
+event-driven core — swap ``resources=`` for a list of descriptions and the
+same description executes on a federated multi-pilot fleet.
+
+    pip install -e .   (or: PYTHONPATH=src)
+    python examples/declarative_ensemble.py
+"""
+
+from repro import api
+from repro.rts.base import ResourceDescription
+
+
+def simulate(x, damping):
+    """A toy 'simulation': one member of the sweep."""
+    return damping * x * x
+
+
+def statistics(values):
+    """Reduction over the whole ensemble's outputs."""
+    return {"n": len(values), "mean": sum(values) / len(values),
+            "max": max(values)}
+
+
+def refine(lo, hi, target):
+    """One bisection step toward sqrt(target)."""
+    mid = (lo + hi) / 2.0
+    if mid * mid < target:
+        return {"lo": mid, "hi": hi, "target": target}
+    return {"lo": lo, "hi": mid, "target": target}
+
+
+def main() -> None:
+    # 1. ensemble + gather: 12 simulations -> one statistics task.
+    sims = api.ensemble(simulate,
+                        over=api.sweep(x=range(6), damping=[0.5, 1.0]),
+                        name="sim")
+    stats = api.gather(sims, statistics, name="stats")
+
+    # 2. branch: only spawn the expensive follow-up when the mean is large.
+    followup = api.branch(
+        lambda ctx: ctx.value["mean"] > 4.0,
+        then=lambda ctx: api.task(simulate,
+                                  kwargs={"x": ctx.value["max"],
+                                          "damping": 1.0},
+                                  name="followup-sim"),
+        orelse=None, after=stats, name="followup")
+
+    # 3. repeat_until: bisect sqrt(2) until the bracket is tight. Rounds are
+    #    appended at runtime; results flow between rounds as futures.
+    def next_round(ctx):
+        state = ({"lo": 1.0, "hi": 2.0, "target": 2.0}
+                 if ctx.results is None else ctx.results[0])
+        return api.task(refine, kwargs=state, name=f"bisect-r{ctx.round}")
+
+    bisect = api.repeat_until(
+        lambda ctx: ctx.results[0]["hi"] - ctx.results[0]["lo"] < 1e-3,
+        next_round, max_rounds=20, name="bisect")
+
+    result = api.run(followup, bisect,
+                     resources=ResourceDescription(slots=4),
+                     name="declarative-demo", timeout=300)
+
+    s = stats.out.result()
+    print(f"ensemble of {s['n']}: mean={s['mean']:.2f} max={s['max']:.1f}")
+    print(f"branch value: {followup.out.result()}")
+    bracket = bisect.out.result()[0]
+    mid = (bracket["lo"] + bracket["hi"]) / 2
+    print(f"bisect converged: sqrt(2) ~= {mid:.4f} "
+          f"(bracket width {bracket['hi'] - bracket['lo']:.2e})")
+    print(f"all tasks DONE: {result.all_done}")
+
+    assert result.all_done
+    assert s["n"] == 12 and abs(s["max"] - 25.0) < 1e-9
+    assert abs(mid - 2 ** 0.5) < 1e-3
+    assert followup.out.result() == [625.0]  # mean 6.88 > 4 -> arm ran
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

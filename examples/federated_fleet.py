@@ -10,22 +10,18 @@ host's JAX devices) plus a spare CPU pool — serves one ensemble:
   re-journaled as FAILED-with-requeue (no retry budget consumed) and finish
   on the surviving members — zero lost completions.
 
-    PYTHONPATH=src python examples/federated_fleet.py
+    pip install -e .   (or: PYTHONPATH=src)
+    python examples/federated_fleet.py
 """
 
-import sys
-import os
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+import threading
+import time
 
-import threading  # noqa: E402
-import time  # noqa: E402
-
-from repro.core import AppManager, Pipeline, Stage, Task  # noqa: E402
-from repro.core.pst import register_executable  # noqa: E402
-from repro.rts.base import ResourceDescription  # noqa: E402
-from repro.rts.jax_rts import JaxRTS  # noqa: E402
-from repro.rts.local import LocalRTS  # noqa: E402
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.core.pst import register_executable
+from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+from repro.rts.local import LocalRTS
 
 
 def train_step(shard, devices=None):

@@ -4,17 +4,13 @@ Two pipelines run concurrently; stages inside each run sequentially; the 8
 tasks of every stage run concurrently on a 4-slot pilot. One flaky task
 fails twice and is resubmitted automatically.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .   (or: PYTHONPATH=src)
+    python examples/quickstart.py
 """
 
-import sys
-import os
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
-from repro.core import AppManager, Pipeline, Stage, Task  # noqa: E402
-from repro.rts.base import ResourceDescription  # noqa: E402
-from repro.rts.local import LocalRTS  # noqa: E402
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.rts.base import ResourceDescription
+from repro.rts.local import LocalRTS
 
 attempts = {}
 

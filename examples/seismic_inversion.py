@@ -7,26 +7,21 @@
    each iteration an EnTK stage of per-event gradient tasks whose results
    are summed into a model update.
 
-    PYTHONPATH=src python examples/seismic_inversion.py
+    pip install -e .   (or: PYTHONPATH=src)
+    python examples/seismic_inversion.py
 """
 
-import os
-import sys
+import numpy as np
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
-import numpy as np  # noqa: E402
-
-import jax.numpy as jnp  # noqa: E402
+import jax.numpy as jnp
 
 from repro.core import AppManager, Pipeline, Stage, Task, \
-    register_executable  # noqa: E402
-from repro.rts.base import ResourceDescription  # noqa: E402
-from repro.rts.local import LocalRTS  # noqa: E402
+    register_executable
+from repro.rts.base import ResourceDescription
+from repro.rts.local import LocalRTS
 from repro.apps.seismic.solver import (SeismicConfig, forward_simulation,
                                        make_velocity_model,
-                                       misfit_and_grad)  # noqa: E402
+                                       misfit_and_grad)
 
 CFG = SeismicConfig(nx=64, nz=64, nt=140, n_receivers=16)
 _STATE = {}

@@ -7,15 +7,10 @@ the toolkit). Uses a reduced config of the selected architecture.
 """
 
 import argparse
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
-from repro.launch.serve import run_managed  # noqa: E402
-from repro.models.config import get_config  # noqa: E402
+from repro.launch.serve import run_managed
+from repro.models.config import get_config
 
 
 def main() -> None:

@@ -17,13 +17,9 @@ assignment is:
 import argparse
 import os
 import shutil
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
-from repro.models.config import ModelConfig, register_arch  # noqa: E402
+from repro.models.config import ModelConfig, register_arch
 
 
 def _lm100m() -> ModelConfig:

@@ -1,0 +1,625 @@
+"""DAG → PST compiler: lower a declarative description onto the core.
+
+The scheduler core (Broker, WorkflowIndex, Emgr, WFProcessor) and the RTS
+layer execute Pipelines/Stages/Tasks and know nothing about futures or
+combinators. This module closes the gap:
+
+* the **unit graph** — every :class:`~repro.api.futures.TaskSpec` reachable
+  from the given nodes, with edges from the futures in args/kwargs plus
+  ``after=`` control dependencies — is validated *here*, at compile time:
+  cycles, inputs produced by a different workflow, duplicate task names and
+  un-loweable shapes all raise :class:`~repro.api.errors.CompileError` with
+  messages that name the offending specs;
+* weakly-connected components become separate **Pipelines** (independent
+  ensembles keep running concurrently, as PST semantics promise);
+* each component is **topologically layered** into Stages — one stage per
+  dependency level, tasks within a stage ordered widest-``slots``-first so
+  the Emgr's largest-fit packer sees its best case without rescanning;
+* ``backend=`` affinities become ``Task.backend``, which the federation's
+  placement-aware packer turns into ``task.tags['_fed_member']`` pinning;
+* adaptive combinators (``repeat_until``/``branch``) become *decision
+  tasks* whose stages carry ``post_exec`` hooks — the exact
+  append-listener machinery the imperative toolkit always had — that build
+  and append the next round/arm at runtime. Anything downstream of an
+  adaptive node is compiled eagerly but appended only when the node
+  resolves, preserving PST's stage ordering.
+
+Everything the compiler emits is ordinary PST, so the event-driven core,
+slot-aware submission, federation failover and journal resume all apply to
+declarative workflows unchanged — the layer is compile-time only, with zero
+hot-path cost.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+import traceback
+from typing import Any, Dict, List, Optional, Sequence, Set, Union
+
+from ..core import uid
+from ..core.pst import Pipeline, Stage, Task
+from ..core.results import STORE
+from .combinators import (Branch, DecisionContext, Loop, LoopContext)
+from .errors import CompileError
+from .futures import Future, Node, TaskSpec
+from .runtime import COLLECT, TRAMPOLINE, encode, ensure_registered
+
+__all__ = ["compile_workflow", "Compiled"]
+
+
+# --------------------------------------------------------------------------- #
+# Compiled workflow handle
+# --------------------------------------------------------------------------- #
+
+class Compiled:
+    """The result of :func:`compile_workflow`: PST pipelines + bookkeeping.
+
+    Iterable (``amgr.workflow = compiled`` just works) and inspectable:
+    ``compiled.pipelines``, ``compiled.ns`` (the result-store namespace),
+    ``compiled.task_names``. ``close()`` drops the namespace's results from
+    the process-global store once they are no longer needed.
+    """
+
+    def __init__(self, pipelines: List[Pipeline], ns: str, name: str,
+                 ctx: "_Ctx") -> None:
+        self.pipelines = pipelines
+        self.ns = ns
+        self.name = name
+        self._ctx = ctx
+
+    @property
+    def task_names(self) -> List[str]:
+        return sorted(self._ctx.used_names)
+
+    @property
+    def hook_errors(self) -> List[str]:
+        """Adaptive-hook failures (a repeat_until predicate/body or branch
+        arm raised at runtime). Non-empty means the workflow 'completed'
+        with its adaptivity cut short — check this (api.run() does) when
+        driving an AppManager directly."""
+        return list(self._ctx.hook_errors)
+
+    def __iter__(self):
+        return iter(self.pipelines)
+
+    def __len__(self) -> int:
+        return len(self.pipelines)
+
+    def close(self) -> int:
+        """Release this workflow's results from the process-global store."""
+        return STORE.clear_namespace(self.ns)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"<Compiled {self.name!r} ns={self.ns} "
+                f"npipelines={len(self.pipelines)}>")
+
+
+# --------------------------------------------------------------------------- #
+# Compiler context (shared with runtime hooks for adaptive rounds)
+# --------------------------------------------------------------------------- #
+
+class _Ctx:
+    """Per-workflow compile state: namespace, name allocation, name set."""
+
+    def __init__(self, ns: str, wf_name: str) -> None:
+        self.ns = ns
+        self.wf_name = wf_name
+        self.used_names: Set[str] = set()
+        self._counters: Dict[str, "itertools.count"] = {}
+        self._stage_seq = itertools.count()
+        # adaptive-hook failures (predicate/body/arm raised at runtime):
+        # post_exec exceptions are recorded-not-fatal in the core, so the
+        # API surfaces them through here — api.run() raises on them
+        self.hook_errors: List[str] = []
+
+    def claim(self, name: str, what: str) -> str:
+        if name in self.used_names:
+            raise CompileError(
+                f"duplicate task name {name!r} in workflow "
+                f"{self.wf_name!r} ({what}) — task names key resume and "
+                f"result routing; make them unique (adaptive rounds: "
+                f"include the round index)")
+        self.used_names.add(name)
+        return name
+
+    def fresh(self, key: str) -> str:
+        """Deterministic per-workflow sequence names: <key>-0, <key>-1, ..."""
+        counter = self._counters.setdefault(key, itertools.count())
+        return f"{key}-{next(counter)}"
+
+    def auto_name(self, spec: TaskSpec, prefix: str) -> str:
+        """Deterministic name for an unnamed spec: <prefix><fn>-<k>."""
+        if isinstance(spec.fn, str):
+            base = "task"
+        else:
+            base = getattr(spec.fn, "__name__", "task").strip("<>") or "task"
+        return self.fresh(prefix + base)
+
+    def stage_name(self) -> str:
+        return f"{self.wf_name}-s{next(self._stage_seq)}"
+
+
+# --------------------------------------------------------------------------- #
+# Unit-graph construction
+# --------------------------------------------------------------------------- #
+
+def _collect_units(nodes: Sequence[Union[Node, Future]], ns: str
+                   ) -> List[TaskSpec]:
+    """Transitive closure of specs reachable from ``nodes``.
+
+    Specs already compiled into *this* workflow (``spec.ns == ns``) are
+    external, satisfied inputs; specs compiled into a different workflow are
+    an error — their values live under another namespace and would never
+    resolve here.
+    """
+    frontier: List[TaskSpec] = []
+    for node in nodes:
+        if isinstance(node, Future):
+            frontier.append(node.owner)
+        elif isinstance(node, Node):
+            frontier.extend(f.owner for f in node.futures())
+        else:
+            raise CompileError(
+                f"compile() takes nodes or futures, got "
+                f"{type(node).__name__}: {node!r}")
+    units: List[TaskSpec] = []
+    seen: Set[int] = set()
+    while frontier:
+        spec = frontier.pop()
+        if id(spec) in seen:
+            continue
+        seen.add(id(spec))
+        if spec.ns is not None:
+            if spec.ns != ns:
+                raise CompileError(
+                    f"input {spec.name!r} was produced by a different "
+                    f"compile() call (namespace {spec.ns}) — a workflow can "
+                    f"only consume futures of its own specs")
+            continue  # already lowered earlier in this workflow
+        units.append(spec)
+        for f in spec.inputs():
+            frontier.append(f.owner)
+    # deterministic order for naming/layering tie-breaks
+    units.reverse()
+    return units
+
+
+def _dependencies(spec: TaskSpec, member: Set[int],
+                  alias: Dict[int, TaskSpec]) -> List[TaskSpec]:
+    deps = []
+    for f in spec.inputs():
+        owner = alias.get(id(f.owner), f.owner)
+        if id(owner) in member:
+            deps.append(owner)
+    return deps
+
+
+def _find_cycle(units: List[TaskSpec], member: Set[int],
+                alias: Dict[int, TaskSpec]) -> List[str]:
+    """Best-effort cycle extraction for the error message."""
+    WHITE, GREY, BLACK = 0, 1, 2
+    color: Dict[int, int] = {id(u): WHITE for u in units}
+    path: List[TaskSpec] = []
+
+    def label(s: TaskSpec) -> str:
+        return s.name or s.explicit_name or repr(s)
+
+    def dfs(u: TaskSpec) -> Optional[List[str]]:
+        color[id(u)] = GREY
+        path.append(u)
+        for d in _dependencies(u, member, alias):
+            c = color.get(id(d), BLACK)
+            if c == GREY:
+                start = next(i for i, s in enumerate(path) if s is d)
+                return [label(s) for s in path[start:]] + [label(d)]
+            if c == WHITE:
+                found = dfs(d)
+                if found:
+                    return found
+        path.pop()
+        color[id(u)] = BLACK
+        return None
+
+    for u in units:
+        if color[id(u)] == WHITE:
+            found = dfs(u)
+            if found:
+                return found
+    return [label(u) for u in units[:5]]
+
+
+# --------------------------------------------------------------------------- #
+# Task building
+# --------------------------------------------------------------------------- #
+
+def _has_future(value: Any) -> bool:
+    if isinstance(value, Future):
+        return True
+    if isinstance(value, (list, tuple)):
+        return any(_has_future(v) for v in value)
+    if isinstance(value, dict):
+        return any(_has_future(v) for v in value.values())
+    return False
+
+
+def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
+    """Lower one spec to a core Task (trampoline-wrapped when it is data-flow)."""
+    if isinstance(spec.fn, str) and spec.fn == "__collect__":
+        fn_ref: Optional[str] = COLLECT
+    elif isinstance(spec.fn, str) and spec.fn.startswith("reg://"):
+        fn_ref = spec.fn
+    elif isinstance(spec.fn, str):
+        # synthetic executable (sleep://...): no callable to hand values to
+        if _has_future(spec.args) or _has_future(spec.kwargs):
+            raise CompileError(
+                f"task {spec.name!r} uses executable {spec.fn!r} but "
+                f"consumes futures — only Python callables (or reg:// "
+                f"registrations) can receive data-flow inputs")
+        fn_ref = None
+    else:
+        fn_ref = ensure_registered(spec.fn)
+    if fn_ref is None:
+        task = Task(
+            name=spec.name, executable=spec.fn, args=spec.args,
+            kwargs=spec.kwargs, slots=spec.slots, backend=spec.backend,
+            max_retries=spec.max_retries, duration_hint=spec.duration_hint)
+    else:
+        where = f"task {spec.name!r}"
+        task = Task(
+            name=spec.name, executable=TRAMPOLINE,
+            kwargs={"__ns__": ctx.ns, "__fn__": fn_ref,
+                    "__args__": encode(spec.args, where),
+                    "__kwargs__": encode(spec.kwargs, where)},
+            slots=spec.slots, backend=spec.backend,
+            max_retries=spec.max_retries, duration_hint=spec.duration_hint)
+    task.tags["_wf_ns"] = ctx.ns
+    spec.task = task
+    spec.ns = ctx.ns
+    return task
+
+
+# --------------------------------------------------------------------------- #
+# Planning: units -> [Stage, ..., decision Stage?]
+# --------------------------------------------------------------------------- #
+
+def _plan(units: List[TaskSpec], ctx: _Ctx, prefix: str,
+          alias: Optional[Dict[int, TaskSpec]] = None) -> List[Stage]:
+    """Plan a unit set into an ordered stage list.
+
+    Static units are layered topologically (one Stage per level, widest
+    tasks first). At most one *ready* adaptive unit may exist at any point;
+    it becomes the trailing decision stage and everything after it is
+    planned recursively into its runtime continuation. Two adaptive units
+    neither of which depends on the other cannot share a pipeline (their
+    runtime appends would interleave into one stage sequence) — that is a
+    compile error, not a runtime surprise.
+    """
+    alias = dict(alias or {})
+    if not units:
+        return []
+    member = {id(u) for u in units}
+
+    # names first: every error message and placeholder needs them
+    # (continuation units re-enter _plan recursively — claim exactly once)
+    for spec in units:
+        if spec._claimed:
+            continue
+        dyn = spec.dynamic
+        if isinstance(dyn, (Loop, Branch)) and dyn.name is None:
+            # default combinator names come from the per-workflow counters
+            # (a process-global counter would drift across sessions and
+            # silently break journal-resume name matching)
+            kind = "repeat-until" if isinstance(dyn, Loop) else "branch"
+            dyn.name = ctx.fresh(prefix + kind)
+            dyn.out.key = dyn.name
+            suffix = "-entry" if isinstance(dyn, Loop) else "-decide"
+            spec.name = spec.name or f"{dyn.name}{suffix}"
+        if isinstance(dyn, Loop):
+            continue  # loop placeholders never become tasks
+        if spec.name is None:
+            spec.name = ctx.auto_name(spec, prefix)
+        ctx.claim(spec.name, "explicitly named" if spec.explicit_name
+                  else "auto-named")
+        spec._claimed = True
+
+    # Kahn layering over intra-set dependencies
+    level: Dict[int, int] = {}
+    remaining = list(units)
+    current = 0
+    while remaining:
+        ready = [u for u in remaining
+                 if all(id(d) in level for d in
+                        _dependencies(u, member, alias))]
+        if not ready:
+            cycle = _find_cycle(remaining, member, alias)
+            raise CompileError(
+                f"dependency cycle in workflow {ctx.wf_name!r}: "
+                f"{' -> '.join(cycle) or [s.name for s in remaining[:5]]} — "
+                f"a task cannot (transitively) consume its own output")
+        for u in ready:
+            deps = _dependencies(u, member, alias)
+            level[id(u)] = (max(level[id(d)] for d in deps) + 1) if deps \
+                else current
+        # exact levels come from the max-over-deps above; 'current' only
+        # seeds roots discovered in later waves at their true depth
+        remaining = [u for u in remaining if id(u) not in level]
+        current += 1
+
+    dynamics = [u for u in units if u.dynamic is not None]
+    if not dynamics:
+        return _layer_stages(units, level, ctx)
+
+    # split: static prefix = units with no transitive dynamic dependency
+    dyn_ids = {id(d) for d in dynamics}
+    tainted: Set[int] = set(dyn_ids)
+    changed = True
+    while changed:
+        changed = False
+        for u in units:
+            if id(u) in tainted:
+                continue
+            if any(id(d) in tainted
+                   for d in _dependencies(u, member, alias)):
+                tainted.add(id(u))
+                changed = True
+    pre = [u for u in units if id(u) not in tainted]
+    ready_dyn = [d for d in dynamics
+                 if not any(id(x) in tainted
+                            for x in _dependencies(d, member, alias))]
+    if len(ready_dyn) > 1:
+        names = [d.dynamic.name for d in ready_dyn]
+        raise CompileError(
+            f"parallel adaptive combinators {names} in one connected "
+            f"workflow — their runtime appends would interleave in a single "
+            f"PST stage sequence. Sequence them (chain/after=) or keep them "
+            f"in disconnected sub-workflows (separate pipelines)")
+    d = ready_dyn[0]
+    rest = [u for u in units if id(u) in tainted and u is not d]
+    stages = _layer_stages(pre, level, ctx)
+    stages.extend(_plan_dynamic(d, rest, ctx, prefix, alias))
+    return stages
+
+
+def _layer_stages(units: List[TaskSpec], level: Dict[int, int],
+                  ctx: _Ctx) -> List[Stage]:
+    by_level: Dict[int, List[TaskSpec]] = {}
+    for u in units:
+        by_level.setdefault(level[id(u)], []).append(u)
+    stages = []
+    for lv in sorted(by_level):
+        specs = by_level[lv]
+        # widest-first within the layer: the slot-aware packer backfills
+        # from its largest width bucket, so presenting wide tasks first
+        # keeps the pilot packed without starving narrow ones
+        specs.sort(key=lambda s: -s.slots)
+        stage = Stage(ctx.stage_name())
+        for spec in specs:
+            stage.add_tasks(_build_task(spec, ctx))
+        stages.append(stage)
+    return stages
+
+
+def _plan_dynamic(d: TaskSpec, rest: List[TaskSpec], ctx: _Ctx,
+                  prefix: str, alias: Dict[int, TaskSpec]) -> List[Stage]:
+    dyn = d.dynamic
+    if isinstance(dyn, Loop):
+        # expand the loop placeholder into round 0 + its check spec; the
+        # check carries the runtime hook; everything in ``rest`` becomes the
+        # loop's continuation (planned inside the recursive _plan call)
+        ctx.claim(dyn.name, "repeat_until name (reserves its result key)")
+        rt = _LoopRuntime(dyn, ctx)
+        d.ns = ctx.ns  # bind the placeholder: loop futures resolve here
+        round_units, check = rt.round_units(0, LoopContext(0, None, []))
+        # rounds inherit the loop's own entry dependencies
+        for u in round_units:
+            u.after = list(u.after) + list(d.after)
+        alias = dict(alias)
+        alias[id(d)] = check  # rest's edges on the loop now point at round 0
+        return _plan(round_units + rest, ctx, prefix, alias)
+    if isinstance(dyn, Branch):
+        ctx.claim(dyn.name, "branch name (reserves its join/result key)")
+        rt = _BranchRuntime(dyn, ctx)
+        stage = Stage(ctx.stage_name())
+        stage.add_tasks(_build_task(d, ctx))
+        rt.continuation = _plan(rest, ctx, prefix, alias)
+        stage.post_exec = rt.on_decide
+        return [stage]
+    if isinstance(dyn, _LoopRuntime):
+        stage = Stage(ctx.stage_name())
+        stage.add_tasks(_build_task(d, ctx))
+        if rest:
+            # compile-time only: runtime rounds never carry a continuation,
+            # and must not wipe the one captured at compile time
+            dyn.continuation = _plan(rest, ctx, prefix, alias)
+        stage.post_exec = dyn.on_check_done
+        return [stage]
+    if isinstance(dyn, _JoinRuntime):
+        stage = Stage(ctx.stage_name())
+        stage.add_tasks(_build_task(d, ctx))
+        if rest:
+            raise CompileError("internal: join cannot carry a continuation")
+        stage.post_exec = dyn.on_join_done
+        return [stage]
+    raise CompileError(f"unknown adaptive combinator {type(dyn).__name__}")
+
+
+# --------------------------------------------------------------------------- #
+# Runtime hooks (post_exec side of the adaptive combinators)
+# --------------------------------------------------------------------------- #
+
+def _surfacing(hook):
+    """Record a hook failure in the workflow's compile context before the
+    core's post_exec guard swallows it: a raising predicate/body/arm would
+    otherwise silently truncate the loop while the run reports all_done.
+    ``api.run()`` raises on ``ctx.hook_errors``; direct AppManager drivers
+    can read ``Compiled.hook_errors``."""
+    @functools.wraps(hook)
+    def wrapped(self, stage, pipe):
+        try:
+            hook(self, stage, pipe)
+        except Exception:  # noqa: BLE001 - recorded, then re-raised for the core log
+            self.ctx.hook_errors.append(
+                f"{type(self).__name__}[{stage.name}]: "
+                f"{traceback.format_exc(limit=5)}")
+            raise
+    return wrapped
+
+
+class _LoopRuntime:
+    """Per-loop runtime state shared by every round's check stage.
+
+    Rounds fire strictly in order (each check stage is appended by the
+    previous one), so plain attributes suffice. On journal resume the hooks
+    re-fire for instantly-closing resumed stages in the same order, with the
+    check tasks' results restored from the journal — the loop replays its
+    own history deterministically instead of persisting hook state.
+    """
+
+    def __init__(self, loop: Loop, ctx: _Ctx) -> None:
+        self.loop = loop
+        self.ctx = ctx
+        self.history: List[List[Any]] = []
+        self.continuation: List[Stage] = []
+
+    def round_units(self, k: int, lctx: LoopContext
+                    ) -> "tuple[List[TaskSpec], TaskSpec]":
+        node = self.loop.body(lctx)
+        if not isinstance(node, Node):
+            raise CompileError(
+                f"repeat_until body for {self.loop.name!r} round {k} must "
+                f"return a node, got {type(node).__name__}")
+        check = TaskSpec("__collect__", args=(list(node.futures()),),
+                         name=f"{self.loop.name}-r{k}-check")
+        check.dynamic = self
+        units = _collect_units([check], self.ctx.ns)
+        return units, check
+
+    @_surfacing
+    def on_check_done(self, stage: Stage, pipe: Pipeline) -> None:
+        results = stage.tasks[0].result
+        k = len(self.history)
+        self.history.append(results)
+        lctx = LoopContext(k, results, self.history)
+        stop = bool(self.loop.predicate(lctx)) or (k + 1
+                                                   >= self.loop.max_rounds)
+        if stop:
+            STORE.put(self.ctx.ns, self.loop.name, results)
+            if self.continuation:
+                pipe.add_stages(self.continuation)
+            return
+        next_ctx = LoopContext(k + 1, results, self.history)
+        units, _check = self.round_units(k + 1, next_ctx)
+        stages = _plan(units, self.ctx, f"{self.loop.name}-r{k + 1}-")
+        pipe.add_stages(stages)
+
+
+class _BranchRuntime:
+    """Decision-stage hook: build and append the chosen arm at runtime."""
+
+    def __init__(self, br: Branch, ctx: _Ctx) -> None:
+        self.branch = br
+        self.ctx = ctx
+        self.continuation: List[Stage] = []
+
+    @_surfacing
+    def on_decide(self, stage: Stage, pipe: Pipeline) -> None:
+        results = stage.tasks[0].result
+        dctx = DecisionContext(results)
+        arm = self.branch.then if self.branch.cond(dctx) else \
+            self.branch.orelse
+        if arm is not None and not isinstance(arm, Node) and callable(arm):
+            arm = arm(dctx)
+        if arm is None:
+            # nothing to run: the branch resolves to its decision inputs
+            STORE.put(self.ctx.ns, self.branch.name, results)
+            if self.continuation:
+                pipe.add_stages(self.continuation)
+            return
+        if not isinstance(arm, Node):
+            raise CompileError(
+                f"branch {self.branch.name!r} arm must be a node / builder "
+                f"returning one, got {type(arm).__name__}")
+        join = TaskSpec("__collect__", args=(list(arm.futures()),),
+                        name=self.branch.name)
+        join._claimed = True   # the branch name was reserved at compile time
+        join.dynamic = _JoinRuntime(self)
+        units = _collect_units([join], self.ctx.ns)
+        stages = _plan(units, self.ctx, f"{self.branch.name}-")
+        pipe.add_stages(stages)
+
+
+class _JoinRuntime:
+    """The chosen arm's join stage: resolves the branch future, then
+    releases the branch's continuation. The join task is named after the
+    branch itself, so its (journaled, resumable) result *is* the branch's
+    value — no extra store bookkeeping to persist."""
+
+    def __init__(self, branch_rt: _BranchRuntime) -> None:
+        self.branch_rt = branch_rt
+        self.ctx = branch_rt.ctx
+
+    @_surfacing
+    def on_join_done(self, stage: Stage, pipe: Pipeline) -> None:
+        if self.branch_rt.continuation:
+            pipe.add_stages(self.branch_rt.continuation)
+
+
+# --------------------------------------------------------------------------- #
+# Entry point
+# --------------------------------------------------------------------------- #
+
+def compile_workflow(*nodes: Union[Node, Future],
+                     name: Optional[str] = None) -> Compiled:
+    """Compile a declarative description into PST pipelines.
+
+    Weakly-connected components of the task DAG become separate (and
+    therefore concurrent) pipelines; within a component, dependency levels
+    become sequential stages. All description errors surface here.
+    """
+    if not nodes:
+        raise CompileError("compile() needs at least one node")
+    ns = uid.generate("wf")
+    wf_name = name or ns
+    ctx = _Ctx(ns, wf_name)
+    units = _collect_units(list(nodes), ns)
+    if not units:
+        raise CompileError("compile() found no tasks to run — every input "
+                           "was already compiled elsewhere")
+
+    # weakly-connected components -> independent pipelines
+    parent: Dict[int, int] = {id(u): id(u) for u in units}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a: int, b: int) -> None:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+
+    member = {id(u) for u in units}
+    for u in units:
+        for dep in _dependencies(u, member, {}):
+            union(id(u), id(dep))
+    components: Dict[int, List[TaskSpec]] = {}
+    for u in units:
+        components.setdefault(find(id(u)), []).append(u)
+
+    pipelines = []
+    order = {id(u): i for i, u in enumerate(units)}
+    comps = sorted(components.values(), key=lambda c: order[id(c[0])])
+    for ci, comp in enumerate(comps):
+        suffix = f"-c{ci}" if len(comps) > 1 else ""
+        pipe = Pipeline(f"{wf_name}{suffix}")
+        stages = _plan(comp, ctx, "")
+        if not stages:
+            raise CompileError(
+                f"component {ci} of workflow {wf_name!r} compiled to zero "
+                f"stages")
+        pipe.add_stages(stages)
+        pipelines.append(pipe)
+    return Compiled(pipelines, ns, wf_name, ctx)

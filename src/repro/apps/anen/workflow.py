@@ -1,9 +1,13 @@
 """AUA (Adaptive Unstructured Analog) workflow under EnTK (§III-B, Fig. 11).
 
-The iterative search is encoded exactly as the paper describes: an EnTK
-pipeline whose *iteration stages are appended at runtime* by a ``post_exec``
-hook (branching-as-decision-task) — iterations never re-enter an HPC queue,
-and their number is unknown before execution.
+The iterative search is *described* on the declarative API
+(:mod:`repro.api`): each iteration is an :func:`~repro.api.ensemble` over
+location slices, and the unknown-length iteration sequence is an
+:func:`~repro.api.repeat_until` loop — which the compiler lowers onto the
+exact ``post_exec``/append-listener machinery the paper describes
+(iteration stages appended at runtime, never re-entering an HPC queue).
+Task *results* (the computed analog values) flow between rounds through the
+API's data-flow plumbing instead of hand-scraping ``stage.tasks[i].result``.
 
 Two implementations are compared, as in Fig. 11:
 
@@ -16,11 +20,12 @@ Two implementations are compared, as in Fig. 11:
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
-from ...core import AppManager, Pipeline, Stage, Task, register_executable
+from ... import api
+from ...core import AppManager, register_executable
 from ...rts.base import ResourceDescription
 from ...rts.local import LocalRTS
 from .anen import (AnEnConfig, compute_analogs, gradient_magnitude,
@@ -132,12 +137,13 @@ class _SearchState:
 
     # ---- bookkeeping ------------------------------------------------------- #
 
-    def absorb(self, stage: Stage) -> None:
-        for t in stage.tasks:
-            if t.result is None:
+    def absorb(self, results: List[Dict]) -> None:
+        """Fold one round's task results (analog values) into the estimate."""
+        for r in results:
+            if r is None:
                 continue
-            self.locations.extend(t.result["locations"])
-            self.values.extend(t.result["values"])
+            self.locations.extend(r["locations"])
+            self.values.extend(r["values"])
         import jax.numpy as jnp
         locs = jnp.asarray(self.locations, jnp.int32)
         vals = jnp.asarray(self.values, jnp.float32)
@@ -145,30 +151,37 @@ class _SearchState:
         self.errors.append(rmse(est, self.data.truth))
         self.iteration += 1
 
-    # ---- stage construction -------------------------------------------------#
+    # ---- declarative description ------------------------------------------- #
 
-    def make_stage(self, pipe: Pipeline) -> Stage:
+    def make_round(self, ctx: api.LoopContext) -> api.Ensemble:
+        """One iteration: an ensemble of analog tasks over location slices.
+
+        ``ctx.results`` (the previous round's values) were absorbed by
+        :meth:`converged` before this builder runs, so proposals always see
+        the up-to-date estimate — including on journal resume, where rounds
+        replay in order through the same two hooks.
+        """
         locs = self.propose(self.per_iter)
-        slices = np.array_split(locs, self.n_tasks)
-        st = Stage(f"{self.method}-iter{self.iteration}")
-        for i, sl in enumerate(slices):
-            if len(sl) == 0:
-                continue
-            st.add_tasks(Task(
-                name=f"{self.method}-it{self.iteration}-t{i}-{self.seed}",
-                executable="reg://analog_task",
-                kwargs={"seed": self.seed, "ny": self.cfg.ny,
-                        "nx": self.cfg.nx, "n_hist": self.cfg.n_hist,
-                        "k": self.cfg.k, "locations": sl.tolist()},
-                max_retries=1))
-        st.post_exec = self._post_exec
-        return st
+        slices = [sl for sl in np.array_split(locs, self.n_tasks)
+                  if len(sl)]
+        return api.ensemble(
+            analog_task,
+            over=[{"seed": self.seed, "ny": self.cfg.ny, "nx": self.cfg.nx,
+                   "n_hist": self.cfg.n_hist, "k": self.cfg.k,
+                   "locations": sl.tolist()} for sl in slices],
+            name=f"{self.method}-it{ctx.round}-{self.seed}",
+            max_retries=1)
 
-    def _post_exec(self, stage: Stage, pipe: Pipeline) -> None:
-        """EnTK adaptivity hook: absorb results, decide whether to iterate."""
-        self.absorb(stage)
-        if self.iteration < self.max_iters:
-            pipe.add_stages(self.make_stage(pipe))
+    def converged(self, ctx: api.LoopContext) -> bool:
+        """repeat_until predicate: absorb the finished round, then decide."""
+        self.absorb(ctx.results)
+        return self.iteration >= self.max_iters
+
+    def as_loop(self) -> api.Loop:
+        return api.repeat_until(
+            self.converged, self.make_round,
+            name=f"anen-{self.method}-{self.seed}",
+            max_rounds=self.max_iters)
 
 
 def _run(method: str, seed: int, *, ny: int, nx: int, n_hist: int,
@@ -176,14 +189,20 @@ def _run(method: str, seed: int, *, ny: int, nx: int, n_hist: int,
          timeout: float) -> Dict:
     cfg = AnEnConfig(ny=ny, nx=nx, n_hist=n_hist, seed=seed)
     search = _SearchState(method, seed, cfg, per_iter, max_iters, n_tasks)
-    pipe = Pipeline(f"anen-{method}-{seed}")
-    pipe.add_stages(search.make_stage(pipe))
     amgr = AppManager(resources=ResourceDescription(slots=slots),
                       rts_factory=LocalRTS, heartbeat_interval=1.0)
-    amgr.workflow = [pipe]
+    compiled = api.compile(search.as_loop(), name=f"anen-{method}-{seed}")
+    amgr.workflow = compiled
     amgr.run(timeout=timeout)
+    if compiled.hook_errors:
+        raise RuntimeError(f"anen adaptive hooks failed: "
+                           f"{compiled.hook_errors}")
+    # everything we report lives in the search state; release the store
+    # namespace so repeated runs (compare_methods sweeps) stay bounded
+    compiled.close()
     return {"method": method, "seed": seed,
             "n_locations": len(search.locations),
+            "rounds": search.iteration,
             "errors": search.errors, "final_rmse": search.errors[-1],
             "all_done": amgr.all_done}
 

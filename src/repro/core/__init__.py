@@ -31,3 +31,4 @@ from .journal import Journal  # noqa: F401
 from .profiler import Profiler  # noqa: F401
 from .pst import (Pipeline, Stage, Task, WorkflowIndex,  # noqa: F401
                   register_executable)
+from .results import STORE as RESULT_STORE, ResultStore  # noqa: F401

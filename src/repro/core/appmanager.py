@@ -107,7 +107,7 @@ class AppManager:
         self.component_supervision = component_supervision
         self.flush_every = flush_every
 
-        self.workflow: List[Pipeline] = []
+        self._workflow: List[Pipeline] = []
         self.prof = Profiler()
         self.state_table: Dict[str, str] = {}
         # O(1) uid -> object routing shared by WFProcessor and ExecManager
@@ -154,6 +154,48 @@ class AppManager:
 
     # -- workflow handling -----------------------------------------------------#
 
+    @property
+    def workflow(self) -> List[Pipeline]:
+        return self._workflow
+
+    @workflow.setter
+    def workflow(self, value) -> None:
+        """Assign the application description, validating it *now*.
+
+        Mis-described workflows used to surface deep inside the run (a
+        non-Pipeline entry crashed the Enqueue thread; duplicate names broke
+        resume keying and the declarative result store silently). Accepts a
+        single Pipeline, a list of Pipelines, or anything iterable over
+        Pipelines (e.g. an ``api.compile()`` result).
+        """
+        if isinstance(value, Pipeline):
+            value = [value]
+        pipelines = list(value)
+        for entry in pipelines:
+            if not isinstance(entry, Pipeline):
+                raise ValueError_(
+                    f"workflow entries must be Pipeline, got "
+                    f"{type(entry).__name__}: {entry!r} — wrap Stages/Tasks "
+                    f"in a Pipeline (or use repro.api and compile())")
+        pnames = [p.name for p in pipelines]
+        if len(pnames) != len(set(pnames)):
+            dupes = sorted({n for n in pnames if pnames.count(n) > 1})
+            raise ValueError_(
+                f"duplicate pipeline names in workflow: {dupes} — pipeline "
+                f"names must be unique (they key journal replay and the "
+                f"state table)")
+        tnames = [t.name for p in pipelines for s in p.stages
+                  for t in s.tasks]
+        if len(tnames) != len(set(tnames)):
+            seen, dupes = set(), set()
+            for n in tnames:
+                (dupes if n in seen else seen).add(n)
+            raise ValueError_(
+                f"duplicate task names in workflow: {sorted(dupes)[:5]} — "
+                f"task names must be unique across the workflow (resume and "
+                f"result routing are keyed on them)")
+        self._workflow = pipelines
+
     def _validate(self, resume: bool) -> None:
         if not self.workflow:
             raise ValueError_("workflow is empty")
@@ -186,12 +228,16 @@ class AppManager:
         self._validate(resume)
         resumed_done = set()
         resumed_retries: Dict[str, int] = {}
+        resumed_results: Dict[str, object] = {}
+        result_omitted: set = set()
         if resume and self.journal_path and os.path.exists(self.journal_path):
             replay = Journal.replay(self.journal_path)
             for (kind, name), state in replay["state"].items():
                 if kind == "task" and state == st.DONE:
                     resumed_done.add(name)
             resumed_retries = dict(replay["retries"])
+            resumed_results = dict(replay["results"])
+            result_omitted = set(replay["result_omitted"])
         self._index_tasks()
         for p in self.workflow:
             for s in p.stages:
@@ -210,7 +256,10 @@ class AppManager:
         self.sync.start()
         self.wfp = WFProcessor(
             self.broker, self.svc, self.prof, self.workflow, self.index,
-            on_task_failure=self.on_task_failure, resumed_done=resumed_done)
+            on_task_failure=self.on_task_failure, resumed_done=resumed_done,
+            # results restore at scheduling time (covers stages appended at
+            # runtime by adaptive rounds, not just the static prefix)
+            resumed_results=resumed_results, result_omitted=result_omitted)
         self.emgr = ExecManager(
             self.broker, self.svc, self.prof, self.rts_factory,
             self.resources, self.index,

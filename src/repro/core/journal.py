@@ -101,16 +101,25 @@ class Journal:
         """Replay a journal file.
 
         Returns ``{"state": {(kind, name): last_state}, "retries": {name: n},
-        "sessions": [...], "records": n}``. Truncated trailing lines (torn
-        write at crash) are tolerated; any earlier corruption raises
-        :class:`JournalCorruption`.
+        "results": {name: value}, "result_omitted": {name, ...},
+        "sessions": [...], "records": n}``. ``results`` restores task return
+        values recorded on DONE transitions (data-flow resume: consumers of
+        a task completed in a previous session still find their inputs);
+        ``result_omitted`` names DONE tasks whose value could not be
+        journaled (not JSON-serializable) — the AppManager re-runs those on
+        resume rather than hand their consumers a lost value. Truncated
+        trailing lines (torn write at crash) are tolerated; any earlier
+        corruption raises :class:`JournalCorruption`.
         """
         state: Dict[Tuple[str, str], str] = {}
         retries: Dict[str, int] = {}
+        results: Dict[str, Any] = {}
+        result_omitted: set = set()
         sessions = []
         n = 0
         if not os.path.exists(path):
-            return {"state": state, "retries": retries, "sessions": sessions,
+            return {"state": state, "retries": retries, "results": results,
+                    "result_omitted": result_omitted, "sessions": sessions,
                     "records": 0}
         with open(path, "r", encoding="utf-8") as fh:
             lines = fh.readlines()
@@ -136,7 +145,17 @@ class Journal:
                 if (rec["kind"] == "task" and rec["to"] == "FAILED"
                         and not rec.get("pilot_lost")):
                     retries[key[1]] = retries.get(key[1], 0) + 1
+                if rec["kind"] == "task" and rec["to"] == "DONE":
+                    # results ride the DONE record; a resumed-DONE replayed
+                    # in a later session carries none — keep the last one
+                    # actually recorded rather than clearing it
+                    if "result" in rec:
+                        results[key[1]] = rec["result"]
+                        result_omitted.discard(key[1])
+                    elif rec.get("result_omitted"):
+                        result_omitted.add(key[1])
             elif rec.get("rec") == "session":
                 sessions.append(rec)
-        return {"state": state, "retries": retries, "sessions": sessions,
+        return {"state": state, "retries": retries, "results": results,
+                "result_omitted": result_omitted, "sessions": sessions,
                 "records": n}

@@ -43,6 +43,16 @@ def register_executable(name: str, fn: Callable[..., Any]) -> str:
     return f"reg://{name}"
 
 
+def registered_executable(name: str) -> Optional[Callable[..., Any]]:
+    """The callable registered under ``name``, or None (no ``reg://`` prefix).
+
+    Used by the declarative API to auto-register task functions without
+    silently re-binding a name that already belongs to a different callable.
+    """
+    with _registry_lock:
+        return _EXECUTABLE_REGISTRY.get(name)
+
+
 def resolve_executable(ref: str) -> Callable[..., Any]:
     name = ref[len("reg://"):]
     with _registry_lock:
@@ -175,6 +185,7 @@ class Task:
             "retries": self.retries,
             "state": self.state,
             "exit_code": self.exit_code,
+            "result": self.result,
             "exception": self.exception,
             "upload_input_data": self.upload_input_data,
             "copy_input_data": self.copy_input_data,
@@ -201,7 +212,7 @@ class Task:
         t.state = d.get("state", states.INITIAL)
         t.state_history = [{"state": t.state, "t": time.time()}]
         t.exit_code = d.get("exit_code")
-        t.result = None
+        t.result = d.get("result")
         t.exception = d.get("exception")
         t.upload_input_data = list(d.get("upload_input_data", ()))
         t.copy_input_data = list(d.get("copy_input_data", ()))

@@ -1,0 +1,89 @@
+"""Process-global output store: task results routed to their consumers.
+
+The declarative API (``repro.api``) compiles data-flow edges — a task
+consuming another task's *return value* — down to PST tasks whose kwargs
+carry ``{"__future__": <producer name>}`` placeholders. Somebody has to hold
+the produced values between the producer's completion and the consumer's
+execution; that is this store.
+
+* **Writer**: the WFProcessor's Dequeue routes ``task.result`` here when a
+  task tagged with a workflow namespace (``task.tags["_wf_ns"]``) reaches
+  DONE — before the stage-closure accounting that makes the consumer's stage
+  schedulable, so a consumer can never execute before its inputs are
+  readable. Adaptive combinators (``repeat_until``/``branch``) additionally
+  write their aggregate values from their ``post_exec`` hooks.
+* **Reader**: the API trampoline (``repro.api.runtime``) resolves
+  placeholders at execution time, RTS-side; ``Future.result()`` reads the
+  same keys after the run.
+* **Resume**: the AppManager preloads replayed journal results for
+  resumed-DONE tasks before the workflow starts, so consumers of tasks
+  completed in a previous session still find their inputs.
+
+Keys are ``(namespace, task name)``: the namespace is minted per
+``api.compile()`` call, so concurrent workflows in one process (tests, the
+federation benchmarks) never collide even when task names repeat.
+
+The store is deliberately process-global and unbounded for the lifetime of a
+namespace — values stay readable after the run for ``Future.result()``.
+Long-lived processes that run many workflows should call
+:meth:`ResultStore.clear_namespace` (``api`` does this in
+``Compiled.close()``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Tuple
+
+from .exceptions import MissingError
+
+_MISSING = object()
+
+
+class ResultStore:
+    """Thread-safe ``(namespace, name) -> value`` map."""
+
+    def __init__(self) -> None:
+        self._data: Dict[Tuple[str, str], Any] = {}
+        self._lock = threading.Lock()
+
+    def put(self, ns: str, name: str, value: Any) -> None:
+        with self._lock:
+            self._data[(ns, name)] = value
+
+    def get(self, ns: str, name: str, default: Any = _MISSING) -> Any:
+        with self._lock:
+            value = self._data.get((ns, name), _MISSING)
+        if value is _MISSING:
+            if default is _MISSING:
+                raise MissingError(
+                    f"no result for task {name!r} in workflow namespace "
+                    f"{ns!r}: its producer has not completed (or its result "
+                    f"was not journal-serializable on resume)")
+            return default
+        return value
+
+    def has(self, ns: str, name: str) -> bool:
+        with self._lock:
+            return (ns, name) in self._data
+
+    def names(self, ns: str) -> List[str]:
+        with self._lock:
+            return [n for (s, n) in self._data if s == ns]
+
+    def clear_namespace(self, ns: str) -> int:
+        with self._lock:
+            keys = [k for k in self._data if k[0] == ns]
+            for k in keys:
+                del self._data[k]
+            return len(keys)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+#: The single per-process store all components share (a store instance per
+#: AppManager would leave the RTS-side trampoline, which only sees task
+#: kwargs, with no way to find "its" store).
+STORE = ResultStore()

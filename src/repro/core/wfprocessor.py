@@ -21,6 +21,7 @@ crash safe (failure model, §II-B.4).
 
 from __future__ import annotations
 
+import json
 import threading
 import time
 import traceback
@@ -30,7 +31,8 @@ from . import states as st
 from .broker import Broker
 from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
                        Profiler)
-from .pst import Pipeline, Stage, WorkflowIndex
+from .pst import Pipeline, Stage, Task, WorkflowIndex
+from .results import STORE as RESULTS
 from .state_service import StateService
 
 PENDING_QUEUE = "pending"
@@ -41,6 +43,9 @@ SCHEDULE_QUEUE = "schedule"   # dirty-pipeline notification channel
 class WFProcessor:
     """Drives an application (list of pipelines) through the PST semantics."""
 
+    #: Largest JSON-encoded task result (bytes) journaled on DONE records.
+    RESULT_JOURNAL_CAP = 256 * 1024
+
     def __init__(
         self,
         broker: Broker,
@@ -50,6 +55,8 @@ class WFProcessor:
         index: WorkflowIndex,
         on_task_failure: str = "continue",  # or "fail_stage"
         resumed_done: Optional[set] = None,
+        resumed_results: Optional[Dict[str, Any]] = None,
+        result_omitted: Optional[set] = None,
     ) -> None:
         self.broker = broker
         self.svc = svc
@@ -58,6 +65,11 @@ class WFProcessor:
         self.index = index
         self.on_task_failure = on_task_failure
         self.resumed_done = resumed_done or set()
+        # journal-replayed task return values / names whose value could not
+        # be journaled; applied at *scheduling* time so stages appended at
+        # runtime (adaptive rounds) restore results exactly like static ones
+        self.resumed_results = resumed_results or {}
+        self.result_omitted = result_omitted or set()
         broker.declare(PENDING_QUEUE)
         broker.declare(DONE_QUEUE)
         broker.declare(SCHEDULE_QUEUE)
@@ -233,8 +245,16 @@ class WFProcessor:
         payload = []
         for task in stage.tasks:
             if (task.name in self.resumed_done
-                    and task.state == st.INITIAL):
+                    and task.state == st.INITIAL
+                    and not self._result_lost(task)):
                 # resume: completed in a previous session, skip execution
+                # and restore its journaled result for data-flow consumers
+                if task.result is None and task.name in self.resumed_results:
+                    task.result = self.resumed_results[task.name]
+                ns = task.tags.get("_wf_ns")
+                if ns is not None and (task.name in self.resumed_results
+                                       or task.result is not None):
+                    RESULTS.put(ns, task.name, task.result)
                 self.svc.advance_seq(
                     task, (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING,
                            st.SUBMITTED, st.EXECUTED, st.DONE),
@@ -352,7 +372,8 @@ class WFProcessor:
             if msg.get("canceled") or msg.get("exit_code") == -2:
                 self.svc.advance_seq(task, prefix + (st.CANCELED,), sink=sink)
             elif msg.get("exit_code") == 0:
-                self.svc.advance_seq(task, prefix + (st.DONE,), sink=sink)
+                self.svc.advance_seq(task, prefix + (st.DONE,),
+                                     sink=sink, **self._route_result(task))
             else:
                 exc = str(msg.get("exception", ""))[:500]
                 if task.retries < task.max_retries:
@@ -380,6 +401,53 @@ class WFProcessor:
                     pipe.note_task_failed()
                 self._maybe_finalize_stage(pipe, stage, sink=sink)
         return True
+
+    def _result_lost(self, task: Task) -> bool:
+        """True when a DONE task's value never reached the journal and a
+        data-flow consumer may need it: re-run the producer on resume
+        instead of resuming it value-less."""
+        return (task.name in self.result_omitted
+                and task.tags.get("_wf_ns") is not None)
+
+    def _route_result(self, task: Task) -> Dict[str, Any]:
+        """Route a DONE task's return value and decide its journal extra.
+
+        Data-flow routing (declarative API): tasks compiled from
+        ``repro.api`` carry their workflow namespace in
+        ``task.tags['_wf_ns']``; their results go into the process-global
+        :data:`~repro.core.results.STORE` *here* — before the stage-closure
+        accounting below makes any consumer schedulable — so a consumer can
+        never execute ahead of its inputs.
+
+        Persistence: with a write-ahead journal behind the run, the result
+        rides the DONE transition record so resume/replay restores it
+        (consumers of a task completed in a previous session still find
+        their inputs). Results that JSON cannot round-trip are journaled as
+        ``result_omitted`` — replay then re-runs the producer instead of
+        silently feeding consumers a corrupted value. Plain workloads
+        (result ``None``, or no journal and no namespace) pay nothing.
+        """
+        ns = task.tags.get("_wf_ns")
+        if ns is not None:
+            # store even None: a consumer must see "produced None", never
+            # "missing" (the store distinguishes the two)
+            RESULTS.put(ns, task.name, task.result)
+        if not self.svc.durable or (task.result is None and ns is None):
+            return {}
+        try:
+            # must ROUND-TRIP, not merely serialize: int dict keys / tuples
+            # survive dumps but come back mutated, which is exactly the
+            # silent corruption result_omitted exists to prevent. The size
+            # cap bounds both the journal (one JSONL line per result) and
+            # this completion-path check; oversized values journal as
+            # omitted and their producers simply re-run on resume.
+            encoded = json.dumps(task.result)
+            if (len(encoded) <= self.RESULT_JOURNAL_CAP
+                    and json.loads(encoded) == task.result):
+                return {"result": task.result}
+        except (TypeError, ValueError):
+            pass
+        return {"result_omitted": True}
 
     # -- stage / pipeline closure -----------------------------------------------#
 

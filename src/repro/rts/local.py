@@ -256,9 +256,11 @@ class LocalRTS(RTS):
         if cancel_event.is_set():
             return -2, None, None
         kwargs = dict(task.kwargs)
-        # cooperative cancellation for long-running callables that opt in
-        if "_cancel_event" in getattr(fn, "__code__", type("", (), {
-                "co_varnames": ()})).co_varnames:
+        # cooperative cancellation for callables that declare the parameter
+        # (parameters only — co_varnames alone would also match body locals)
+        code = getattr(fn, "__code__", None)
+        if code is not None and "_cancel_event" in code.co_varnames[
+                :code.co_argcount + code.co_kwonlyargcount]:
             kwargs["_cancel_event"] = cancel_event
         try:
             result = fn(*task.args, **kwargs)

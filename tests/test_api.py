@@ -1,0 +1,380 @@
+"""Declarative API: combinators, DAG->PST compilation, data flow, adaptivity,
+and the quickstart-equivalence acceptance (LocalRTS + federated failover)."""
+
+import threading
+import time
+
+import pytest
+
+from repro import api
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.core import states as st
+from repro.core.exceptions import ValueError_
+from repro.rts.base import ResourceDescription
+from repro.rts.local import LocalRTS
+
+
+def _square(x):
+    return x * x
+
+
+def _offset(x, delta=0.0):
+    return x + delta
+
+
+def _total(values):
+    return sum(values)
+
+
+def _identity(x):
+    return x
+
+
+def _tasks_of(amgr):
+    return [t for p in amgr.workflow for s in p.stages for t in s.tasks]
+
+
+# --------------------------------------------------------------------------- #
+# Description / compilation
+# --------------------------------------------------------------------------- #
+
+def test_sweep_is_deterministic_cartesian_product():
+    pts = api.sweep(x=[1, 2], y=["a", "b"])
+    assert pts == [{"x": 1, "y": "a"}, {"x": 1, "y": "b"},
+                   {"x": 2, "y": "a"}, {"x": 2, "y": "b"}]
+    assert api.sweep() == [{}]
+
+
+def test_compile_layers_dag_into_stages():
+    sims = api.ensemble(_square, over=api.sweep(x=range(4)), name="sq")
+    red = api.gather(sims, _total, name="tot")
+    post = api.task(_offset, args=(red.out,), name="post")
+    compiled = api.compile(post, name="layers")
+    assert len(compiled.pipelines) == 1
+    stages = compiled.pipelines[0].stages
+    assert [sorted(t.name for t in s.tasks) for s in stages] == [
+        ["sq-0", "sq-1", "sq-2", "sq-3"], ["tot"], ["post"]]
+    # every generated task is resumable (trampoline + registered fn)
+    assert all(t.resumable for s in stages for t in s.tasks)
+
+
+def test_compile_orders_layers_widest_first():
+    specs = [api.task(_square, kwargs={"x": i}, name=f"w{i}", slots=s)
+             for i, s in enumerate([1, 4, 2, 8])]
+    red = api.gather(specs, _total, name="red")
+    compiled = api.compile(red, name="widest")
+    widths = [t.slots for t in compiled.pipelines[0].stages[0].tasks]
+    assert widths == sorted(widths, reverse=True)
+
+
+def test_disconnected_components_become_concurrent_pipelines():
+    a = api.gather(api.ensemble(_square, over=api.sweep(x=range(2)),
+                                name="ea"), _total, name="ra")
+    b = api.gather(api.ensemble(_square, over=api.sweep(x=range(3)),
+                                name="eb"), _total, name="rb")
+    compiled = api.compile(a, b, name="comp")
+    assert len(compiled.pipelines) == 2
+    assert {p.ntasks for p in compiled.pipelines} == {3, 4}
+
+
+def test_backend_affinity_carries_to_tasks():
+    ens = api.ensemble(_square, over=api.sweep(x=range(2)), name="pin",
+                       backend="devices")
+    het = api.ensemble(_square, over=[{"x": 1}, {"x": 2}], name="het",
+                       backend=lambda p: "big" if p["x"] > 1 else None)
+    compiled = api.compile(ens, het, name="aff")
+    by_name = {t.name: t for p in compiled for s in p.stages
+               for t in s.tasks}
+    assert by_name["pin-0"].backend == "devices"
+    assert by_name["het-0"].backend is None
+    assert by_name["het-1"].backend == "big"
+
+
+def test_compile_validation_errors():
+    # cycle (via control deps)
+    a = api.task(_square, kwargs={"x": 1}, name="a")
+    b = api.task(_square, kwargs={"x": a.out}, name="b")
+    a.after = [b.out]
+    with pytest.raises(api.CompileError, match="cycle"):
+        api.compile(b, name="cyc")
+
+    # duplicate names
+    c = api.task(_square, kwargs={"x": 1}, name="dup")
+    d = api.task(_square, kwargs={"x": c.out}, name="dup")
+    with pytest.raises(api.CompileError, match="duplicate task name"):
+        api.compile(d, name="dups")
+
+    # synthetic executable cannot consume futures
+    p = api.task(_square, kwargs={"x": 1}, name="p")
+    s = api.task("sleep://0.1", kwargs={"x": p.out}, name="sleepy")
+    with pytest.raises(api.CompileError, match="consumes futures"):
+        api.compile(s, name="sl")
+
+    # future from a different compile() call
+    g = api.task(_square, kwargs={"x": 2}, name="g")
+    api.compile(g, name="one")
+    h = api.task(_square, kwargs={"x": g.out}, name="h")
+    with pytest.raises(api.CompileError, match="different compile"):
+        api.compile(h, name="two")
+
+    # a node passed where a future belongs
+    ens = api.ensemble(_square, over=[{"x": 1}], name="en0")
+    with pytest.raises(api.CompileError, match="pass its output"):
+        api.compile(api.task(_total, args=(ens,), name="bad"), name="na")
+
+    # two adaptive combinators that cannot be ordered
+    root = api.task(_square, kwargs={"x": 0}, name="root")
+    b1 = api.branch(lambda ctx: True, None, after=root, name="b1")
+    b2 = api.branch(lambda ctx: True, None, after=root, name="b2")
+    j = api.gather([b1, b2], _total, name="j")
+    with pytest.raises(api.CompileError, match="parallel adaptive"):
+        api.compile(j, name="par")
+
+
+def test_combinator_names_are_reserved_at_compile_time():
+    """A task sharing a repeat_until/branch name would collide in the
+    result store — compile() must reject it, not the run."""
+    clash = api.task(_square, kwargs={"x": 1}, name="opt")
+    loop = api.repeat_until(
+        lambda ctx: True,
+        lambda ctx: api.task(_square, kwargs={"x": 2}, name=f"b{ctx.round}"),
+        after=clash, name="opt")
+    with pytest.raises(api.CompileError, match="duplicate task name 'opt'"):
+        api.compile(loop, name="clashwf")
+
+
+def test_failing_adaptive_hook_is_loud():
+    """A raising predicate must fail api.run(), never a silent short loop."""
+    def bad_predicate(ctx):
+        raise RuntimeError("boom in predicate")
+
+    loop = api.repeat_until(
+        bad_predicate,
+        lambda ctx: api.task(_square, kwargs={"x": ctx.round},
+                             name=f"fh-{ctx.round}"),
+        name="fh-loop", max_rounds=3)
+    with pytest.raises(Exception, match="adaptive hook"):
+        api.run(loop, resources=ResourceDescription(slots=2),
+                name="fhwf", timeout=60)
+
+
+def test_workflow_setter_validates_at_assignment():
+    amgr = AppManager()
+    with pytest.raises(ValueError_, match="must be Pipeline"):
+        amgr.workflow = [Stage("s")]
+    p1, p2 = Pipeline("same"), Pipeline("same")
+    for p in (p1, p2):
+        stg = Stage()
+        stg.add_tasks(Task(executable="sleep://0"))
+        p.add_stages(stg)
+    with pytest.raises(ValueError_, match="duplicate pipeline names"):
+        amgr.workflow = [p1, p2]
+    q1, q2 = Pipeline("q1"), Pipeline("q2")
+    for p in (q1, q2):
+        stg = Stage()
+        stg.add_tasks(Task(name="t-dup", executable="sleep://0"))
+        p.add_stages(stg)
+    with pytest.raises(ValueError_, match="duplicate task names"):
+        amgr.workflow = [q1, q2]
+    # a single pipeline is accepted and wrapped
+    amgr.workflow = q1
+    assert amgr.workflow == [q1]
+
+
+# --------------------------------------------------------------------------- #
+# Execution: data flow, chains, adaptivity
+# --------------------------------------------------------------------------- #
+
+def test_dataflow_values_route_to_consumers():
+    sims = api.ensemble(_offset, over=[{"x": i, "delta": 0.5}
+                                       for i in range(4)], name="m")
+    red = api.gather(sims, _total, name="sum")
+    # futures may nest inside containers
+    deep = api.task(_identity, kwargs={"x": {"__ignored": [red.out]}},
+                    name="deep")
+    compiled = api.compile(deep, name="flow")
+    amgr = AppManager(resources=ResourceDescription(slots=4))
+    amgr.workflow = compiled
+    amgr.run(timeout=60)
+    assert amgr.all_done
+    assert red.out.result() == 8.0            # 0.5*4 + 0+1+2+3
+    assert deep.out.result() == {"__ignored": [8.0]}
+    assert sims.specs[1].out.result() == 1.5
+
+
+def test_none_results_route_as_values_not_missing():
+    """A producer that returns None is 'produced None', never 'missing'."""
+    def produce_none():
+        return None
+
+    p = api.task(produce_none, name="nil")
+    c = api.task(_identity, kwargs={"x": p.out}, name="nil-consumer")
+    res = api.run(c, resources=ResourceDescription(slots=2),
+                  name="nilwf", timeout=60)
+    assert res.all_done
+    assert p.out.result() is None
+    assert c.out.result() is None
+
+
+def test_chain_threads_data_through_callables():
+    def make():
+        return [1, 2, 3]
+
+    def double(v):
+        return [x * 2 for x in v]
+
+    ch = api.chain(make, double, _total, name="ch")
+    res = api.run(ch, resources=ResourceDescription(slots=2),
+                  name="chainwf", timeout=60)
+    assert res.all_done
+    assert ch.futures()[0].result() == 12
+
+
+def test_branch_takes_then_and_else_paths():
+    def flat_total(values):
+        return sum(values[0])   # gather over a branch sees [branch_value]
+
+    outcomes = {}
+    for val in (9, 1):
+        probe = api.task(_offset, kwargs={"x": val}, name=f"probe{val}")
+        br = api.branch(
+            lambda ctx: ctx.value > 5,
+            then=lambda ctx: api.task(_offset,
+                                      kwargs={"x": ctx.value * 100},
+                                      name=f"heavy{val}"),
+            orelse=None, after=probe, name=f"br{val}")
+        fin = api.gather(br, flat_total, name=f"fin{val}")
+        res = api.run(fin, resources=ResourceDescription(slots=2),
+                      name=f"brwf{val}", timeout=60)
+        assert res.all_done
+        outcomes[val] = br.out.result()
+        # the continuation after the branch ran in both cases
+        assert fin.out.result() == sum(br.out.result())
+    assert outcomes[9] == [900.0]
+    assert outcomes[1] == [1.0]   # else-arm: branch value = decision inputs
+
+
+def test_repeat_until_appends_rounds_and_feeds_results_forward():
+    rounds_built = []
+
+    def body(ctx):
+        base = 0 if ctx.results is None else max(ctx.results)
+        rounds_built.append(ctx.round)
+        return api.ensemble(_offset, over=[{"x": base, "delta": 1},
+                                           {"x": base, "delta": 2}],
+                            name=f"g-r{ctx.round}")
+
+    def flat_total(values):
+        return sum(values[0])   # gather over a loop sees [final_round_results]
+
+    loop = api.repeat_until(lambda ctx: max(ctx.results) >= 6, body,
+                            name="climb", max_rounds=10)
+    summary = api.gather(loop, flat_total, name="summary")
+    res = api.run(summary, resources=ResourceDescription(slots=4),
+                  name="loopwf", timeout=120)
+    assert res.all_done
+    assert rounds_built == [0, 1, 2]          # 2 -> 4 -> 6: three rounds
+    assert loop.out.result() == [5, 6]
+    assert summary.out.result() == 11
+    # rounds were appended at runtime onto ONE pipeline (PST semantics):
+    # 3 rounds x (2 members + 1 check) + the continuation's summary task
+    [pipe] = res.amgr.workflow
+    assert pipe.ntasks == 3 * 2 + 3 + 1
+    assert len(pipe.stages) == 7
+    assert pipe.is_final
+
+
+def test_repeat_until_respects_max_rounds():
+    loop = api.repeat_until(lambda ctx: False,
+                            lambda ctx: api.task(_offset,
+                                                 kwargs={"x": ctx.round},
+                                                 name=f"mr-{ctx.round}"),
+                            name="bounded", max_rounds=3)
+    res = api.run(loop, resources=ResourceDescription(slots=2),
+                  name="mrwf", timeout=60)
+    assert res.all_done
+    assert loop.out.result() == [2]           # rounds 0,1,2 then forced stop
+
+
+# --------------------------------------------------------------------------- #
+# Acceptance: quickstart equivalence on LocalRTS and a failing federation
+# --------------------------------------------------------------------------- #
+
+def _imperative_quickstart(duration="0.05"):
+    pipelines = []
+    for p in range(2):
+        pipe = Pipeline(f"imp-pipe{p}")
+        for s in range(2):
+            stage = Stage(f"imp-s{s}")
+            stage.add_tasks([Task(name=f"imp-p{p}s{s}t{t}",
+                                  executable=f"sleep://{duration}")
+                             for t in range(8)])
+            pipe.add_stages(stage)
+        pipelines.append(pipe)
+    return pipelines
+
+
+def _declarative_quickstart(duration="0.05"):
+    """The same workload described via api.ensemble: 2 concurrent
+    2-stage pipelines of 8 concurrent sleep tasks each."""
+    nodes = []
+    for p in range(2):
+        s0 = api.ensemble(f"sleep://{duration}", over=[{}] * 8,
+                          name=f"dec-p{p}s0")
+        s1 = api.ensemble(f"sleep://{duration}", over=[{}] * 8,
+                          name=f"dec-p{p}s1", after=s0)
+        nodes.append(s1)
+    return nodes
+
+
+def test_equivalence_declarative_quickstart_matches_imperative_pst():
+    imp = AppManager(resources=ResourceDescription(slots=4))
+    imp.workflow = _imperative_quickstart()
+    imp.run(timeout=120)
+
+    compiled = api.compile(*_declarative_quickstart(), name="decl-qs")
+    dec = AppManager(resources=ResourceDescription(slots=4))
+    dec.workflow = compiled
+    dec.run(timeout=120)
+
+    # identical PST shape: pipelines, stages per pipeline, tasks per stage
+    shape = lambda a: sorted(  # noqa: E731
+        [len(s.tasks) for s in p.stages] for p in a.workflow)
+    assert shape(dec) == shape(imp) == [[8, 8], [8, 8]]
+    # identical execution outcome: same task count, same terminal states
+    assert len(_tasks_of(dec)) == len(_tasks_of(imp)) == 32
+    assert ({t.state for t in _tasks_of(dec)}
+            == {t.state for t in _tasks_of(imp)} == {st.DONE})
+    assert imp.all_done and dec.all_done
+
+
+def test_equivalence_federated_with_member_killed_mid_run():
+    """The declarative quickstart workload on a 2-member federation, one
+    member killed mid-run: zero lost completions, results still routed."""
+
+    def work(i):
+        time.sleep(0.2)
+        return i * 10
+
+    sims = api.ensemble(work, over=api.sweep(i=range(12)), name="fed-w")
+    red = api.gather(sims, _total, name="fed-sum")
+    compiled = api.compile(red, name="fed-qs")
+
+    rds = [ResourceDescription(slots=2, extra={"name": f"fm{i}"})
+           for i in range(2)]
+    amgr = AppManager(resources=rds, rts_factory=LocalRTS,
+                      heartbeat_interval=0.1)
+    amgr.workflow = compiled
+
+    def kill():
+        time.sleep(0.3)
+        amgr.emgr.rts.members[1].rts.simulate_dead = True
+
+    threading.Thread(target=kill, daemon=True).start()
+    amgr.run(timeout=120)
+    assert amgr.all_done                       # zero lost completions
+    assert amgr.emgr.rts.members_lost == 1
+    assert amgr.emgr.rts_restarts == 0         # absorbed by failover
+    # results survived the failover and were routed to the reduction
+    assert red.out.result() == sum(i * 10 for i in range(12))
+    assert {t.state for t in _tasks_of(amgr)} == {st.DONE}

@@ -1,0 +1,141 @@
+"""Resume/replay through the declarative API: a repeat_until ensemble killed
+mid-run resumes from the journal with task *results* intact and no
+re-execution of DONE tasks."""
+
+import threading
+
+import pytest
+
+from repro import api
+from repro.core import AppManager
+from repro.core import states as st
+from repro.core.exceptions import EnTKError
+from repro.core.journal import Journal
+from repro.rts.base import ResourceDescription
+
+# module-level so registration names are stable across the two "sessions"
+EXECUTIONS = []
+GATE = threading.Event()
+
+
+def counted_step(x, r, block=False, _cancel_event=None):
+    EXECUTIONS.append((r, x))
+    if block and not GATE.is_set():
+        # first session: hang until the workflow is killed; when teardown's
+        # cooperative cancel releases the worker, FAIL rather than complete
+        # (a killed task must never journal a bogus DONE)
+        if _cancel_event is not None:
+            _cancel_event.wait(30)
+        raise RuntimeError("killed mid-run")
+    return x + 10
+
+
+def final_summary(values):
+    return {"final": values}
+
+
+def _build(block_round: int):
+    """Deterministic adaptive workflow: round k feeds round k+1."""
+    def body(ctx):
+        base = 0 if ctx.results is None else max(ctx.results)
+        return api.ensemble(
+            counted_step,
+            over=[{"x": base, "r": ctx.round,
+                   "block": ctx.round == block_round},
+                  {"x": base + 1, "r": ctx.round, "block": False}],
+            name=f"s-r{ctx.round}")
+
+    loop = api.repeat_until(lambda ctx: max(ctx.results) >= 25, body,
+                            name="lp", max_rounds=6)
+    return loop, api.gather(loop, final_summary, name="wrap")
+
+
+def test_repeat_until_resumes_with_results_and_no_reexecution(tmp_path):
+    jp = str(tmp_path / "api-resume.jsonl")
+
+    # ---- session 1: round 1 blocks forever; the run is killed by timeout
+    GATE.clear()
+    EXECUTIONS.clear()
+    loop1, wrap1 = _build(block_round=1)
+    with pytest.raises(EnTKError, match="timed out"):
+        api.run(wrap1, resources=ResourceDescription(slots=2),
+                name="rwf", journal_path=jp, timeout=2.0)
+    ran_r0 = sorted(e for e in EXECUTIONS if e[0] == 0)
+    assert ran_r0 == [(0, 0), (0, 1)]          # round 0 completed...
+    assert (1, 11) in EXECUTIONS               # ...round 1 started, died
+
+    # the journal recorded round 0's DONE results
+    replay = Journal.replay(jp)
+    assert replay["state"][("task", "s-r0-0")] == st.DONE
+    assert replay["results"]["s-r0-0"] == 10
+    assert replay["results"]["s-r0-1"] == 11
+
+    # ---- session 2: unblock, rebuild the same description, resume
+    GATE.set()
+    EXECUTIONS.clear()
+    loop2, wrap2 = _build(block_round=1)
+    res = api.run(wrap2, resources=ResourceDescription(slots=2),
+                  name="rwf", journal_path=jp, resume=True, timeout=60)
+    assert res.all_done
+
+    # DONE tasks were NOT re-executed: round 0 never ran again, and neither
+    # did round 1's sibling that finished before the kill — only the task
+    # actually lost mid-run re-executes
+    assert not [e for e in EXECUTIONS if e[0] == 0], EXECUTIONS
+    assert sorted(e for e in EXECUTIONS if e[0] == 1) == [(1, 11)]
+
+    # results flowed across the session boundary: round 1 consumed round
+    # 0's journaled values (base=11), and the loop converged identically
+    assert loop2.out.result() == [32, 33]
+    assert wrap2.out.result() == {"final": [[32, 33]]}
+    states = res.task_states
+    assert states["s-r0-0"] == st.DONE and states["s-r2-1"] == st.DONE
+
+
+def test_imperative_results_survive_resume_too(tmp_path):
+    """Result persistence is a core feature, not an API-only one: any
+    durable run journals DONE results and restores them on resume."""
+    jp = str(tmp_path / "core-resume.jsonl")
+
+    def produce():
+        return {"payload": [1, 2, 3]}
+
+    spec = api.task(produce, name="producer")
+    api.run(spec, resources=ResourceDescription(slots=1), name="core-res",
+            journal_path=jp, timeout=60)
+
+    # a later session resumes: the task is skipped, its result restored
+    spec2 = api.task(produce, name="producer")
+    compiled = api.compile(spec2, name="core-res")
+    amgr = AppManager(resources=ResourceDescription(slots=1),
+                      journal_path=jp)
+    amgr.workflow = compiled
+    amgr.run(resume=True, timeout=60)
+    assert amgr.all_done
+    task = amgr.workflow[0].stages[0].tasks[0]
+    assert task.result == {"payload": [1, 2, 3]}
+    assert spec2.out.result() == {"payload": [1, 2, 3]}
+
+
+def test_non_serializable_result_reruns_producer_on_resume(tmp_path):
+    """A DONE task whose value could not be journaled must re-run on resume
+    (its consumers need the value), instead of resuming value-less."""
+    jp = str(tmp_path / "omit-resume.jsonl")
+    runs = []
+
+    def opaque():
+        runs.append(1)
+        return object()   # not JSON-serializable
+
+    api.run(api.task(opaque, name="op"), journal_path=jp,
+            resources=ResourceDescription(slots=1), name="om", timeout=60)
+    assert len(runs) == 1
+    replay = Journal.replay(jp)
+    assert "op" in replay["result_omitted"]
+    assert "op" not in replay["results"]
+
+    res = api.run(api.task(opaque, name="op"), journal_path=jp,
+                  resources=ResourceDescription(slots=1), name="om2",
+                  resume=True, timeout=60)
+    assert res.all_done
+    assert len(runs) == 2   # re-executed, not skipped
