@@ -1,11 +1,21 @@
-"""Compare a scheduler-scaling benchmark run against a checked-in baseline.
+"""Compare a benchmark run against a checked-in baseline (CI gates).
 
-CI gate: the declarative API (and anything else riding the hot path) must
-stay compile-time only — marginal toolkit-CPU per task at the largest
-common pipeline count may not regress more than ``--factor`` (default 2x,
-generous because GitHub runners are noisy) versus the PR-1 baseline.
+Two gates share this entry point, selected with ``--bench``:
+
+* ``sched`` (default) — the declarative API (and anything else riding the
+  hot path) must stay compile-time only: marginal toolkit-CPU per task at
+  the largest common pipeline count may not regress more than ``--factor``
+  (default 2x, generous because GitHub runners are noisy) versus the PR-1
+  baseline.
+* ``fusion`` — the fused execution engine must keep paying for itself:
+  at the largest common member count, fused throughput may not regress
+  more than ``--factor`` versus the PR-4 baseline AND the fused/scalar
+  speedup measured *within the current run* must stay above
+  ``--min-speedup`` (the within-run ratio is immune to runner speed, so
+  it is the sharper signal on shared runners).
 
     python -m benchmarks.check_regression current.json baseline.json
+    python -m benchmarks.check_regression cur.json base.json --bench fusion
 
 Exit 0 = within budget; exit 1 = regression (or unusable inputs).
 """
@@ -18,13 +28,13 @@ import sys
 from typing import Dict, Optional
 
 
-def _sched_rows(path: str) -> Dict[int, dict]:
+def _rows(path: str, prefix: str, key: str) -> Dict[int, dict]:
     with open(path, "r", encoding="utf-8") as fh:
         data = json.load(fh)
     rows = {}
     for row in data.get("rows", []):
-        if row.get("name", "").startswith("sched_") and "n_pipelines" in row:
-            rows[int(row["n_pipelines"])] = row
+        if row.get("name", "").startswith(prefix) and key in row:
+            rows[int(row[key])] = row
     return rows
 
 
@@ -45,16 +55,9 @@ def _pick_field(cur: dict, base: dict) -> Optional[str]:
     return None
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="bench JSON from this run")
-    ap.add_argument("baseline", help="checked-in baseline JSON")
-    ap.add_argument("--factor", type=float, default=2.0,
-                    help="max allowed current/baseline ratio")
-    args = ap.parse_args()
-
-    cur = _sched_rows(args.current)
-    base = _sched_rows(args.baseline)
+def check_sched(args) -> int:
+    cur = _rows(args.current, "sched_", "n_pipelines")
+    base = _rows(args.baseline, "sched_", "n_pipelines")
     common = sorted(set(cur) & set(base))
     if not common:
         print(f"[check] no common sched sizes between {args.current} "
@@ -76,6 +79,48 @@ def main() -> int:
         print(f"[check] current run did not complete: {cur[n]}")
         return 1
     return 0 if ratio <= args.factor else 1
+
+
+def check_fusion(args) -> int:
+    cur = _rows(args.current, "fusion_", "n_members")
+    base = _rows(args.baseline, "fusion_", "n_members")
+    common = sorted(set(cur) & set(base))
+    if not common:
+        print(f"[check] no common fusion sizes between {args.current} "
+              f"({sorted(cur)}) and {args.baseline} ({sorted(base)})")
+        return 1
+    n = common[-1]   # the largest size is where fusion must pay off most
+    c = _metric(cur[n], "fused_tasks_per_s")
+    b = _metric(base[n], "fused_tasks_per_s")
+    speedup = _metric(cur[n], "speedup")
+    if c is None or b is None or speedup is None:
+        print(f"[check] unusable fusion rows at {n} members: "
+              f"current={cur[n]} baseline={base[n]}")
+        return 1
+    ratio = b / c   # >1 = current slower than baseline
+    ok = ratio <= args.factor and speedup >= args.min_speedup
+    print(f"[check] fusion @ {n} members: fused {c:.0f} tasks/s vs "
+          f"baseline {b:.0f} -> x{ratio:.2f} slower (budget "
+          f"x{args.factor:.1f}); within-run speedup x{speedup:.2f} "
+          f"(floor x{args.min_speedup:.1f}) "
+          f"{'OK' if ok else 'REGRESSION'}")
+    if not cur[n].get("all_done", True):
+        print(f"[check] current run did not complete: {cur[n]}")
+        return 1
+    return 0 if ok else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="bench JSON from this run")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--bench", choices=("sched", "fusion"), default="sched")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed regression ratio vs the baseline")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fusion only: min within-run fused/scalar speedup")
+    args = ap.parse_args()
+    return check_sched(args) if args.bench == "sched" else check_fusion(args)
 
 
 if __name__ == "__main__":

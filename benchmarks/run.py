@@ -137,6 +137,29 @@ def fig11_anen(quick: bool) -> None:
          repeats=len(rows))
 
 
+def fusion_throughput(quick: bool) -> None:
+    from benchmarks import fusion
+    rows = fusion.run(quick)
+    for r in rows:
+        _row(f"fusion_{r['n_members']}", 1e6 / max(1e-9,
+                                                   r["fused_tasks_per_s"]),
+             n_members=r["n_members"],
+             scalar_tasks_per_s=round(r["scalar_tasks_per_s"], 1),
+             fused_tasks_per_s=round(r["fused_tasks_per_s"], 1),
+             speedup=round(r["speedup"], 2),
+             dispatches=r["dispatches"],
+             fused_members=r["fused_members"],
+             max_drift=r["max_drift"],
+             all_done=r["all_done"])
+    # the fused path must produce the scalar path's values — a drifting
+    # or incomplete run fails the bench (and the CI smoke job) outright
+    # (1e-4 relative tolerates reduction reassociation, nothing more)
+    bad = [r["n_members"] for r in rows
+           if not r["all_done"] or r["max_drift"] > 1e-4]
+    if bad:
+        raise RuntimeError(f"fusion drift/incomplete at sizes: {bad}")
+
+
 def fed_throughput(quick: bool) -> None:
     from benchmarks import federation
     rows = federation.run(quick)
@@ -195,6 +218,7 @@ BENCHES = {
     "fig10": fig10_seismic,
     "fig11": fig11_anen,
     "fed": fed_throughput,
+    "fusion": fusion_throughput,
     "roofline": roofline_table,
 }
 

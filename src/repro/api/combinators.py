@@ -70,6 +70,7 @@ def ensemble(
     max_retries: int = 0,
     duration_hint: Optional[float] = None,
     after: Union[None, Node, Future, Sequence[Union[Node, Future]]] = None,
+    fuse: bool = True,
 ) -> Ensemble:
     """One task per parameter point; the paper's homogeneous ensemble.
 
@@ -80,11 +81,25 @@ def ensemble(
     ``<name>-<i>``; when ``name`` is omitted the members are auto-named by
     the compiler's per-workflow counters (deterministic per compile — name
     ensembles explicitly in resumable adaptive rounds).
+
+    ``fuse`` (default True): when ``fn`` is a :func:`repro.fusion.fusable`
+    kernel, members are tagged with a fusion group key at compile time so a
+    fusion-capable RTS (JaxRTS) executes congruent members as one batched
+    device dispatch instead of one task per Python thread — with unchanged
+    per-member completion, failure and resume semantics. ``fuse=False``
+    opts the ensemble out (every member runs scalar). Functions without
+    the marker are unaffected either way.
     """
     points = list(over)
     if not points:
         raise CompileError("ensemble(over=...) produced zero parameter "
                            "points — nothing to run")
+    group_key = None
+    if fuse and callable(fn):
+        # deferred import: the api layer only needs the key computation,
+        # and must stay importable without touching the fusion package
+        from ..fusion.groups import fusion_group_key
+        group_key = fusion_group_key
     specs = []
     for i, point in enumerate(points):
         if not isinstance(point, dict):
@@ -92,10 +107,14 @@ def ensemble(
                 f"ensemble 'over' entries must be kwargs dicts, got "
                 f"{type(point).__name__} at index {i}")
         member_backend = backend(point) if callable(backend) else backend
+        fusion_group = (group_key(fn, point, slots=slots,
+                                  backend=member_backend)
+                        if group_key is not None else None)
         specs.append(TaskSpec(
             fn, kwargs=point, name=f"{name}-{i}" if name else None,
             slots=slots, backend=member_backend, max_retries=max_retries,
-            duration_hint=duration_hint, after=after))
+            duration_hint=duration_hint, after=after,
+            fusion_group=fusion_group))
     return Ensemble(specs, name)
 
 

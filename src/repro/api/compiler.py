@@ -274,6 +274,10 @@ def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
             slots=spec.slots, backend=spec.backend,
             max_retries=spec.max_retries, duration_hint=spec.duration_hint)
     task.tags["_wf_ns"] = ctx.ns
+    if spec.fusion_group is not None:
+        # the Emgr packer and a fusion-capable RTS read this tag to batch
+        # congruent ensemble members into one device dispatch
+        task.tags["_fusion_group"] = spec.fusion_group
     spec.task = task
     spec.ns = ctx.ns
     return task

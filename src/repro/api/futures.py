@@ -93,6 +93,7 @@ class TaskSpec(Node):
         max_retries: int = 0,
         duration_hint: Optional[float] = None,
         after: Union[None, Node, Future, Sequence[Union[Node, Future]]] = None,
+        fusion_group: Optional[str] = None,
     ) -> None:
         if not callable(fn) and not isinstance(fn, str):
             raise CompileError(
@@ -107,6 +108,10 @@ class TaskSpec(Node):
         self.backend = backend
         self.max_retries = max_retries
         self.duration_hint = duration_hint
+        # fusion group key (repro.fusion): members of one homogeneous
+        # ensemble share it, letting a fusion-capable RTS batch them into
+        # a single device dispatch; None = never fuse
+        self.fusion_group = fusion_group
         self.after = _as_future_list(after)
         self.out = Future(self)
         # compile-time bindings

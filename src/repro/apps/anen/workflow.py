@@ -26,8 +26,9 @@ import numpy as np
 
 from ... import api
 from ...core import AppManager, register_executable
+from ...fusion import fusable
 from ...rts.base import ResourceDescription
-from ...rts.local import LocalRTS
+from ...rts.jax_rts import JaxRTS
 from .anen import (AnEnConfig, compute_analogs, gradient_magnitude,
                    idw_interpolate, make_dataset, rmse)
 
@@ -37,35 +38,77 @@ _DATASETS: Dict[int, object] = {}
 def _dataset(seed: int, ny: int, nx: int, n_hist: int):
     key = (seed, ny, nx, n_hist)
     if key not in _DATASETS:
-        _DATASETS[key] = make_dataset(
-            AnEnConfig(ny=ny, nx=nx, n_hist=n_hist, seed=seed))
+        import jax
+        data = make_dataset(AnEnConfig(ny=ny, nx=nx, n_hist=n_hist,
+                                       seed=seed))
+        if any(isinstance(leaf, jax.core.Tracer) for leaf in data):
+            # first call happened inside a trace (e.g. a fused vmap of
+            # analog_values without its batched impl): valid for this
+            # trace, but caching would leak tracers into later calls
+            return data
+        _DATASETS[key] = data
     return _DATASETS[key]
 
 
-def analog_task(seed: int, ny: int, nx: int, n_hist: int, k: int,
-                locations: List[List[int]]) -> Dict:
-    """EnTK task: compute analogs at a slice of locations."""
+def _analog_values_batched(locations, *, seed: int, ny: int, nx: int,
+                           n_hist: int, k: int):
+    """Hand-batched implementation for the fusion engine: one dispatch for
+    a whole micro-batch of members.
+
+    ``locations`` is (B, n, 2) int32 — B members' (possibly padded)
+    location slices. The member axis folds into the location axis (every
+    location is independent), the similarity matrix runs through the
+    Pallas distance kernel, and the analog means unfold back to (B, n).
+    """
+    import jax
+    import jax.numpy as jnp
+    from ...kernels.anen_distance import anen_distance
+
+    data = _dataset(seed, ny, nx, n_hist)
+    b, n, _ = locations.shape
+    flat = locations.reshape(b * n, 2)
+    ys, xs = flat[:, 0], flat[:, 1]
+    f_now = data.forecast_now[:, ys, xs]            # (V, B·n)
+    f_h = data.hist_forecast[:, :, ys, xs]          # (H, V, B·n)
+    o_h = data.hist_obs[:, ys, xs]                  # (H, B·n)
+    interpret = jax.default_backend() == "cpu"
+    d2 = anen_distance(f_h, f_now, interpret=interpret)
+    _, idx = jax.lax.top_k(-d2.T, k)                # (B·n, k) most similar
+    picked = jnp.take_along_axis(o_h.T, idx, axis=1)
+    return picked.mean(axis=1).reshape(b, n)
+
+
+@fusable(static_argnames=("seed", "ny", "nx", "n_hist", "k"),
+         pad_argnames=("locations",), batched=_analog_values_batched)
+def analog_values(locations: List[List[int]], seed: int = 0, ny: int = 48,
+                  nx: int = 48, n_hist: int = 120, k: int = 12):
+    """EnTK task: analog predictions at a slice of locations — the fused
+    AnEn member kernel. Scalar execution (LocalRTS, or a group below the
+    fusion threshold) computes exactly the same values through
+    :func:`compute_analogs`; fused execution batches congruent members into
+    one dispatch with the Pallas distance kernel."""
     import jax.numpy as jnp
     data = _dataset(seed, ny, nx, n_hist)
     locs = jnp.asarray(locations, jnp.int32)
-    vals = compute_analogs(data, locs, k)
-    return {"locations": locations, "values": np.asarray(vals).tolist()}
+    return compute_analogs(data, locs, k)
 
 
-register_executable("analog_task", analog_task)
+register_executable("analog_values", analog_values)
 
 
 class _SearchState:
     """Shared state the adaptive post_exec hooks steer."""
 
     def __init__(self, method: str, seed: int, cfg: AnEnConfig,
-                 per_iter: int, max_iters: int, n_tasks: int) -> None:
+                 per_iter: int, max_iters: int, n_tasks: int,
+                 fuse: bool = True) -> None:
         self.method = method
         self.seed = seed
         self.cfg = cfg
         self.per_iter = per_iter
         self.max_iters = max_iters
         self.n_tasks = n_tasks
+        self.fuse = fuse
         self.rng = np.random.default_rng(seed + (0 if method == "aua"
                                                  else 10_000))
         self.locations: List[List[int]] = []
@@ -73,6 +116,10 @@ class _SearchState:
         self.errors: List[float] = []
         self.iteration = 0
         self.data = _dataset(seed, cfg.ny, cfg.nx, cfg.n_hist)
+        # the location slices of the round in flight: member results come
+        # back as bare value arrays (device-resident on the fused path), so
+        # the builder keeps the location bookkeeping host-side
+        self._round_slices: List[List[List[int]]] = []
 
     # ---- location proposal ------------------------------------------------ #
 
@@ -137,13 +184,18 @@ class _SearchState:
 
     # ---- bookkeeping ------------------------------------------------------- #
 
-    def absorb(self, results: List[Dict]) -> None:
-        """Fold one round's task results (analog values) into the estimate."""
-        for r in results:
+    def absorb(self, results: List) -> None:
+        """Fold one round's task results (analog values) into the estimate.
+
+        ``results`` line up with the round's location slices by member
+        index; each value may be a list, ndarray, or a device-resident
+        :class:`~repro.fusion.ArrayResult` — ``np.asarray`` reads them all.
+        """
+        for slice_locs, r in zip(self._round_slices, results):
             if r is None:
                 continue
-            self.locations.extend(r["locations"])
-            self.values.extend(r["values"])
+            self.locations.extend(slice_locs)
+            self.values.extend(np.asarray(r).tolist())
         import jax.numpy as jnp
         locs = jnp.asarray(self.locations, jnp.int32)
         vals = jnp.asarray(self.values, jnp.float32)
@@ -164,13 +216,14 @@ class _SearchState:
         locs = self.propose(self.per_iter)
         slices = [sl for sl in np.array_split(locs, self.n_tasks)
                   if len(sl)]
+        self._round_slices = [sl.tolist() for sl in slices]
         return api.ensemble(
-            analog_task,
+            analog_values,
             over=[{"seed": self.seed, "ny": self.cfg.ny, "nx": self.cfg.nx,
                    "n_hist": self.cfg.n_hist, "k": self.cfg.k,
                    "locations": sl.tolist()} for sl in slices],
             name=f"{self.method}-it{ctx.round}-{self.seed}",
-            max_retries=1)
+            max_retries=1, fuse=self.fuse)
 
     def converged(self, ctx: api.LoopContext) -> bool:
         """repeat_until predicate: absorb the finished round, then decide."""
@@ -186,11 +239,17 @@ class _SearchState:
 
 def _run(method: str, seed: int, *, ny: int, nx: int, n_hist: int,
          per_iter: int, max_iters: int, n_tasks: int, slots: int,
-         timeout: float) -> Dict:
+         timeout: float, fuse: bool = True) -> Dict:
     cfg = AnEnConfig(ny=ny, nx=nx, n_hist=n_hist, seed=seed)
-    search = _SearchState(method, seed, cfg, per_iter, max_iters, n_tasks)
+    search = _SearchState(method, seed, cfg, per_iter, max_iters, n_tasks,
+                          fuse=fuse)
     amgr = AppManager(resources=ResourceDescription(slots=slots),
-                      rts_factory=LocalRTS, heartbeat_interval=1.0)
+                      # the fused path: congruent analog members of one
+                      # round batch into a single dispatch on the device
+                      # pool (fuse=False or a LocalRTS factory reproduces
+                      # the per-task scalar behaviour bit-for-bit)
+                      rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
+                      heartbeat_interval=1.0)
     compiled = api.compile(search.as_loop(), name=f"anen-{method}-{seed}")
     amgr.workflow = compiled
     amgr.run(timeout=timeout)

@@ -16,10 +16,13 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from ... import api
 from ...core import AppManager, Pipeline, Stage, Task, register_executable
+from ...fusion import fusable
 from ...rts.base import ResourceDescription
+from ...rts.jax_rts import JaxRTS
 from ...rts.local import LocalRTS
-from .solver import SeismicConfig, forward_simulation, make_velocity_model
+from .solver import SeismicConfig, forward_simulation, make_velocity_model, misfit
 
 _CACHE: Dict[str, object] = {}
 
@@ -29,6 +32,20 @@ def _forward_jit():
         _CACHE["fwd"] = jax.jit(forward_simulation,
                                 static_argnames=("source_x", "cfg"))
     return _CACHE["fwd"]
+
+
+def _velocity(kind: str, cfg: SeismicConfig, seed: int):
+    key = ("vel", kind, cfg, seed)
+    if key not in _CACHE:
+        vel = make_velocity_model(cfg, kind, seed=seed)
+        if isinstance(vel, jax.core.Tracer):
+            # first call happened inside a trace (a fused vmap of
+            # eval_misfit): the value is a traced constant — valid for
+            # this trace, but caching it would leak the tracer into every
+            # later scalar call
+            return vel
+        _CACHE[key] = vel
+    return _CACHE[key]
 
 
 def simulate_earthquake(source_x: int, nx: int = 96, nz: int = 96,
@@ -44,6 +61,75 @@ def simulate_earthquake(source_x: int, nx: int = 96, nz: int = 96,
 
 
 register_executable("simulate_earthquake", simulate_earthquake)
+
+
+@fusable(static_argnames=("nx", "nz", "nt", "seed", "dv"))
+def eval_misfit(source_x: int, nx: int = 64, nz: int = 64, nt: int = 120,
+                seed: int = 0, dv: float = 0.0):
+    """EnTK task: the misfit of a trial (smooth background + ``dv``)
+    velocity model against the true model's data for one earthquake — the
+    fused seismic member kernel of the tomography workflow's evaluation
+    sweep. ``source_x`` varies per member, so a fused micro-batch runs the
+    whole source ensemble (observed-data forward + trial forward + misfit)
+    as one batched scan over (B, nz, nx) wavefields.
+    """
+    import jax.numpy as jnp
+    cfg = SeismicConfig(nx=nx, nz=nz, nt=nt)
+    vel_true = _velocity("true", cfg, seed)
+    vel_trial = _velocity("init", cfg, seed) + jnp.float32(dv)
+    observed = forward_simulation(vel_true, source_x, cfg)
+    return misfit(vel_trial, observed, source_x, cfg)
+
+
+register_executable("eval_misfit", eval_misfit)
+
+
+def build_misfit_ensemble(n_events: int, *, nx: int = 64, nz: int = 64,
+                          nt: int = 120, seed: int = 0, dv: float = 0.0,
+                          max_retries: int = 0, fuse: bool = True
+                          ) -> api.Ensemble:
+    """The misfit-evaluation sweep as a declarative (fusible) ensemble."""
+    xs = np.linspace(8, nx - 9, n_events).astype(int)
+    return api.ensemble(
+        eval_misfit,
+        over=[{"source_x": int(sx), "nx": nx, "nz": nz, "nt": nt,
+               "seed": seed, "dv": dv} for sx in xs],
+        name=f"misfit-{seed}", max_retries=max_retries, fuse=fuse)
+
+
+def total_misfit(values: List) -> float:
+    """Gather: the ensemble objective Σ_sources misfit(source)."""
+    return float(np.sum([np.asarray(v) for v in values]))
+
+
+def run_misfit_ensemble(n_events: int, slots: int = 4, *, nx: int = 64,
+                        nt: int = 120, seed: int = 0, dv: float = 0.0,
+                        fuse: bool = True, timeout: float = 600.0) -> Dict:
+    """Evaluate the source-ensemble misfit on the fused JaxRTS path.
+
+    ``fuse=False`` runs the identical description member-per-task — the
+    scalar baseline the fusion benchmark and the parity tests compare
+    against.
+    """
+    ens = build_misfit_ensemble(n_events, nx=nx, nz=nx, nt=nt, seed=seed,
+                                dv=dv, fuse=fuse)
+    objective = api.gather(ens, total_misfit, name=f"total-misfit-{seed}")
+    t0 = time.time()
+    result = api.run(
+        objective, resources=ResourceDescription(slots=slots),
+        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
+        timeout=timeout)
+    elapsed = time.time() - t0
+    out = {
+        "n_events": n_events,
+        "fused": fuse,
+        "all_done": result.all_done,
+        "total_misfit": objective.out.result(),
+        "misfits": [float(np.asarray(s.out.result())) for s in ens.specs],
+        "wallclock_s": elapsed,
+    }
+    result.close()
+    return out
 
 
 def build_forward_ensemble(n_events: int, *, nx: int = 96, nz: int = 96,

@@ -259,7 +259,11 @@ class AppManager:
             on_task_failure=self.on_task_failure, resumed_done=resumed_done,
             # results restore at scheduling time (covers stages appended at
             # runtime by adaptive rounds, not just the static prefix)
-            resumed_results=resumed_results, result_omitted=result_omitted)
+            resumed_results=resumed_results, result_omitted=result_omitted,
+            # sidecar for results that journal as spill records (fused
+            # device arrays) — only meaningful with a write-ahead journal
+            spill_dir=(f"{self.journal_path}.spill"
+                       if self.journal_path else None))
         self.emgr = ExecManager(
             self.broker, self.svc, self.prof, self.rts_factory,
             self.resources, self.index,

@@ -236,6 +236,10 @@ class ExecManager:
         rts = self.rts
         if rts is None:
             return
+        try:
+            fusion = rts.supports_fusion()
+        except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
+            fusion = False
         member_slots = getattr(rts, "member_slots", None)
         if member_slots is not None:
             try:
@@ -243,9 +247,15 @@ class ExecManager:
             except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
                 return
             known = getattr(rts, "member_names", lambda: list(slots_map))()
+            # whole-group pinning is only sound on members that actually
+            # batch fused groups; a federation names them, a plain RTS that
+            # supports fusion batches everywhere it places
+            fuse_members = getattr(rts, "fusion_members", None)
+            fusing = (set(fuse_members()) if fuse_members is not None
+                      else (set(known) if fusion else set()))
             with self._lock:
                 placements = self._pick_batch_federated_locked(
-                    slots_map, set(known))
+                    slots_map, set(known), fusing=fusing)
                 batch = []
                 for name, task in placements:
                     task.tags["_fed_member"] = name
@@ -257,7 +267,7 @@ class ExecManager:
             except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
                 return
             with self._lock:
-                batch = self._pick_batch_locked(free)
+                batch = self._pick_batch_locked(free, fusion=fusion)
                 for task in batch:
                     self._submitted[task.uid] = task
         if not batch:
@@ -320,8 +330,16 @@ class ExecManager:
         return best[1] if best else None
 
     def _take_locked(self, width: int, batch: List[Task],
-                     remaining: int) -> int:
-        """Move fitting live tasks of one width bucket into ``batch``."""
+                     remaining: int, fusion: bool = False) -> int:
+        """Move fitting live tasks of one width bucket into ``batch``.
+
+        Against a fusion-capable RTS, taking a task that carries a
+        ``_fusion_group`` tag drains every *consecutive* same-group task in
+        the bucket along with it, charging the group's slots ONCE: the RTS
+        executes the whole group as batched dispatches on one member-width
+        device lease, so per-member slot accounting here would throttle
+        submission to scalar speed — the opposite of what fusion buys.
+        """
         dq = self._backlog.get(width)
         while dq and width <= remaining:
             _, task = dq.popleft()
@@ -330,11 +348,35 @@ class ExecManager:
                 continue  # lazily pruned
             batch.append(task)
             remaining -= width
+            if fusion:
+                self._drain_group_locked(dq, task, batch.append)
         if dq is not None and not dq:
             del self._backlog[width]
         return remaining
 
-    def _pick_batch_locked(self, free: Optional[int]) -> List[Task]:
+    def _drain_group_locked(self, dq: Optional[Deque], first: Task,
+                            take: Callable[[Task], None]) -> None:
+        """Pop every consecutive task sharing ``first``'s fusion group off
+        the bucket front into ``take`` (lazily pruning finals) WITHOUT
+        charging slots: the group rides the single batched dispatch its
+        first member already paid for."""
+        group = first.tags.get("_fusion_group")
+        if group is None:
+            return
+        while dq:
+            _, nxt = dq[0]
+            if nxt.is_final:
+                dq.popleft()
+                self._backlog_uids.discard(nxt.uid)
+                continue
+            if nxt.tags.get("_fusion_group") != group:
+                return
+            dq.popleft()
+            self._backlog_uids.discard(nxt.uid)
+            take(nxt)
+
+    def _pick_batch_locked(self, free: Optional[int],
+                           fusion: bool = False) -> List[Task]:
         """Largest-fit backfill of the backlog into ``free`` slots.
 
         ``free is None`` means the RTS does not report capacity (e.g. the
@@ -380,7 +422,8 @@ class ExecManager:
         for width in sorted(self._backlog, reverse=True):
             if remaining <= 0:
                 break
-            remaining = self._take_locked(width, batch, remaining)
+            remaining = self._take_locked(width, batch, remaining,
+                                          fusion=fusion)
         if not batch:
             return []
         if any(t.uid == head.uid for t in batch):
@@ -391,7 +434,8 @@ class ExecManager:
 
     def _pick_batch_federated_locked(
             self, slots_map: Dict[str, "tuple[int, int]"],
-            known: set) -> List["tuple[str, Task]"]:
+            known: set,
+            fusing: Optional[set] = None) -> List["tuple[str, Task]"]:
         """Placement-aware backfill over a federation's members.
 
         ``slots_map``: ``{member: (free, total)}`` for *active* members;
@@ -423,20 +467,28 @@ class ExecManager:
                 return [task.backend]
             return None if task.backend in known else []
 
-        def try_place(task: Task) -> str:
+        def try_place(task: Task,
+                      pin: Optional[str] = None) -> "tuple[str, Optional[str]]":
+            """Place one task; returns (status, member). ``pin`` places on
+            that member without charging its free count — used to keep a
+            fusible group's members together on the member that already
+            charged for the group's single batched dispatch."""
+            if pin is not None:
+                placements.append((pin, task))
+                return "placed", pin
             names = eligible(task)
             if names is None:
-                return "park"
+                return "park", None
             if not names and task.backend is not None:
                 placements.append((task.backend, task))
-                return "placed"  # unknown member: the RTS owns the error
+                return "placed", task.backend  # unknown: the RTS owns the error
             fits = [n for n in names if free[n] >= task.slots]
             if not fits:
-                return "full"
+                return "full", None
             pick = max(fits, key=lambda n: free[n])
             free[pick] -= task.slots
             placements.append((pick, task))
-            return "placed"
+            return "placed", pick
 
         # federation-wide starvation head: oldest bucket-front that is not
         # parked (a parked task cannot make progress, so it must not hold
@@ -475,7 +527,8 @@ class ExecManager:
                 try_place(htask)
                 self._head_skips = 0
         for width in sorted(self._backlog, reverse=True):
-            self._take_federated_locked(width, try_place)
+            self._take_federated_locked(width, try_place,
+                                        fusing=fusing or set())
         if not placements:
             return []
         if head is None or any(t.uid == head[1].uid for _, t in placements):
@@ -484,11 +537,20 @@ class ExecManager:
             self._head_skips += 1
         return placements
 
-    def _take_federated_locked(self, width: int,
-                               try_place: Callable[[Task], str]) -> None:
+    def _take_federated_locked(self, width: int, try_place: Callable,
+                               fusing: set) -> None:
         """Scan one width bucket: place what fits, skip over parked tasks,
         stop at the first task that is eligible but out of capacity (strict
-        FIFO within a width, exactly like the single-member packer)."""
+        FIFO within a width, exactly like the single-member packer).
+
+        Placing a ``_fusion_group``-tagged task on a member in ``fusing``
+        (one whose runtime batches fused groups) pins every consecutive
+        same-group task onto that member without charging its free count
+        again: the group executes there as one batched dispatch (group
+        keys include the backend affinity, so the pin never violates
+        placement constraints). A group landing on a *scalar* member is
+        never pinned — that pilot runs tasks one by one, so its members
+        place and charge individually like any other work."""
         dq = self._backlog.get(width)
         if dq is None:
             return
@@ -498,9 +560,12 @@ class ExecManager:
             if task.is_final:
                 self._backlog_uids.discard(task.uid)
                 continue
-            res = try_place(task)
+            res, member = try_place(task)
             if res == "placed":
                 self._backlog_uids.discard(task.uid)
+                if member is not None and member in fusing:
+                    self._drain_group_locked(
+                        dq, task, lambda nxt: try_place(nxt, pin=member))
             elif res == "park":
                 kept.append((seq, task))
             else:  # full

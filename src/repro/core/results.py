@@ -33,11 +33,81 @@ Long-lived processes that run many workflows should call
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 from .exceptions import MissingError
 
 _MISSING = object()
+
+
+# --------------------------------------------------------------------------- #
+# Journal-value codecs
+# --------------------------------------------------------------------------- #
+# Rich result objects (e.g. the fusion engine's device-resident ArrayResult)
+# cannot ride a DONE record as JSON. Instead they journal a small tagged dict
+# ({"__codec__": <tag>, ...}) produced by the object's ``to_journal`` hook,
+# and replay turns the dict back into the live object through a decoder
+# registered here. The core stays ignorant of any concrete codec — higher
+# layers register theirs at import time (see repro.fusion.handles).
+
+_CODEC_KEY = "__codec__"
+_CODECS: Dict[str, Callable[[Dict[str, Any]], Any]] = {}
+_SPILLERS: list = []
+_codec_lock = threading.Lock()
+
+
+def register_result_codec(tag: str,
+                          decode: Callable[[Dict[str, Any]], Any]) -> None:
+    """Register ``decode`` for journal records tagged ``tag``."""
+    with _codec_lock:
+        _CODECS[tag] = decode
+
+
+def register_result_spiller(
+        spill: Callable[[Any, str], "Dict[str, Any] | None"]) -> None:
+    """Register ``spill(value, spill_dir) -> record|None``: a last chance
+    to journal a value that neither carries a ``to_journal`` hook nor
+    JSON-round-trips. Returning a tagged record (decodable through a
+    registered codec) journals it; ``None`` passes to the next spiller
+    (and ultimately to ``result_omitted``)."""
+    with _codec_lock:
+        _SPILLERS.append(spill)
+
+
+def spill_journal_value(value: Any, spill_dir: Any) -> Any:
+    """Offer ``value`` to the registered spillers; record dict or None."""
+    if not spill_dir:
+        return None
+    with _codec_lock:
+        spillers = list(_SPILLERS)
+    for spill in spillers:
+        try:
+            record = spill(value, spill_dir)
+        except Exception:  # noqa: BLE001 - a failed spill is just omitted
+            record = None
+        if record is not None:
+            return record
+    return None
+
+
+def decode_journal_value(value: Any) -> Any:
+    """Decode a journal-replayed result value.
+
+    Plain values pass through. Tagged dicts dispatch to their codec; an
+    unknown tag or a failing decoder raises :class:`MissingError`, which the
+    resume path answers by re-running the producer (the same contract as
+    ``result_omitted``).
+    """
+    if isinstance(value, dict) and _CODEC_KEY in value:
+        with _codec_lock:
+            decode = _CODECS.get(value[_CODEC_KEY])
+        if decode is None:
+            raise MissingError(
+                f"no result codec registered for journal tag "
+                f"{value[_CODEC_KEY]!r} — import the producing subsystem "
+                f"before resuming")
+        return decode(value)
+    return value
 
 
 class ResultStore:

@@ -33,6 +33,7 @@ from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
                        Profiler)
 from .pst import Pipeline, Stage, Task, WorkflowIndex
 from .results import STORE as RESULTS
+from .results import decode_journal_value, spill_journal_value
 from .state_service import StateService
 
 PENDING_QUEUE = "pending"
@@ -57,6 +58,7 @@ class WFProcessor:
         resumed_done: Optional[set] = None,
         resumed_results: Optional[Dict[str, Any]] = None,
         result_omitted: Optional[set] = None,
+        spill_dir: Optional[str] = None,
     ) -> None:
         self.broker = broker
         self.svc = svc
@@ -70,6 +72,9 @@ class WFProcessor:
         # runtime (adaptive rounds) restore results exactly like static ones
         self.resumed_results = resumed_results or {}
         self.result_omitted = result_omitted or set()
+        # sidecar directory for results too rich to JSON onto a DONE record
+        # (fused array handles journal a content hash + spill path instead)
+        self.spill_dir = spill_dir
         broker.declare(PENDING_QUEUE)
         broker.declare(DONE_QUEUE)
         broker.declare(SCHEDULE_QUEUE)
@@ -246,19 +251,8 @@ class WFProcessor:
         for task in stage.tasks:
             if (task.name in self.resumed_done
                     and task.state == st.INITIAL
-                    and not self._result_lost(task)):
-                # resume: completed in a previous session, skip execution
-                # and restore its journaled result for data-flow consumers
-                if task.result is None and task.name in self.resumed_results:
-                    task.result = self.resumed_results[task.name]
-                ns = task.tags.get("_wf_ns")
-                if ns is not None and (task.name in self.resumed_results
-                                       or task.result is not None):
-                    RESULTS.put(ns, task.name, task.result)
-                self.svc.advance_seq(
-                    task, (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING,
-                           st.SUBMITTED, st.EXECUTED, st.DONE),
-                    resumed=True, sink=sink)
+                    and not self._result_lost(task)
+                    and self._restore_resumed(task, sink)):
                 continue
             if task.is_final:
                 continue
@@ -402,6 +396,29 @@ class WFProcessor:
                 self._maybe_finalize_stage(pipe, stage, sink=sink)
         return True
 
+    def _restore_resumed(self, task: Task, sink: Optional[List[Any]]) -> bool:
+        """Resume one task completed in a previous session: skip execution
+        and restore its journaled result for data-flow consumers. Returns
+        False — schedule the task normally, i.e. re-run the producer — when
+        the journaled value cannot be decoded (a spilled fused-array whose
+        sidecar file is missing or corrupted): consumers must never receive
+        a silently-wrong input on resume."""
+        if task.result is None and task.name in self.resumed_results:
+            try:
+                task.result = decode_journal_value(
+                    self.resumed_results[task.name])
+            except Exception:  # noqa: BLE001 - undecodable: re-run producer
+                return False
+        ns = task.tags.get("_wf_ns")
+        if ns is not None and (task.name in self.resumed_results
+                               or task.result is not None):
+            RESULTS.put(ns, task.name, task.result)
+        self.svc.advance_seq(
+            task, (st.SCHEDULING, st.SCHEDULED, st.SUBMITTING,
+                   st.SUBMITTED, st.EXECUTED, st.DONE),
+            resumed=True, sink=sink)
+        return True
+
     def _result_lost(self, task: Task) -> bool:
         """True when a DONE task's value never reached the journal and a
         data-flow consumer may need it: re-run the producer on resume
@@ -434,6 +451,19 @@ class WFProcessor:
             RESULTS.put(ns, task.name, task.result)
         if not self.svc.durable or (task.result is None and ns is None):
             return {}
+        encode = getattr(task.result, "to_journal", None)
+        if callable(encode):
+            # rich result handle (fused device arrays): journal a tiny
+            # codec record (content hash + spill path) instead of a JSON
+            # encoding that would blow the result cap; with no sidecar
+            # directory fall back to result_omitted → producer re-runs
+            try:
+                record = encode(self.spill_dir)
+            except Exception:  # noqa: BLE001 - spill failed: omit, re-run
+                record = None
+            if record is not None:
+                return {"result": record}
+            return {"result_omitted": True}
         try:
             # must ROUND-TRIP, not merely serialize: int dict keys / tuples
             # survive dumps but come back mutated, which is exactly the
@@ -444,9 +474,23 @@ class WFProcessor:
             encoded = json.dumps(task.result)
             if (len(encoded) <= self.RESULT_JOURNAL_CAP
                     and json.loads(encoded) == task.result):
+                if (isinstance(task.result, dict)
+                        and "__codec__" in task.result):
+                    # a plain value of this shape would be dispatched to a
+                    # result codec on replay and silently substituted —
+                    # omit it so the producer re-runs instead (same guard
+                    # philosophy as the {"__future__"} placeholder clash)
+                    return {"result_omitted": True}
                 return {"result": task.result}
         except (TypeError, ValueError):
             pass
+        # last chance before omission: a registered spiller may be able to
+        # journal it (array values from fused kernels running on the
+        # SCALAR path land here — without the spill, resume would re-run
+        # every DONE member of a fuse=False run)
+        record = spill_journal_value(task.result, self.spill_dir)
+        if record is not None:
+            return {"result": record}
         return {"result_omitted": True}
 
     # -- stage / pipeline closure -----------------------------------------------#

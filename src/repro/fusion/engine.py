@@ -1,0 +1,374 @@
+"""Fused execution engine: N congruent tasks → one batched JAX dispatch.
+
+Given a micro-batch of member tasks (same kernel, congruent kwargs — see
+:mod:`repro.fusion.groups`), the engine
+
+1. resolves each member's callable and kwargs (trampoline-aware: tasks
+   compiled by ``repro.api`` carry ``{"__future__": ...}`` placeholders
+   that resolve against the result store, exactly as the scalar path does),
+2. stacks the batch kwargs onto a leading axis — padding declared
+   variable-length arguments to the group maximum by edge replication,
+   which is safe for per-row kernels because padded rows are trimmed from
+   the outputs before delivery,
+3. dispatches **once**: the kernel's hand-written batched implementation
+   when it has one, else ``jax.vmap`` of the scalar kernel, jitted with a
+   cache keyed on (kernel, static arguments) so repeated micro-batches of
+   one ensemble reuse the trace,
+4. fans the stacked output back out as one completion per member — the
+   ``FusedCompletion`` fan-out: every member gets its own DONE/FAILED
+   event, so journal records, retry budgets and resume semantics are
+   per-task, exactly as if the members had run scalar.
+
+Failure isolation: a member whose outputs contain non-finite values FAILS
+alone (the rest of the batch completes); an exception raised by the batched
+dispatch itself degrades the whole micro-batch to per-member scalar
+execution so only the actually-culpable members fail. Resume of a
+partially-failed batch therefore re-runs exactly the failed members.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.pst import Task, resolve_executable
+from ..rts.base import TaskCompletion
+from .groups import FusionSpec, fusion_spec
+from .handles import ArrayResult
+
+Deliver = Callable[[TaskCompletion], None]
+
+TRAMPOLINE = "reg://_api.call"
+
+# (kernel, static kwargs) -> jitted vmapped callable; bounds retracing to
+# one per (ensemble kernel × static configuration), not one per micro-batch.
+# LRU-bounded: a workflow sweeping a static argument (e.g. a line search
+# over a static dv) would otherwise leak one trace per value for the
+# process lifetime — long-lived multi-workflow processes are a target.
+_JIT_CACHE_MAX = 64
+_jit_cache: "OrderedDict[Tuple, Callable[..., Any]]" = OrderedDict()
+_jit_lock = threading.Lock()
+
+
+class Incongruent(Exception):
+    """Members cannot share a dispatch; the caller runs them scalar."""
+
+
+# --------------------------------------------------------------------------- #
+# Member resolution
+# --------------------------------------------------------------------------- #
+
+def member_call(task: Task) -> Tuple[Callable[..., Any], list, dict]:
+    """Resolve one member task to (fn, args, kwargs), placeholders resolved.
+
+    Tasks compiled by the declarative API run through the registered
+    trampoline; fusing must look *through* it to the user kernel, resolving
+    the same future placeholders the trampoline would.
+    """
+    if task.executable == TRAMPOLINE:
+        from ..api.runtime import resolve as resolve_placeholders
+        ns = task.kwargs["__ns__"]
+        fn = resolve_executable(task.kwargs["__fn__"])
+        args = resolve_placeholders(task.kwargs["__args__"], ns)
+        kwargs = resolve_placeholders(task.kwargs["__kwargs__"], ns)
+        return fn, list(args), dict(kwargs)
+    return task.resolve(), list(task.args), dict(task.kwargs)
+
+
+def _unwrap(value: Any) -> Any:
+    """Unwrap ArrayResult handles nested in resolved kwargs."""
+    if isinstance(value, ArrayResult):
+        return value.value
+    if isinstance(value, (list, tuple)):
+        return type(value)(_unwrap(v) for v in value)
+    if isinstance(value, dict):
+        return {k: _unwrap(v) for k, v in value.items()}
+    return value
+
+
+# --------------------------------------------------------------------------- #
+# Batch preparation
+# --------------------------------------------------------------------------- #
+
+def _prepare(calls: Sequence[Tuple[Callable, list, dict]]):
+    """Validate congruence and stack the batch kwargs.
+
+    Returns ``(fn, spec, static_kw, shared_kw, stacked, valid_lens)`` where
+    ``stacked`` maps batch kwarg → array with leading axis ``B`` and
+    ``valid_lens`` is the per-member unpadded length (None when no padding
+    was needed).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    fn0, args0, kwargs0 = calls[0]
+    spec = fusion_spec(fn0)
+    if spec is None:
+        raise Incongruent("kernel lost its fusion marker")
+    keys0 = set(kwargs0)
+    for fn, args, kwargs in calls:
+        if fn is not fn0 or args or set(kwargs) != keys0:
+            raise Incongruent("members disagree on kernel or kwarg names")
+    static_kw = {k: kwargs0[k] for k in spec.static_argnames if k in kwargs0}
+    for _, _, kwargs in calls[1:]:
+        for k, v in static_kw.items():
+            if kwargs[k] != v:
+                raise Incongruent(f"static argument {k!r} differs "
+                                  f"within the group")
+    shared_kw = {k: _unwrap(kwargs0[k])
+                 for k in spec.shared_argnames if k in kwargs0}
+    for _, _, kwargs in calls[1:]:
+        for k, v0 in shared_kw.items():
+            v = _unwrap(kwargs[k])
+            if v is v0:
+                continue  # the common case: one object shared by reference
+            a0, a1 = np.asarray(v0), np.asarray(v)
+            if (a0.shape != a1.shape or a0.dtype != a1.dtype
+                    or not np.array_equal(a0, a1)):
+                # the group key cannot see shared VALUES (arrays are not
+                # hashable into it), so two congruent-looking ensembles
+                # with different shared arrays must be caught here — a
+                # silent first-member pick would compute every other
+                # member against the wrong array
+                raise Incongruent(
+                    f"shared argument {k!r} differs within the group")
+    batch_keys = [k for k in kwargs0
+                  if k not in static_kw and k not in shared_kw]
+
+    stacked: Dict[str, Any] = {}
+    valid_lens: Optional[List[int]] = None
+    for k in batch_keys:
+        raw = [_unwrap(kwargs[k]) for _, _, kwargs in calls]
+        # stack host-side unless a leaf is already device-resident (an
+        # ArrayResult from an upstream fused stage): per-member
+        # jnp.asarray + device jnp.stack costs one dispatch per member —
+        # exactly the per-task overhead fusion exists to remove
+        xp = jnp if any(isinstance(v, jax.Array) for v in raw) else np
+        leaves = [xp.asarray(v) for v in raw]
+        shapes = {leaf.shape for leaf in leaves}
+        if len(shapes) > 1:
+            if k not in spec.pad_argnames:
+                raise Incongruent(
+                    f"argument {k!r} varies in shape but is not declared "
+                    f"in pad_argnames")
+            if any(leaf.ndim == 0 or leaf.shape[1:] != leaves[0].shape[1:]
+                   for leaf in leaves):
+                raise Incongruent(
+                    f"pad argument {k!r} members differ beyond axis 0")
+            lens = [int(leaf.shape[0]) for leaf in leaves]
+            if any(n == 0 for n in lens):
+                raise Incongruent(f"pad argument {k!r} has an empty member")
+            target = max(lens)
+            leaves = [
+                leaf if n == target else xp.concatenate(
+                    [leaf, xp.repeat(leaf[-1:], target - n, axis=0)])
+                for leaf, n in zip(leaves, lens)]
+            if valid_lens is None:
+                valid_lens = lens
+            elif valid_lens != lens:
+                raise Incongruent("pad arguments disagree on member lengths")
+        stacked[k] = xp.stack(leaves)
+    # Bucket the batch axis to the next power of two by duplicating the
+    # last member: jit compiles once per (kernel, statics, SHAPE), and an
+    # Emgr submitting adaptively-sized micro-batches would otherwise pay a
+    # fresh XLA compile (~100x a dispatch) for nearly every carrier. The
+    # duplicate rows compute and are discarded at fan-out.
+    b = len(calls)
+    target_b = 1 << max(0, b - 1).bit_length()
+    if target_b != b:
+        for k, arr in stacked.items():
+            xp = jnp if not isinstance(arr, np.ndarray) else np
+            stacked[k] = xp.concatenate(
+                [arr, xp.repeat(arr[-1:], target_b - b, axis=0)])
+    return fn0, spec, static_kw, shared_kw, stacked, valid_lens
+
+
+def _dispatch(fn, spec: FusionSpec, static_kw: dict, shared_kw: dict,
+              stacked: dict):
+    """One batched device dispatch over the stacked kwargs."""
+    import jax
+
+    if spec.batched is not None:
+        return spec.batched(**stacked, **static_kw, **shared_kw)
+    cache_key: Optional[Tuple] = None
+    try:
+        cache_key = (fn, tuple(sorted(static_kw.items())),
+                     tuple(sorted(stacked)))
+        hash(cache_key)
+    except TypeError:
+        cache_key = None  # unhashable statics: jit without the cache
+    with _jit_lock:
+        jitted = _jit_cache.get(cache_key) if cache_key is not None else None
+        if jitted is not None:
+            _jit_cache.move_to_end(cache_key)
+    if jitted is None:
+        def call(batched: dict, shared: dict):
+            return fn(**batched, **shared, **static_kw)
+        jitted = jax.jit(jax.vmap(call, in_axes=(0, None)))
+        if cache_key is not None:
+            with _jit_lock:
+                _jit_cache[cache_key] = jitted
+                while len(_jit_cache) > _JIT_CACHE_MAX:
+                    _jit_cache.popitem(last=False)
+    return jitted(stacked, shared_kw)
+
+
+class _FanOut:
+    """Turns one stacked output pytree into per-member results.
+
+    Built once per dispatch: per-member-scalar leaves (ndim == 1) transfer
+    to the host in ONE copy and fan out as Python scalars; higher-rank
+    leaves stay on device and members receive zero-copy slices wrapped in
+    :class:`ArrayResult` (device-residency between stages). The finite
+    mask is likewise one reduction per leaf, a single device→host sync for
+    the whole batch instead of one per member.
+    """
+
+    def __init__(self, out: Any, n_live: int, check_finite: bool,
+                 valid_lens: Optional[List[int]]) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        self.leaves, self.treedef = jax.tree_util.tree_flatten(out)
+        self.valid_lens = valid_lens
+        self.padded_len = max(valid_lens) if valid_lens else None
+        self.ok = np.ones(n_live, bool)
+        self.host: Dict[int, np.ndarray] = {}
+        for idx, leaf in enumerate(self.leaves):
+            arr = jnp.asarray(leaf)
+            self.leaves[idx] = arr
+            if arr.ndim == 1:
+                self.host[idx] = np.asarray(arr)
+            if check_finite and jnp.issubdtype(arr.dtype, jnp.floating):
+                fin = jnp.isfinite(arr.reshape(arr.shape[0], -1)).all(axis=1)
+                self.ok &= np.asarray(fin)[:n_live]
+
+    def member(self, i: int) -> Any:
+        import jax
+
+        def pick(idx: int) -> Any:
+            if idx in self.host:
+                return self.host[idx][i].item()
+            piece = self.leaves[idx][i]
+            if (self.valid_lens is not None and piece.ndim >= 1
+                    and piece.shape[0] == self.padded_len
+                    and self.valid_lens[i] < self.padded_len):
+                piece = piece[:self.valid_lens[i]]
+            return piece.item() if piece.ndim == 0 else ArrayResult(piece)
+
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [pick(idx) for idx in range(len(self.leaves))])
+
+
+# --------------------------------------------------------------------------- #
+# Entry point
+# --------------------------------------------------------------------------- #
+
+def execute_fused(
+    members: Sequence[Task],
+    devices: Sequence[Any],
+    cancel_event: threading.Event,
+    deliver: Deliver,
+    *,
+    canceled: Optional[set] = None,
+    fault_injector: Optional[Callable[[Task], bool]] = None,
+) -> Dict[str, int]:
+    """Run ``members`` as one fused dispatch; deliver one completion each.
+
+    Returns execution statistics (``fused`` / ``scalar_fallback`` /
+    ``failed`` member counts). ``canceled`` uids are skipped without a
+    completion (the same semantics as dropping a queued task on cancel);
+    ``fault_injector`` is honoured per member so the failure experiments
+    behave identically on the fused path.
+    """
+    import jax
+
+    canceled = canceled or set()
+    # "dispatches" counts BATCHED dispatches only: a micro-batch that
+    # degraded to per-member scalar execution contributes zero, so the
+    # benchmark's dispatch counts cannot mask a silently-degraded run
+    stats = {"fused": 0, "scalar_fallback": 0, "failed": 0, "dispatches": 0}
+    started = time.time()
+
+    def finish(task: Task, exit_code: int, result: Any = None,
+               exception: Optional[str] = None, n_live: int = 1) -> None:
+        if task.uid in canceled:
+            return
+        now = time.time()
+        if exit_code == 1:
+            stats["failed"] += 1
+        deliver(TaskCompletion(
+            uid=task.uid, exit_code=exit_code, result=result,
+            exception=exception, started_at=started, completed_at=now,
+            execution_seconds=(now - started) / max(1, n_live)))
+
+    live: List[Task] = []
+    for task in members:
+        if task.uid in canceled:
+            continue
+        if cancel_event.is_set():
+            finish(task, -2)
+            continue
+        if fault_injector is not None and fault_injector(task):
+            finish(task, 1, exception="injected fault")
+            continue
+        live.append(task)
+    if not live:
+        return stats
+
+    try:
+        calls = [member_call(t) for t in live]
+        fn, spec, static_kw, shared_kw, stacked, valid_lens = _prepare(calls)
+        out = _dispatch(fn, spec, static_kw, shared_kw, stacked)
+        out = jax.block_until_ready(out)
+        fan = _FanOut(out, len(live), spec.check_finite,
+                      valid_lens if spec.trim_outputs else None)
+        stats["dispatches"] = 1
+    except Exception:  # noqa: BLE001 - degrade to per-member execution
+        return _scalar_fallback(live, cancel_event, finish, stats)
+
+    for i, task in enumerate(live):
+        if cancel_event.is_set():
+            finish(task, -2)
+            continue
+        if not fan.ok[i]:
+            finish(task, 1, exception=(
+                "non-finite values in fused dispatch output "
+                f"(member {task.name})"), n_live=len(live))
+            continue
+        finish(task, 0, result=fan.member(i), n_live=len(live))
+        stats["fused"] += 1
+    return stats
+
+
+def _scalar_fallback(live: Sequence[Task], cancel_event: threading.Event,
+                     finish, stats: Dict[str, int]) -> Dict[str, int]:
+    """The batched dispatch raised (or could not be built): run each member
+    on its own so only the actually-failing members fail."""
+    for task in live:
+        if cancel_event.is_set():
+            finish(task, -2)
+            continue
+        try:
+            fn, args, kwargs = member_call(task)
+            result = fn(*[_unwrap(a) for a in args],
+                        **{k: _unwrap(v) for k, v in kwargs.items()})
+            spec = fusion_spec(fn)
+            if (spec is not None and spec.check_finite
+                    and hasattr(result, "dtype")
+                    and np.issubdtype(np.asarray(result).dtype, np.floating)
+                    and not np.isfinite(np.asarray(result)).all()):
+                finish(task, 1, exception=(
+                    f"non-finite values in scalar fallback output "
+                    f"(member {task.name})"))
+                continue
+            finish(task, 0, result=result)
+            stats["scalar_fallback"] += 1
+        except Exception:  # noqa: BLE001 - per-member isolation
+            finish(task, 1, exception=traceback.format_exc(limit=10))
+    return stats

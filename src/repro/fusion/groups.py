@@ -1,0 +1,132 @@
+"""Fusion groups: which tasks may share one batched device dispatch.
+
+A *fusible group* is a set of tasks that (a) run the same pure-function
+kernel, (b) have congruent argument pytrees (same kwarg names; array leaves
+that differ only in values, or in their leading length for declared
+pad-axis arguments), (c) agree on every *static* argument, and (d) share
+the same resource shape (``slots``) and federation affinity (``backend``).
+Such a group is semantically N independent tasks but can execute as one
+``jax.vmap`` (or hand-written batched) dispatch — the whole point of the
+fusion engine.
+
+The contract is carried on the kernel function itself: :func:`fusable`
+attaches a :class:`FusionSpec`, and :func:`fusion_group_key` folds the
+spec identity plus the congruence-relevant parts of a member's kwargs into
+a string key. Members with equal keys are fusible with each other; a key
+of ``None`` means "never fuse" (unmarked callable, or fusion opted out).
+
+Nothing here imports JAX: group keys are computed at *compile* time (the
+declarative API tags tasks), and must stay cheap and import-light.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence
+
+FUSION_ATTR = "__fusion__"
+GROUP_TAG = "_fusion_group"   # Task.tags key the Emgr / RTS read
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    """How a kernel participates in fused execution.
+
+    ``static_argnames`` — kwargs that must be *equal and hashable* across
+    every member of a group (they parameterize the trace, not the batch);
+    they become part of the group key and are passed unbatched.
+
+    ``shared_argnames`` — array-valued kwargs that are identical across
+    members (e.g. a velocity model every member evaluates): passed once,
+    unbatched, taken from the first member.
+
+    ``pad_argnames`` — kwargs whose leading-axis length may differ between
+    members: the engine pads them (edge-replication) to the group maximum
+    and trims each member's output back to its own length along axis 0.
+
+    ``trim_outputs`` — the output contract that padding relies on: when
+    True (default), EVERY output leaf whose leading axis equals the padded
+    length is treated as following the pad axis and trimmed to the
+    member's own length. A kernel whose output mixes per-row leaves with
+    fixed-length leaves that can collide with the padded length must set
+    this False and slice its own outputs (the engine then delivers padded
+    leaves untouched).
+
+    ``batched`` — optional hand-written batched implementation. Called as
+    ``batched(**kwargs)`` where every non-static/non-shared kwarg carries a
+    leading batch axis; must return outputs with the same leading axis.
+    When absent the engine vmaps the scalar kernel.
+
+    ``check_finite`` — when True (default) a member whose outputs contain
+    non-finite values FAILS alone (exit 1) while the rest of the batch
+    completes: per-member failure isolation for numerical blow-ups.
+
+    ``min_batch`` — per-kernel override of the engine's fuse-vs-scalar
+    threshold (None = use the planner default).
+    """
+
+    static_argnames: Sequence[str] = ()
+    shared_argnames: Sequence[str] = ()
+    pad_argnames: Sequence[str] = ()
+    batched: Optional[Callable[..., Any]] = None
+    check_finite: bool = True
+    min_batch: Optional[int] = None
+    trim_outputs: bool = True
+
+
+def fusable(fn: Optional[Callable[..., Any]] = None, *,
+            static_argnames: Sequence[str] = (),
+            shared_argnames: Sequence[str] = (),
+            pad_argnames: Sequence[str] = (),
+            batched: Optional[Callable[..., Any]] = None,
+            check_finite: bool = True,
+            min_batch: Optional[int] = None,
+            trim_outputs: bool = True) -> Callable[..., Any]:
+    """Mark ``fn`` as a fusion kernel (usable bare or with arguments).
+
+    The function itself is unchanged — it still runs scalar anywhere a
+    plain task callable runs. The marker is what lets ``api.ensemble``
+    compute a group key and the JaxRTS batch congruent members.
+    """
+    spec = FusionSpec(
+        static_argnames=tuple(static_argnames),
+        shared_argnames=tuple(shared_argnames),
+        pad_argnames=tuple(pad_argnames),
+        batched=batched, check_finite=check_finite, min_batch=min_batch,
+        trim_outputs=trim_outputs)
+
+    def mark(f: Callable[..., Any]) -> Callable[..., Any]:
+        setattr(f, FUSION_ATTR, spec)
+        return f
+
+    return mark(fn) if fn is not None else mark
+
+
+def fusion_spec(fn: Any) -> Optional[FusionSpec]:
+    """The :class:`FusionSpec` of a marked callable, else None."""
+    spec = getattr(fn, FUSION_ATTR, None)
+    return spec if isinstance(spec, FusionSpec) else None
+
+
+def fusion_group_key(fn: Callable[..., Any], kwargs: Dict[str, Any],
+                     *, slots: int = 1,
+                     backend: Optional[str] = None) -> Optional[str]:
+    """Group key for one member, or ``None`` when the member cannot fuse.
+
+    Two members with equal keys are guaranteed congruent: same kernel
+    object, same kwarg names, equal static values, same slots/backend.
+    Static values enter as a digest of their reprs — ``repr`` equality is
+    a conservative stand-in for value equality, and a false *negative*
+    only costs a missed fusion, never a wrong batch.
+    """
+    spec = fusion_spec(fn)
+    if spec is None:
+        return None
+    name = f"{getattr(fn, '__module__', '?')}.{getattr(fn, '__qualname__', '?')}"
+    statics = ";".join(
+        f"{k}={kwargs[k]!r}" for k in sorted(spec.static_argnames)
+        if k in kwargs)
+    digest = hashlib.sha1(statics.encode()).hexdigest()[:12]
+    keys = ",".join(sorted(kwargs))
+    return f"{name}|{keys}|s{slots}|b{backend}|{digest}"

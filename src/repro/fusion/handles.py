@@ -1,0 +1,129 @@
+"""Array-result handles: fused outputs that stay device-resident.
+
+A fused dispatch produces one stacked output array; each member's result is
+a zero-copy slice of it. Wrapping the slice in :class:`ArrayResult` (instead
+of converting to a Python list) keeps the value on-device between a producer
+stage and its consumer stage — the consumer's kernel receives the array
+without a host round-trip (``jnp.asarray(handle)`` is the device view).
+
+Journaling: JSON-encoding arrays onto DONE records would blow the 256 KiB
+``result_omitted`` cap for anything real, so a handle journals as a *spill
+record* — ``{"__codec__": "fused_array", "sha256", "path", "shape",
+"dtype"}`` — with the bytes content-addressed under the journal's sidecar
+directory. Replay decodes the record back into an :class:`ArrayResult`
+(verifying the hash); a missing or corrupted spill raises, which the
+resume path answers by re-running the producer — exactly the existing
+``result_omitted`` contract, with the cap now only ever charged for the
+tiny record itself.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from ..core.exceptions import MissingError
+from ..core.results import register_result_codec, register_result_spiller
+
+CODEC = "fused_array"
+
+
+class ArrayResult:
+    """A device-resident array produced by a fused (or scalar) dispatch.
+
+    Ergonomics: ``np.asarray(handle)`` / ``jnp.asarray(handle)`` yield the
+    host / device array; ``.value`` is the wrapped array itself; ``len`` /
+    ``.shape`` / ``.dtype`` forward. Consumers that just do arithmetic can
+    usually pass the handle straight into jnp ops.
+    """
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value: Any) -> None:
+        self._value = value
+
+    @property
+    def value(self) -> Any:
+        return self._value
+
+    @property
+    def shape(self):
+        return getattr(self._value, "shape", ())
+
+    @property
+    def dtype(self):
+        return getattr(self._value, "dtype", None)
+
+    def __len__(self) -> int:
+        return int(self.shape[0]) if self.shape else 0
+
+    def __array__(self, dtype=None):
+        arr = np.asarray(self._value)
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def __jax_array__(self):
+        import jax.numpy as jnp
+        return jnp.asarray(self._value)
+
+    def tolist(self):
+        return np.asarray(self._value).tolist()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<ArrayResult shape={tuple(self.shape)} dtype={self.dtype}>"
+
+    # -- journal spill ------------------------------------------------------ #
+
+    def to_journal(self, spill_dir: Optional[str]) -> Optional[Dict[str, Any]]:
+        """Spill the bytes and return the journalable record (or ``None``
+        when no sidecar directory exists — the caller then journals the
+        plain ``result_omitted`` flag and the producer re-runs on resume).
+        """
+        if not spill_dir:
+            return None
+        host = np.ascontiguousarray(np.asarray(self._value))
+        digest = hashlib.sha256(host.tobytes()).hexdigest()
+        os.makedirs(spill_dir, exist_ok=True)
+        path = os.path.join(spill_dir, f"{digest[:32]}.npy")
+        if not os.path.exists(path):
+            # content-addressed: concurrent writers of the same value are
+            # idempotent; write-then-rename keeps replay from reading a torn
+            # file after a crash mid-spill (the tmp name must end in .npy —
+            # np.save appends the suffix to anything else)
+            tmp = f"{path}.{os.getpid()}.tmp.npy"
+            np.save(tmp, host)
+            os.replace(tmp, path)
+        return {"__codec__": CODEC, "sha256": digest, "path": path,
+                "shape": list(host.shape), "dtype": str(host.dtype)}
+
+
+def _decode(record: Dict[str, Any]) -> ArrayResult:
+    path = record.get("path")
+    if not path or not os.path.exists(path):
+        raise MissingError(f"fused-array spill missing: {path!r}")
+    host = np.load(path)
+    digest = hashlib.sha256(
+        np.ascontiguousarray(host).tobytes()).hexdigest()
+    if digest != record.get("sha256"):
+        raise MissingError(f"fused-array spill corrupted: {path!r} "
+                           f"(content hash mismatch)")
+    return ArrayResult(host)
+
+
+def _spill_bare_array(value: Any, spill_dir: str) -> Optional[Dict[str, Any]]:
+    """Journal spiller for BARE array results: a fused kernel executed on
+    the scalar path (fuse=False, below-threshold group, LocalRTS) returns
+    a raw jax/numpy array that cannot JSON — spill it through the same
+    content-addressed codec so resume restores it instead of re-running
+    the producer. Resumed consumers receive an :class:`ArrayResult`
+    (``np.asarray`` reads both forms)."""
+    if (hasattr(value, "shape") and hasattr(value, "dtype")
+            and hasattr(value, "__array__")):
+        return ArrayResult(value).to_journal(spill_dir)
+    return None
+
+
+register_result_codec(CODEC, _decode)
+register_result_spiller(_spill_bare_array)

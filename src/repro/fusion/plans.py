@@ -1,0 +1,78 @@
+"""Fusion planning: the fuse-vs-scalar cost model and micro-batch sizing.
+
+Pure functions (no JAX, no RTS state) so the policy is unit-testable and
+the JaxRTS stays a thin mechanism layer.
+
+Model
+-----
+A fused dispatch replaces N per-task Python threads + N device dispatches
+with one dispatch whose cost is roughly ``fixed + N · per_member``. Below
+``min_batch`` members the fixed cost (trace/stack/pad plus the lost
+per-member concurrency) outweighs the saved dispatches, so tiny groups run
+scalar — that is the fallback the cost model owes the caller.
+
+Micro-batching
+--------------
+A group larger than one device's worth of work is carved into
+``lanes = free_slots // member_slots`` micro-batches so every free device
+(or logical slot) gets one concurrent dispatch — the *adaptive* part: the
+split follows the RTS's free capacity at submission time, not a constant.
+``max_batch`` bounds any single dispatch (padding memory and compile-shape
+growth are linear in the batch), re-chunking oversized lanes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+#: Below this many congruent members, scalar execution wins.
+DEFAULT_MIN_BATCH = 4
+
+#: Largest single fused dispatch (bounds padding memory / compiled shapes).
+DEFAULT_MAX_BATCH = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """How one fusible group executes: fused chunk sizes + scalar count.
+
+    ``batches`` are the fused micro-batch sizes, in member order; the first
+    ``sum(batches)`` members fuse, the remaining ``scalar`` members run as
+    ordinary tasks (only ever non-zero when the group is below threshold,
+    in which case ``batches`` is empty — a plan never mixes arbitrarily).
+    """
+
+    batches: List[int]
+    scalar: int
+
+    @property
+    def fused_members(self) -> int:
+        return sum(self.batches)
+
+
+def plan_group(n_members: int, free_slots: Optional[int], member_slots: int,
+               *, min_batch: Optional[int] = None,
+               max_batch: int = DEFAULT_MAX_BATCH) -> GroupPlan:
+    """Plan one fusible group of ``n_members`` congruent tasks.
+
+    ``free_slots`` is the RTS's leasable capacity right now (None = unknown:
+    plan a single lane). ``member_slots`` is each member's device width —
+    one micro-batch leases exactly that many devices, all-or-nothing.
+    """
+    threshold = DEFAULT_MIN_BATCH if min_batch is None else max(1, min_batch)
+    if n_members < threshold:
+        return GroupPlan(batches=[], scalar=n_members)
+    lanes = 1
+    if free_slots is not None and member_slots > 0:
+        lanes = max(1, free_slots // member_slots)
+    # never split so deep that a lane drops below the fuse threshold —
+    # half-empty lanes would reintroduce the per-dispatch overhead the
+    # fusion exists to amortize
+    lanes = min(lanes, max(1, n_members // threshold))
+    # memory bound: a lane may not exceed max_batch members per dispatch
+    lanes = max(lanes, math.ceil(n_members / max(1, max_batch)))
+    base, rem = divmod(n_members, lanes)
+    batches = [base + (1 if i < rem else 0) for i in range(lanes)]
+    return GroupPlan(batches=[b for b in batches if b], scalar=0)

@@ -1,0 +1,88 @@
+"""AnEn analog-similarity distance as a Pallas TPU kernel.
+
+The analog search's hot loop is the similarity matrix
+
+    d2[h, n] = Σ_v (f_hist[h, v, n] − f_now[v, n])²
+
+over H historical forecasts × N query locations × V forecast variables —
+the distance computation behind every AnEn member of the fused ensemble
+(:mod:`repro.apps.anen`). V is tiny (≈3) while H·N is large, so the kernel
+tiles (H, N) onto the VPU — blocks of (block_h, block_n) with the last
+dimension lane-aligned to 128 — and unrolls the V reduction as a static
+Python loop over (block_h, block_n) tiles: V separate fused
+multiply-subtract-accumulate passes, no MXU involvement, no intermediate
+(H, V, N) materialization in VMEM.
+
+Both grid axes are ``parallel`` (every output tile is independent). The
+wrapper zero-pads H to the f32 sublane multiple (8) and N to the lane
+multiple (128) and slices the result back; padded columns cost dead VPU
+lanes, never wrong values.
+
+Validated on CPU with ``interpret=True`` against the jnp reference in
+``tests/test_fusion.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# compat: renamed TPUCompilerParams -> CompilerParams in newer jax
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _distance_kernel(fh_ref, fn_ref, out_ref, *, n_vars: int):
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for v in range(n_vars):        # V is static and tiny: unrolled
+        d = fh_ref[:, v, :] - fn_ref[v, :][None, :]
+        acc += d * d
+    out_ref[...] = acc
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_h",
+                                             "block_n"))
+def anen_distance(f_hist: jnp.ndarray, f_now: jnp.ndarray,
+                  interpret: bool = False, block_h: int = 64,
+                  block_n: int = 128) -> jnp.ndarray:
+    """``f_hist`` (H, V, N), ``f_now`` (V, N) → squared distances (H, N)."""
+    H, V, N = f_hist.shape
+    fh = _pad_to(_pad_to(f_hist.astype(jnp.float32), 0, 8), 2, 128)
+    fn = _pad_to(f_now.astype(jnp.float32), 1, 128)
+    Hp, _, Np = fh.shape
+    block_h = min(block_h, Hp)
+    block_n = min(block_n, Np)
+    # pad once more so the grid divides exactly (tiny inputs on CPU tests)
+    fh = _pad_to(fh, 0, block_h)
+    fh = _pad_to(fh, 2, block_n)
+    fn = _pad_to(fn, 1, block_n)
+    Hp, _, Np = fh.shape
+    kernel = functools.partial(_distance_kernel, n_vars=V)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Hp // block_h, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((block_h, V, block_n), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((V, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_h, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Hp, Np), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(fh, fn)
+    return out[:H, :N]

@@ -134,6 +134,18 @@ class RTS(ABC):
         """
         return None
 
+    # -- fusion (batched execution of homogeneous groups) ---------------------#
+
+    def supports_fusion(self) -> bool:
+        """True when this runtime executes congruent tasks (equal
+        ``_fusion_group`` tags, see :mod:`repro.fusion`) as batched device
+        dispatches. The ExecManager then hands it whole fusible groups,
+        charging pilot slots per batch instead of per member. Backends that
+        run every task in its own worker must keep the default False —
+        advertising fusion without batching would let the Emgr submit far
+        past their real capacity."""
+        return False
+
     # -- elasticity (beyond paper: required for 1000+-node operation) ---------#
 
     def resize(self, slots: int) -> int:  # pragma: no cover - optional

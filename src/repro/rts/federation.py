@@ -255,6 +255,27 @@ class FederatedRTS(RTS):
         """Every member name, active or quarantined (affinity validation)."""
         return list(self._by_name)
 
+    def supports_fusion(self) -> bool:
+        """A federation fuses when any member does; :meth:`fusion_members`
+        tells the Emgr *which* members, so whole-group pinning only ever
+        targets a pilot that will actually batch the group."""
+        return bool(self.fusion_members())
+
+    def fusion_members(self) -> "set[str]":
+        """Names of members whose runtime batches fused groups. The Emgr's
+        placement-aware packer drains a fusible group onto one member —
+        charging its slots once — ONLY when that member is in this set; a
+        group landing on a scalar member is placed (and charged) task by
+        task like any other work, since that pilot runs it task by task."""
+        out = set()
+        for m in self.members:
+            try:
+                if m.rts is not None and m.rts.supports_fusion():
+                    out.add(m.name)
+            except Exception:  # noqa: BLE001 - dying member: monitor's job
+                pass
+        return out
+
     def set_capacity_callback(self, cb: Optional[Callable[[], None]]) -> None:
         self._capacity_cb = cb
 

@@ -10,7 +10,20 @@ Leases are all-or-nothing: with slot-aware Emgr submission the toolkit never
 over-submits, so a lease that would come up short is a transient inventory
 race (e.g. an elastic resize beyond the physical pool), answered by
 re-queueing the task (:class:`~repro.rts.base.RequeueTask`) — never by
-silently granting fewer devices than ``task.slots``.
+silently granting fewer devices than ``task.slots``. A requeued task
+re-enters at the *front* of the queue (it held the head when scheduled), so
+lease races cannot starve wide work behind a stream of narrow tasks.
+
+Fusion (``repro.fusion``): the JaxRTS advertises :meth:`supports_fusion`.
+Submitted tasks that share a ``_fusion_group`` tag are packed into *carrier*
+tasks — one per micro-batch, sized adaptively from :meth:`free_slots` by the
+:mod:`~repro.fusion.plans` cost model (tiny groups fall back to scalar
+execution). A carrier occupies one member's worth of devices
+(all-or-nothing, single whole-group requeue on a lease race) and executes
+every member in one batched dispatch via :mod:`~repro.fusion.engine`, which
+fans the result out as ordinary per-member completions — per-member DONE /
+FAILED journal records, retries and resume all behave exactly as if the
+members had run scalar.
 
 On this CPU container the inventory is logical (``slot_oversubscribe``
 logical slots share the physical CPU device) — the accounting, leasing and
@@ -23,16 +36,33 @@ import dataclasses
 import inspect
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence
+import traceback
+from typing import Any, Dict, List, Optional, Sequence, Set
 
-from ..core.pst import Task
+from ..core.pst import Task, resolve_executable
+from ..fusion import engine as fusion_engine
+from ..fusion.groups import GROUP_TAG, FusionSpec, fusion_spec
+from ..fusion.plans import DEFAULT_MAX_BATCH, plan_group
 from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
 
 
+class _FusedBatch:
+    """Carrier-side bookkeeping for one fused micro-batch."""
+
+    __slots__ = ("members", "pending")
+
+    def __init__(self, members: List[Task]) -> None:
+        self.members = members
+        self.pending: Set[str] = {m.uid for m in members}
+
+
 class JaxRTS(LocalRTS):
     def __init__(self, devices: Optional[Sequence[Any]] = None,
-                 slot_oversubscribe: int = 1, **kwargs: Any) -> None:
+                 slot_oversubscribe: int = 1, fusion: bool = True,
+                 fusion_min_batch: Optional[int] = None,
+                 fusion_max_batch: int = DEFAULT_MAX_BATCH,
+                 **kwargs: Any) -> None:
         super().__init__(**kwargs)
         if devices is None:
             import jax  # deferred: never force jax init at import time
@@ -43,6 +73,16 @@ class JaxRTS(LocalRTS):
         self._leases: Dict[str, List[int]] = {}
         self._pool_lock = threading.Lock()
         self.lease_requeues = 0   # short-lease races answered by requeue
+        # -- fusion state ---------------------------------------------------#
+        self.fusion = fusion
+        self.fusion_min_batch = fusion_min_batch
+        self.fusion_max_batch = fusion_max_batch
+        self._fusion_lock = threading.Lock()
+        self._fused: Dict[str, _FusedBatch] = {}      # carrier uid -> batch
+        self._member_carrier: Dict[str, str] = {}     # member uid -> carrier
+        self._fused_canceled: Set[str] = set()        # member uids
+        self.fusion_stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
+                             "dispatches": 0}
 
     def start(self, resources: ResourceDescription) -> Pilot:
         n_logical = len(self._devices) * self._oversubscribe
@@ -55,7 +95,18 @@ class JaxRTS(LocalRTS):
         with self._pool_lock:
             self._pool = list(range(n_logical))
             self._leases = {}
+        with self._fusion_lock:
+            self._fused.clear()
+            self._member_carrier.clear()
+            self._fused_canceled.clear()
         return super().start(resources)
+
+    def stop(self) -> None:
+        super().stop()
+        with self._fusion_lock:
+            self._fused.clear()
+            self._member_carrier.clear()
+            self._fused_canceled.clear()
 
     def resize(self, slots: int) -> int:
         # never grow past the physical inventory: slots without devices
@@ -68,10 +119,15 @@ class JaxRTS(LocalRTS):
         with self._pool_lock:
             return len(self._pool)
 
+    def supports_fusion(self) -> bool:
+        return self.fusion
+
+    # -- submission -----------------------------------------------------------#
+
     def submit(self, tasks: List[Task]) -> None:
-        """Reject tasks wider than the whole device inventory immediately:
-        they could never start (`_can_start` stays false forever), and
-        silently queueing them would hang the workflow until its timeout."""
+        """Reject tasks wider than the whole device inventory immediately
+        (they could never start), pack fusible groups into carriers, and
+        queue the rest as ordinary scalar tasks."""
         inventory = len(self._devices) * self._oversubscribe
         runnable: List[Task] = []
         for task in tasks:
@@ -84,8 +140,146 @@ class JaxRTS(LocalRTS):
                     started_at=now, completed_at=now))
             else:
                 runnable.append(task)
-        if runnable:
-            super().submit(runnable)
+        if not runnable:
+            return
+        super().submit(self._pack_fusible(runnable) if self.fusion
+                       else runnable)
+
+    def _pack_fusible(self, tasks: List[Task]) -> List[Task]:
+        """Group tagged tasks by fusion key; each group becomes carriers
+        (micro-batched from the free-device count) plus a scalar remainder
+        when the cost model says a batch would be too small to pay off."""
+        groups: Dict[str, List[Task]] = {}
+        order: List[Any] = []   # tasks and group keys, submission order
+        for task in tasks:
+            key = task.tags.get(GROUP_TAG)
+            if key is None:
+                order.append(task)
+                continue
+            bucket = groups.get(key)
+            if bucket is None:
+                groups[key] = bucket = []
+                order.append((GROUP_TAG, key))
+            bucket.append(task)
+        if not groups:
+            return tasks
+        out: List[Task] = []
+        for entry in order:
+            if isinstance(entry, Task):
+                out.append(entry)
+                continue
+            members = groups[entry[1]]
+            spec = self._kernel_spec(members[0])
+            if spec is None:
+                out.extend(members)   # unmarked kernel: never fuse
+                continue
+            min_batch = (spec.min_batch if spec.min_batch is not None
+                         else self.fusion_min_batch)
+            plan = plan_group(len(members), self.free_slots(),
+                              members[0].slots, min_batch=min_batch,
+                              max_batch=self.fusion_max_batch)
+            idx = 0
+            for size in plan.batches:
+                out.append(self._make_carrier(members[idx:idx + size]))
+                idx += size
+            out.extend(members[idx:])  # below-threshold remainder: scalar
+        return out
+
+    @staticmethod
+    def _kernel_spec(task: Task) -> Optional[FusionSpec]:
+        """The member's FusionSpec, looking through the API trampoline."""
+        try:
+            if task.executable == fusion_engine.TRAMPOLINE:
+                fn = resolve_executable(task.kwargs["__fn__"])
+            else:
+                fn = task.resolve()
+        except Exception:  # noqa: BLE001 - unresolvable: run it scalar
+            return None
+        return fusion_spec(fn)
+
+    def _make_carrier(self, members: List[Task]) -> Task:
+        hints = [m.duration_hint for m in members
+                 if m.duration_hint is not None]
+        carrier = Task(
+            name=f"fused[{len(members)}]:{members[0].name}",
+            executable=f"fused://{len(members)}", slots=members[0].slots,
+            duration_hint=max(hints) if hints else None)
+        with self._fusion_lock:
+            self._fused[carrier.uid] = _FusedBatch(members)
+            for m in members:
+                self._member_carrier[m.uid] = carrier.uid
+        return carrier
+
+    # -- cancellation / introspection over carriers ---------------------------#
+
+    def cancel(self, uids: List[str]) -> None:
+        """Translate member uids to their carriers: a canceled member is
+        skipped at fan-out time; a carrier whose every member is canceled
+        is canceled itself (dequeued, or its dispatch interrupted)."""
+        translated: List[str] = []
+        emptied: List[str] = []
+        with self._fusion_lock:
+            for u in uids:
+                carrier_uid = self._member_carrier.get(u)
+                if carrier_uid is None:
+                    translated.append(u)
+                    continue
+                self._fused_canceled.add(u)
+                batch = self._fused.get(carrier_uid)
+                if batch is not None:
+                    batch.pending.discard(u)
+                    if not batch.pending:
+                        translated.append(carrier_uid)
+                        emptied.append(carrier_uid)
+        super().cancel(translated)
+        if emptied:
+            # a fully-canceled carrier dropped from the queue never runs:
+            # reclaim its bookkeeping now rather than at stop()
+            with self._lock:
+                live = set(self._running) | {t.uid for t in self._queue}
+            with self._fusion_lock:
+                for carrier_uid in emptied:
+                    if carrier_uid in live:
+                        continue
+                    batch = self._fused.pop(carrier_uid, None)
+                    if batch is not None:
+                        for m in batch.members:
+                            self._member_carrier.pop(m.uid, None)
+                            self._fused_canceled.discard(m.uid)
+
+    def in_flight(self) -> List[str]:
+        """Member uids, never carrier uids: EnTK's custody, failover and
+        resubmission logic reasons about the tasks it submitted."""
+        base = super().in_flight()
+        with self._fusion_lock:
+            out: List[str] = []
+            for uid in base:
+                batch = self._fused.get(uid)
+                if batch is None:
+                    out.append(uid)
+                else:
+                    out.extend(batch.pending)
+            return out
+
+    def running_since(self) -> Dict[str, float]:
+        """Member uids with their carrier's elapsed time: the ExecManager's
+        straggler watchdog reasons about the tasks it submitted, so a hung
+        fused dispatch must surface as its (still-pending) members — each
+        can then be speculatively cloned, and a clone is a lone scalar
+        task whose win cancels the member inside the stuck batch."""
+        base = super().running_since()
+        with self._fusion_lock:
+            out: Dict[str, float] = {}
+            for uid, elapsed in base.items():
+                batch = self._fused.get(uid)
+                if batch is None:
+                    out[uid] = elapsed
+                else:
+                    for member_uid in batch.pending:
+                        out[member_uid] = elapsed
+            return out
+
+    # -- leasing --------------------------------------------------------------#
 
     def _can_start(self, task: Task) -> bool:
         with self._pool_lock:
@@ -95,7 +289,9 @@ class JaxRTS(LocalRTS):
         with self._pool_lock:
             if len(self._pool) < task.slots:
                 # short lease: undo nothing, requeue the task — a partial
-                # device set would silently break the task's mesh
+                # device set would silently break the task's mesh. For a
+                # fused carrier this is the whole group's single requeue:
+                # members are never requeued individually.
                 self.lease_requeues += 1
                 raise RequeueTask(
                     f"{task.uid} needs {task.slots} device slots, "
@@ -107,6 +303,72 @@ class JaxRTS(LocalRTS):
     def _unlease(self, task: Task) -> None:
         with self._pool_lock:
             self._pool.extend(self._leases.pop(task.uid, []))
+
+    # -- execution ------------------------------------------------------------#
+
+    def _run_task(self, task: Task, cancel_event: threading.Event) -> None:
+        with self._fusion_lock:
+            batch = self._fused.get(task.uid)
+        if batch is None:
+            return super()._run_task(task, cancel_event)
+        self._run_fused(task, batch, cancel_event)
+
+    def _run_fused(self, carrier: Task, batch: _FusedBatch,
+                   cancel_event: threading.Event) -> None:
+        """Carrier worker: lease devices all-or-nothing, run the batched
+        dispatch, fan completions out per member. No carrier-level fault
+        injection or staging — those are member semantics, and the engine
+        applies the injector per member."""
+        requeue = False
+
+        def deliver(c: TaskCompletion) -> None:
+            with self._fusion_lock:
+                batch.pending.discard(c.uid)
+            self._deliver(c)
+
+        try:
+            self._lease(carrier)
+            try:
+                stats = fusion_engine.execute_fused(
+                    batch.members, self._lease_devices(carrier),
+                    cancel_event, deliver,
+                    canceled=self._fused_canceled,
+                    fault_injector=self.fault_injector)
+                with self._fusion_lock:
+                    for k, v in stats.items():
+                        self.fusion_stats[k] += v
+            finally:
+                self._unlease(carrier)
+        except RequeueTask:
+            requeue = True
+        except Exception:  # noqa: BLE001 - engine failed outside its guards
+            exc = traceback.format_exc(limit=10)
+            now = time.time()
+            with self._fusion_lock:
+                undelivered = [m for m in batch.members
+                               if m.uid in batch.pending
+                               and m.uid not in self._fused_canceled]
+            for m in undelivered:
+                deliver(TaskCompletion(
+                    uid=m.uid, exit_code=1, exception=exc,
+                    started_at=now, completed_at=now))
+        finally:
+            self._release(carrier)
+        if requeue:
+            if not self._stop.is_set():
+                self._requeue(carrier)   # whole group, once, at the front
+            return
+        with self._fusion_lock:
+            self._fused.pop(carrier.uid, None)
+            for m in batch.members:
+                self._member_carrier.pop(m.uid, None)
+                self._fused_canceled.discard(m.uid)
+
+    def _lease_devices(self, task: Task) -> List[Any]:
+        """The concrete device objects behind an already-held lease."""
+        with self._pool_lock:
+            ids = list(self._leases.get(task.uid, ()))
+        return [self._devices[i % len(self._devices)] for i in ids]
 
     def _execute(self, task: Task, cancel_event: threading.Event,
                  stall: float):

@@ -194,6 +194,17 @@ class LocalRTS(RTS):
             self._slots_free += task.slots
             self._work.notify_all()
 
+    def _requeue(self, task: Task) -> None:
+        """Return a RequeueTask-raising task to the queue — at the FRONT.
+
+        It held the head position when it was scheduled; re-entering at the
+        back would let a steady stream of narrow tasks overtake a wide one
+        on every lease race, starving it indefinitely (the ``_can_start``
+        skip already lets narrow work run while it waits)."""
+        with self._work:
+            self._queue.appendleft(task)
+            self._work.notify_all()
+
     def _run_task(self, task: Task, cancel_event: threading.Event) -> None:
         started = time.time()
         staging_s = 0.0
@@ -226,9 +237,7 @@ class LocalRTS(RTS):
             self._release(task)
         if requeue:
             if not self._stop.is_set():
-                with self._work:
-                    self._queue.append(task)
-                    self._work.notify_all()
+                self._requeue(task)
             return
         self._deliver(TaskCompletion(
             uid=task.uid, exit_code=exit_code, result=result, exception=exc,

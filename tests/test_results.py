@@ -1,0 +1,98 @@
+"""Direct tests for the results-plane hardening introduced in PR 3 (and
+previously only exercised indirectly): the 256 KiB journal cap →
+``result_omitted`` → producer-re-run path, JSON round-trip enforcement,
+and result-store namespace release through ``RunResult.close()``."""
+
+import pytest
+
+from repro import api
+from repro.core import states as st
+from repro.core.exceptions import MissingError
+from repro.core.journal import Journal
+from repro.core.results import STORE
+from repro.rts.base import ResourceDescription
+
+RUNS = {"big": 0, "intkeys": 0, "reader": 0}
+
+
+def big_producer():
+    RUNS["big"] += 1
+    # comfortably past the 256 KiB DONE-record cap, but perfectly JSONable
+    return "x" * (300 * 1024)
+
+
+def intkey_producer():
+    RUNS["intkeys"] += 1
+    # json.dumps accepts this, but round-trips the keys to strings — the
+    # silent-corruption case result_omitted exists to prevent
+    return {1: "a", 2: "b"}
+
+
+def reader(value):
+    RUNS["reader"] += 1
+    return len(value)
+
+
+def _run(node, journal, resume=False):
+    return api.run(node, resources=ResourceDescription(slots=2),
+                   journal_path=journal, resume=resume, timeout=60)
+
+
+def test_oversized_result_omitted_and_producer_reruns(tmp_path):
+    journal = str(tmp_path / "wf.jsonl")
+    RUNS.update(big=0, reader=0)
+
+    prod = api.task(big_producer, name="big")
+    cons = api.task(reader, args=(prod.out,), name="read-big")
+    res = _run(cons, journal)
+    assert res.all_done
+    assert res.task_states == {"big": st.DONE, "read-big": st.DONE}
+    res.close()
+
+    replay = Journal.replay(journal)
+    # the value never reached the journal; the DONE record says so
+    assert "big" in replay["result_omitted"]
+    assert "big" not in replay["results"]
+    # the consumer's small int result DID journal
+    assert replay["results"]["read-big"] == 300 * 1024
+
+    # resume: the producer re-runs (its value is lost), the consumer does
+    # not (its journaled result restores)
+    prod2 = api.task(big_producer, name="big")
+    cons2 = api.task(reader, args=(prod2.out,), name="read-big")
+    res2 = _run(cons2, journal, resume=True)
+    assert res2.all_done
+    assert RUNS["big"] == 2 and RUNS["reader"] == 1
+    res2.close()
+
+
+def test_non_roundtripping_result_is_omitted(tmp_path):
+    journal = str(tmp_path / "wf.jsonl")
+    RUNS.update(intkeys=0)
+    prod = api.task(intkey_producer, name="ik")
+    res = _run(prod, journal)
+    assert res.all_done
+    # live consumers (same session) see the true value...
+    assert prod.out.result() == {1: "a", 2: "b"}
+    replay = Journal.replay(journal)
+    # ...but the journal refuses the mutated round-trip
+    assert "ik" in replay["result_omitted"]
+    assert "ik" not in replay["results"]
+    res.close()
+
+
+def test_run_result_close_releases_namespace():
+    ens = api.ensemble(lambda x: x * 2, over=[{"x": i} for i in range(4)],
+                      name="cl", fuse=False)
+    res = api.run(ens, resources=ResourceDescription(slots=2), timeout=60)
+    ns = res.compiled.ns
+    assert res.all_done
+    assert ens.specs[0].out.result() == 0
+    assert len(STORE.names(ns)) == 4
+    released = res.close()
+    assert released == 4
+    assert STORE.names(ns) == []
+    with pytest.raises(MissingError):
+        ens.specs[0].out.result()
+    # idempotent
+    assert res.close() == 0
