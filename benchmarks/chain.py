@@ -1,0 +1,144 @@
+"""Chain-fusion benchmark: per-stage fused vs chain-fused stage pipelines.
+
+The scenario chain fusion exists for: a linear pipeline of L homogeneous
+~1 ms stages where stage k+1's member *i* consumes member *i*'s output of
+stage k (the shape of the paper's seismic forward→misfit sweeps and the
+AnEn analog rounds). Three executions of the IDENTICAL description:
+
+* **scalar** — ``fuse=False``: one task per member per stage, the
+  pre-fusion toolkit. This is the semantic reference: both fused paths
+  must reproduce its values within the 1e-4 relative-drift gate.
+* **staged** — ``fuse=True, chain=False``: the PR-4 engine; every stage is
+  a batched dispatch, but each stage boundary pays a full control-plane
+  round trip, a host re-stack of the member slices, and a per-stage
+  fan-out before the next stage may start.
+* **chain** — ``fuse=True, chain=True`` (the default): the compiler tags
+  the chain, the WFProcessor superstages it, and the JaxRTS runs each
+  micro-batch of members through ALL stages as composed dispatches with
+  an async drainer — intermediates never touch the host.
+
+All three run the same AppManager, scheduler core and JaxRTS on the same
+host, so chain_s vs staged_s isolates exactly what the chain data plane
+buys (and the values gate proves it was not bought with semantic drift).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import api
+from repro.fusion import fusable
+from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+
+#: kernel sizing: ~1 ms observed per-member latency on the scalar path
+#: (dispatch-dominated, like the AnEn/seismic members at small task grain)
+_SIZE = 48
+_DEPTH = 6
+
+
+@fusable(static_argnames=("size", "depth"))
+def chain_member(field, size: int = _SIZE, depth: int = _DEPTH):
+    """One pipeline stage for one member: a short elementwise chain on a
+    (size, size) field.
+
+    The entry link seeds the field from a scalar parameter; every later
+    link consumes the previous link's FIELD — an array-valued carry, like
+    the seismic chain's per-source seismograms and the AnEn rounds' value
+    vectors. That is the shape where per-stage fusion pays a per-member
+    device gather plus a device re-stack at every stage boundary, and
+    chain fusion pays neither (the stacked field rides the composed
+    program). sin/cos keep the values in [-1.1, 1.1], so arbitrarily long
+    chains stay numerically stable.
+    """
+    import jax.numpy as jnp
+    a = jnp.asarray(field, jnp.float32)
+    if a.ndim == 0:
+        a = jnp.full((size, size), a, jnp.float32)
+    for _ in range(depth):
+        a = jnp.sin(a) + 0.1 * jnp.cos(a)
+    return a
+
+
+def _mean(values):
+    return float(np.mean([float(np.asarray(v).mean()) for v in values]))
+
+
+def _run_once(n_members: int, n_stages: int, slots: int, *, fuse: bool,
+              chain: bool, timeout: float) -> Dict:
+    stage = api.ensemble(
+        chain_member,
+        over=[{"field": float(i) / n_members} for i in range(n_members)],
+        name="cb0", fuse=fuse)
+    for k in range(1, n_stages):
+        stage = stage.then(chain_member, name=f"cb{k}", fuse=fuse)
+    # the gather joins every member into ONE pipeline — the paper's shape
+    # (a misfit sum / analog check consumes the whole ensemble), and the
+    # shape where per-stage fusion pays a global barrier + host re-stack
+    # between stages while chain fusion runs straight through
+    total = api.gather(stage, _mean, name="cb-total")
+    holder: Dict = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(slot_oversubscribe=slots)
+        return holder["rts"]
+
+    t0 = time.time()
+    result = api.run(total, resources=ResourceDescription(slots=slots),
+                     rts_factory=factory, chain=chain, timeout=timeout)
+    elapsed = time.time() - t0
+    values = [float(np.asarray(s.out.result()).mean())
+              for s in stage.specs]
+    stats = dict(holder["rts"].fusion_stats)
+    out = {"elapsed_s": elapsed, "values": values,
+           "all_done": result.all_done, "stats": stats}
+    result.close()
+    return out
+
+
+def _drift(ref: List[float], got: List[float]) -> float:
+    a, b = np.asarray(ref), np.asarray(got)
+    return float(np.max(np.abs(a - b) / np.maximum(1e-9, np.abs(a))))
+
+
+def run(quick: bool = False, slots: int = 4, n_stages: int = 4,
+        sizes: "tuple[int, ...]" = ()) -> List[Dict]:
+    if not sizes:
+        sizes = (250,) if quick else (250, 1_000)
+    # warm jax's global first-dispatch setup outside the measurement (each
+    # path still pays its own first trace inside its run)
+    chain_member(0.5)
+    rows = []
+    for n in sizes:
+        timeout = max(600.0, n * n_stages * 0.1)
+        scalar = _run_once(n, n_stages, slots, fuse=False, chain=False,
+                           timeout=timeout)
+        staged = _run_once(n, n_stages, slots, fuse=True, chain=False,
+                           timeout=timeout)
+        chained = _run_once(n, n_stages, slots, fuse=True, chain=True,
+                            timeout=timeout)
+        n_tasks = n * n_stages
+        rows.append({
+            "n_members": n,
+            "n_stages": n_stages,
+            "scalar_s": scalar["elapsed_s"],
+            "staged_s": staged["elapsed_s"],
+            "chain_s": chained["elapsed_s"],
+            "staged_tasks_per_s": n_tasks / staged["elapsed_s"],
+            "chain_tasks_per_s": n_tasks / chained["elapsed_s"],
+            "speedup_vs_staged": staged["elapsed_s"] / chained["elapsed_s"],
+            "speedup_vs_scalar": scalar["elapsed_s"] / chained["elapsed_s"],
+            "chain_carriers": chained["stats"]["chain_carriers"],
+            "chain_dispatches": chained["stats"]["dispatches"],
+            "staged_dispatches": staged["stats"]["dispatches"],
+            # drift vs the scalar reference: the gate that proves the
+            # composed data plane did not buy its speed with wrong values
+            "staged_drift": _drift(scalar["values"], staged["values"]),
+            "chain_drift": _drift(scalar["values"], chained["values"]),
+            "all_done": (scalar["all_done"] and staged["all_done"]
+                         and chained["all_done"]),
+        })
+    return rows

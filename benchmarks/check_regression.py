@@ -13,9 +13,14 @@ Two gates share this entry point, selected with ``--bench``:
   speedup measured *within the current run* must stay above
   ``--min-speedup`` (the within-run ratio is immune to runner speed, so
   it is the sharper signal on shared runners).
+* ``chain`` — cross-stage chain fusion must keep beating per-stage
+  fusion: chain-fused throughput may not regress more than ``--factor``
+  versus the PR-5 baseline AND the within-run chain/per-stage speedup
+  must stay above ``--min-speedup``.
 
     python -m benchmarks.check_regression current.json baseline.json
     python -m benchmarks.check_regression cur.json base.json --bench fusion
+    python -m benchmarks.check_regression cur.json base.json --bench chain
 
 Exit 0 = within budget; exit 1 = regression (or unusable inputs).
 """
@@ -81,28 +86,34 @@ def check_sched(args) -> int:
     return 0 if ratio <= args.factor else 1
 
 
-def check_fusion(args) -> int:
-    cur = _rows(args.current, "fusion_", "n_members")
-    base = _rows(args.baseline, "fusion_", "n_members")
+def _check_dataplane(args, *, bench: str, rate_field: str,
+                     speedup_field: str, rate_label: str,
+                     speedup_label: str) -> int:
+    """Shared two-gate check for the data-plane benches (fusion/chain):
+    throughput vs the checked-in baseline at the largest common size, AND
+    a within-run speedup floor — the within-run ratio is immune to runner
+    speed, so it is the sharper signal on shared runners."""
+    cur = _rows(args.current, f"{bench}_", "n_members")
+    base = _rows(args.baseline, f"{bench}_", "n_members")
     common = sorted(set(cur) & set(base))
     if not common:
-        print(f"[check] no common fusion sizes between {args.current} "
+        print(f"[check] no common {bench} sizes between {args.current} "
               f"({sorted(cur)}) and {args.baseline} ({sorted(base)})")
         return 1
-    n = common[-1]   # the largest size is where fusion must pay off most
-    c = _metric(cur[n], "fused_tasks_per_s")
-    b = _metric(base[n], "fused_tasks_per_s")
-    speedup = _metric(cur[n], "speedup")
+    n = common[-1]   # the largest size is where the win must pay off most
+    c = _metric(cur[n], rate_field)
+    b = _metric(base[n], rate_field)
+    speedup = _metric(cur[n], speedup_field)
     if c is None or b is None or speedup is None:
-        print(f"[check] unusable fusion rows at {n} members: "
+        print(f"[check] unusable {bench} rows at {n} members: "
               f"current={cur[n]} baseline={base[n]}")
         return 1
     ratio = b / c   # >1 = current slower than baseline
     ok = ratio <= args.factor and speedup >= args.min_speedup
-    print(f"[check] fusion @ {n} members: fused {c:.0f} tasks/s vs "
+    print(f"[check] {bench} @ {n} members: {rate_label} {c:.0f} tasks/s vs "
           f"baseline {b:.0f} -> x{ratio:.2f} slower (budget "
-          f"x{args.factor:.1f}); within-run speedup x{speedup:.2f} "
-          f"(floor x{args.min_speedup:.1f}) "
+          f"x{args.factor:.1f}); within-run {speedup_label} speedup "
+          f"x{speedup:.2f} (floor x{args.min_speedup:.1f}) "
           f"{'OK' if ok else 'REGRESSION'}")
     if not cur[n].get("all_done", True):
         print(f"[check] current run did not complete: {cur[n]}")
@@ -110,17 +121,36 @@ def check_fusion(args) -> int:
     return 0 if ok else 1
 
 
+def check_fusion(args) -> int:
+    return _check_dataplane(args, bench="fusion",
+                            rate_field="fused_tasks_per_s",
+                            speedup_field="speedup", rate_label="fused",
+                            speedup_label="fused/scalar")
+
+
+def check_chain(args) -> int:
+    return _check_dataplane(args, bench="chain",
+                            rate_field="chain_tasks_per_s",
+                            speedup_field="speedup_vs_staged",
+                            rate_label="chain-fused",
+                            speedup_label="chain/per-stage")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="bench JSON from this run")
     ap.add_argument("baseline", help="checked-in baseline JSON")
-    ap.add_argument("--bench", choices=("sched", "fusion"), default="sched")
+    ap.add_argument("--bench", choices=("sched", "fusion", "chain"),
+                    default="sched")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed regression ratio vs the baseline")
     ap.add_argument("--min-speedup", type=float, default=3.0,
-                    help="fusion only: min within-run fused/scalar speedup")
+                    help="fusion/chain: min within-run speedup vs the "
+                         "scalar (fusion) or per-stage-fused (chain) path")
     args = ap.parse_args()
-    return check_sched(args) if args.bench == "sched" else check_fusion(args)
+    if args.bench == "sched":
+        return check_sched(args)
+    return check_fusion(args) if args.bench == "fusion" else check_chain(args)
 
 
 if __name__ == "__main__":

@@ -160,6 +160,36 @@ def fusion_throughput(quick: bool) -> None:
         raise RuntimeError(f"fusion drift/incomplete at sizes: {bad}")
 
 
+def chain_throughput(quick: bool) -> None:
+    from benchmarks import chain
+    rows = chain.run(quick)
+    for r in rows:
+        _row(f"chain_{r['n_members']}", 1e6 / max(1e-9,
+                                                  r["chain_tasks_per_s"]),
+             n_members=r["n_members"],
+             n_stages=r["n_stages"],
+             scalar_s=round(r["scalar_s"], 2),
+             staged_s=round(r["staged_s"], 2),
+             chain_s=round(r["chain_s"], 2),
+             staged_tasks_per_s=round(r["staged_tasks_per_s"], 1),
+             chain_tasks_per_s=round(r["chain_tasks_per_s"], 1),
+             speedup_vs_staged=round(r["speedup_vs_staged"], 2),
+             speedup_vs_scalar=round(r["speedup_vs_scalar"], 2),
+             chain_carriers=r["chain_carriers"],
+             chain_dispatches=r["chain_dispatches"],
+             staged_dispatches=r["staged_dispatches"],
+             chain_drift=r["chain_drift"],
+             staged_drift=r["staged_drift"],
+             all_done=r["all_done"])
+    # both fused paths must reproduce the scalar path's values — a drifting
+    # or incomplete run fails the bench (and the CI smoke job) outright
+    bad = [r["n_members"] for r in rows
+           if not r["all_done"] or r["chain_drift"] > 1e-4
+           or r["staged_drift"] > 1e-4]
+    if bad:
+        raise RuntimeError(f"chain drift/incomplete at sizes: {bad}")
+
+
 def fed_throughput(quick: bool) -> None:
     from benchmarks import federation
     rows = federation.run(quick)
@@ -219,8 +249,41 @@ BENCHES = {
     "fig11": fig11_anen,
     "fed": fed_throughput,
     "fusion": fusion_throughput,
+    "chain": chain_throughput,
     "roofline": roofline_table,
 }
+
+#: repo-root perf-history file: every ``--json`` run of a data-plane bench
+#: (fusion/chain) appends its rows here, so throughput is tracked as a
+#: trajectory across PRs instead of being overwritten per run
+TRAJECTORY = "BENCH_fusion.json"
+
+
+def _append_trajectory(picks: "list[str]", quick: bool) -> None:
+    import os
+    rows = [r for r in _ROWS
+            if r["name"].startswith(("fusion_", "chain_"))
+            and not r["name"].endswith("_ERROR")]
+    if not rows:
+        return
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), TRAJECTORY)
+    history = []
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            history = json.load(fh)
+        if not isinstance(history, list):
+            history = []
+    except (OSError, ValueError):
+        history = []
+    history.append({"benchmarks": picks, "quick": quick,
+                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                               time.gmtime()),
+                    "rows": rows})
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(history, fh, indent=2, default=str)
+    sys.stderr.write(f"[bench] appended {len(rows)} rows to {path} "
+                     f"({len(history)} records)\n")
 
 
 def main() -> None:
@@ -246,6 +309,9 @@ def main() -> None:
                        "rows": _ROWS}, fh, indent=2, default=str)
         sys.stderr.write(f"[bench] wrote {len(_ROWS)} rows to "
                          f"{args.json}\n")
+        # data-plane benches additionally append to the repo-root
+        # trajectory so perf history survives across PRs
+        _append_trajectory(picks, args.quick)
     errors = [r["name"] for r in _ROWS if r["name"].endswith("_ERROR")]
     if errors:
         # a crashed benchmark must fail the harness (the CI smoke job

@@ -85,17 +85,25 @@ def run(
     name: Optional[str] = None,
     timeout: float = 3600.0,
     resume: bool = False,
+    chain: bool = True,
+    min_chain: Optional[int] = None,
     **appmanager_kwargs: Any,
 ) -> RunResult:
     """Compile and execute a declarative workflow in one call.
 
     All keyword arguments beyond ``resources``/``name``/``timeout``/
-    ``resume`` go to :class:`~repro.core.appmanager.AppManager` —
-    ``rts_factory=`` for a specific runtime, a list of resource
-    descriptions (plus optional factory list) for a federated fleet,
-    ``journal_path=`` for durable/resumable runs.
+    ``resume``/``chain``/``min_chain`` go to
+    :class:`~repro.core.appmanager.AppManager` — ``rts_factory=`` for a
+    specific runtime, a list of resource descriptions (plus optional
+    factory list) for a federated fleet, ``journal_path=`` for
+    durable/resumable runs. ``chain=False`` (or a higher ``min_chain``)
+    opts out of cross-stage chain fusion; ``fuse=False`` on an ensemble
+    opts out of fusion entirely.
     """
-    compiled = compile_workflow(*nodes, name=name)
+    compile_kwargs: Dict[str, Any] = {"name": name, "chain": chain}
+    if min_chain is not None:
+        compile_kwargs["min_chain"] = min_chain
+    compiled = compile_workflow(*nodes, **compile_kwargs)
     amgr = AppManager(resources=resources, **appmanager_kwargs)
     amgr.workflow = compiled
     overheads = amgr.run(resume=resume, timeout=timeout)

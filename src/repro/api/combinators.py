@@ -49,6 +49,11 @@ class Ensemble(Node):
     def __init__(self, specs: List[TaskSpec], name: Optional[str]) -> None:
         self.specs = specs
         self.name = name
+        for s in specs:
+            # chain detection needs the ensemble identity: two stages of the
+            # same kernel share a fusion-group key, so the key alone cannot
+            # tell "stage k's members" from "stage k+1's members"
+            s._ens = self
 
     def futures(self) -> List[Future]:
         return [s.out for s in self.specs]
@@ -58,6 +63,61 @@ class Ensemble(Node):
 
     def __iter__(self):
         return iter(self.specs)
+
+    def then(
+        self,
+        fn: Callable[..., Any],
+        over: Optional[Sequence[Dict[str, Any]]] = None,
+        *,
+        name: Optional[str] = None,
+        arg: Optional[str] = None,
+        slots: Optional[int] = None,
+        max_retries: int = 0,
+        duration_hint: Optional[float] = None,
+        fuse: bool = True,
+    ) -> "Ensemble":
+        """Elementwise continuation: member *i* of the new stage consumes
+        member *i*'s output of this stage (and nothing else).
+
+        ``arg`` names the parameter the carried value arrives under
+        (default: ``fn``'s first parameter); ``over`` optionally supplies
+        one extra kwargs dict per member (same length as this ensemble).
+        Consecutive fusable stages built this way form an elementwise
+        *chain*: the compiler detects it and a chain-capable RTS executes
+        each micro-batch of members through ALL the stages as one composed
+        device dispatch, with the intermediate values never touching the
+        host. ``fuse=False`` on any stage (or ``chain=False`` /
+        ``min_chain`` at :func:`repro.api.compile`) opts out.
+        """
+        if arg is None:
+            import inspect
+            try:
+                arg = next(iter(inspect.signature(fn).parameters))
+            except (StopIteration, TypeError, ValueError):
+                raise CompileError(
+                    f"then({getattr(fn, '__name__', fn)!r}) could not infer "
+                    f"the carry parameter — pass arg='<param name>'")
+        extras = list(over) if over is not None else [{} for _ in self.specs]
+        if len(extras) != len(self.specs):
+            raise CompileError(
+                f"then(over=...) must supply one kwargs dict per member: "
+                f"got {len(extras)} for {len(self.specs)} members")
+        points = []
+        for s, extra in zip(self.specs, extras):
+            if not isinstance(extra, dict):
+                raise CompileError(
+                    f"then 'over' entries must be kwargs dicts, got "
+                    f"{type(extra).__name__}")
+            if arg in extra:
+                raise CompileError(
+                    f"then 'over' entry shadows the carry parameter {arg!r}")
+            points.append({arg: s.out, **extra})
+        member_slots = slots if slots is not None else self.specs[0].slots
+        backends = {s.backend for s in self.specs}
+        backend = backends.pop() if len(backends) == 1 else None
+        return ensemble(fn, over=points, name=name, slots=member_slots,
+                        backend=backend, max_retries=max_retries,
+                        duration_hint=duration_hint, fuse=fuse)
 
 
 def ensemble(

@@ -40,6 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Union
 from ..core import uid
 from ..core.pst import Pipeline, Stage, Task
 from ..core.results import STORE
+from ..fusion.groups import CHAIN_TAG, chain_tag
+from ..fusion.plans import DEFAULT_MIN_CHAIN
 from .combinators import (Branch, DecisionContext, Loop, LoopContext)
 from .errors import CompileError
 from .futures import Future, Node, TaskSpec
@@ -102,12 +104,18 @@ class Compiled:
 class _Ctx:
     """Per-workflow compile state: namespace, name allocation, name set."""
 
-    def __init__(self, ns: str, wf_name: str) -> None:
+    def __init__(self, ns: str, wf_name: str, chain: bool = True,
+                 min_chain: int = DEFAULT_MIN_CHAIN) -> None:
         self.ns = ns
         self.wf_name = wf_name
         self.used_names: Set[str] = set()
         self._counters: Dict[str, "itertools.count"] = {}
         self._stage_seq = itertools.count()
+        # chain fusion: detection runs per _plan call (static prefix AND
+        # runtime-appended adaptive rounds); chain=False / min_chain are the
+        # documented opt-outs
+        self.chain = chain
+        self.min_chain = max(2, int(min_chain))
         # adaptive-hook failures (predicate/body/arm raised at runtime):
         # post_exec exceptions are recorded-not-fatal in the core, so the
         # API surfaces them through here — api.run() raises on them
@@ -278,9 +286,135 @@ def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
         # the Emgr packer and a fusion-capable RTS read this tag to batch
         # congruent ensemble members into one device dispatch
         task.tags["_fusion_group"] = spec.fusion_group
+    if spec._chain_tag is not None:
+        # chain detection placed this member on a fused chain: the WFP
+        # superstage scheduler and a chain-capable RTS read this tag to
+        # hand off / compose whole chains instead of one stage at a time
+        task.tags[CHAIN_TAG] = dict(spec._chain_tag)
     spec.task = task
     spec.ns = ctx.ns
     return task
+
+
+# --------------------------------------------------------------------------- #
+# Chain detection (perf: cross-stage chain fusion)
+# --------------------------------------------------------------------------- #
+
+def _chain_carry(spec: TaskSpec) -> Optional["tuple[str, TaskSpec]"]:
+    """If ``spec``'s data flow is exactly ONE whole-kwarg future, return
+    ``(kwarg name, producing spec)``; else None.
+
+    This is the elementwise-link shape: the member consumes a single
+    upstream member's output and nothing else (no ``after=`` control edges,
+    no futures in args, none nested inside containers)."""
+    if spec.after or _has_future(spec.args):
+        return None
+    carry = None
+    for k, v in spec.kwargs.items():
+        if isinstance(v, Future):
+            if carry is not None or v.key is not None:
+                return None  # two futures, or an aggregate (loop/branch) future
+            carry = (k, v.owner)
+        elif _has_future(v):
+            return None  # nested future: not a whole-kwarg carry
+    return carry
+
+
+def _elementwise_pred(ens) -> Optional["tuple[Any, str]"]:
+    """The ensemble that ``ens`` consumes elementwise, plus the carry kwarg
+    name — or None when ``ens`` is not a chain link.
+
+    Member *i* must consume exactly member *i*'s future of one upstream
+    ensemble (index-aligned, no permutation), under one common kwarg name,
+    with matching slots/backend per member ("same group key modulo
+    kernel": one member-width lease can then run both links)."""
+    carries = [_chain_carry(s) for s in ens.specs]
+    if any(c is None for c in carries):
+        return None
+    names = {c[0] for c in carries}
+    if len(names) != 1:
+        return None
+    owners = [c[1] for c in carries]
+    pred = getattr(owners[0], "_ens", None)
+    if pred is None or pred is ens or len(pred.specs) != len(ens.specs):
+        return None
+    for s, o, po in zip(ens.specs, owners, pred.specs):
+        if o is not po:           # member-i must consume member-i
+            return None
+        if s.slots != o.slots or s.backend != o.backend:
+            return None
+        if o.fusion_group is None:
+            return None
+    return pred, names.pop()
+
+
+def _detect_chains(units: List[TaskSpec], ctx: _Ctx) -> None:
+    """Tag linear chains of fusable elementwise ensemble stages.
+
+    Runs per ``_plan`` call, so runtime-appended adaptive rounds get their
+    chains detected exactly like the static prefix. Tagging is advisory:
+    an RTS without chain support executes the stages per-stage-fused (the
+    WFProcessor only superstages when the RTS composes chains), and
+    ``ctx.chain=False`` / ``ctx.min_chain`` opt out entirely.
+    """
+    if not ctx.chain:
+        return
+    # fusable ensembles fully contained in this unit set, in unit order
+    present: Dict[int, int] = {}
+    ensembles: List[Any] = []
+    member = {id(u) for u in units}
+    for u in units:
+        ens = u._ens
+        if (ens is None or u.fusion_group is None or u.dynamic is not None
+                or u._chain_tag is not None):
+            continue
+        if id(ens) not in present:
+            present[id(ens)] = 0
+            ensembles.append(ens)
+        present[id(ens)] += 1
+    whole = [e for e in ensembles
+             if present[id(e)] == len(e.specs)
+             and all(id(s) in member for s in e.specs)]
+    if len(whole) < 2:
+        return
+    whole_ids = {id(e) for e in whole}
+    # elementwise edges pred -> ens; a pred consumed elementwise by TWO
+    # ensembles is a fan-out point, not a chain interior — drop its edges
+    succ: Dict[int, Any] = {}
+    pred_of: Dict[int, "tuple[Any, str]"] = {}
+    fanout: Set[int] = set()
+    for ens in whole:
+        edge = _elementwise_pred(ens)
+        if edge is None or id(edge[0]) not in whole_ids:
+            continue
+        pid = id(edge[0])
+        if pid in succ:
+            fanout.add(pid)
+            continue
+        succ[pid] = ens
+        pred_of[id(ens)] = edge
+    for pid in fanout:
+        follower = succ.pop(pid, None)
+        if follower is not None:
+            pred_of.pop(id(follower), None)
+    # maximal paths: start at links with no predecessor edge, follow succ
+    for ens in whole:
+        if id(ens) in pred_of or id(ens) not in succ:
+            continue
+        path, carries = [ens], [None]
+        cur = ens
+        while id(cur) in succ:
+            nxt = succ[id(cur)]
+            path.append(nxt)
+            carries.append(pred_of[id(nxt)][1])
+            cur = nxt
+        if len(path) < ctx.min_chain:
+            continue
+        cid = ctx.fresh(f"{ctx.wf_name}-chain")
+        for k, link in enumerate(path):
+            for m, spec in enumerate(link.specs):
+                spec._chain_tag = chain_tag(cid, k, m, len(path),
+                                            carry=carries[k])
 
 
 # --------------------------------------------------------------------------- #
@@ -303,6 +437,11 @@ def _plan(units: List[TaskSpec], ctx: _Ctx, prefix: str,
     if not units:
         return []
     member = {id(u) for u in units}
+
+    # chain fusion: tag linear runs of fusable elementwise ensemble stages
+    # before tasks are built (adaptive rounds re-enter here at runtime, so
+    # their chains are detected too)
+    _detect_chains(units, ctx)
 
     # names first: every error message and placeholder needs them
     # (continuation units re-enter _plan recursively — claim exactly once)
@@ -574,22 +713,36 @@ class _JoinRuntime:
 # --------------------------------------------------------------------------- #
 
 def compile_workflow(*nodes: Union[Node, Future],
-                     name: Optional[str] = None) -> Compiled:
+                     name: Optional[str] = None,
+                     chain: bool = True,
+                     min_chain: int = DEFAULT_MIN_CHAIN) -> Compiled:
     """Compile a declarative description into PST pipelines.
 
     Weakly-connected components of the task DAG become separate (and
     therefore concurrent) pipelines; within a component, dependency levels
     become sequential stages. All description errors surface here.
+
+    ``chain``/``min_chain``: linear runs of >= ``min_chain`` fusable
+    ensemble stages with elementwise data flow are tagged as fusion
+    *chains*, which a chain-capable RTS executes as composed device
+    dispatches with the intermediate member values never touching the
+    host. ``chain=False`` opts the workflow out (stages still fuse
+    per-stage); raising ``min_chain`` opts out short chains only.
     """
     if not nodes:
         raise CompileError("compile() needs at least one node")
     ns = uid.generate("wf")
     wf_name = name or ns
-    ctx = _Ctx(ns, wf_name)
+    ctx = _Ctx(ns, wf_name, chain=chain, min_chain=min_chain)
     units = _collect_units(list(nodes), ns)
     if not units:
         raise CompileError("compile() found no tasks to run — every input "
                            "was already compiled elsewhere")
+    # chain detection over the FULL unit graph, before the component split
+    # below partitions independent member chains into separate pipelines
+    # (each member's a->b->c run is its own weakly-connected component when
+    # nothing downstream joins them)
+    _detect_chains(units, ctx)
 
     # weakly-connected components -> independent pipelines
     parent: Dict[int, int] = {id(u): id(u) for u in units}

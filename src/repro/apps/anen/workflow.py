@@ -96,6 +96,27 @@ def analog_values(locations: List[List[int]], seed: int = 0, ny: int = 48,
 register_executable("analog_values", analog_values)
 
 
+@fusable(static_argnames=("lo", "hi"), pad_argnames=("values",))
+def analog_refine(values, lo: float = 0.0, hi: float = 1.0):
+    """Second chain link of each round: bound the analog estimates to the
+    historical observation range.
+
+    Analog means are averages of observed values, so the clip is exactly
+    the identity on well-formed inputs — it is a guard against corrupted
+    history windows, and (deliberately) keeps the fused/chained rounds
+    bit-identical to the scalar path. What it buys structurally: every
+    AnEn round is now a 2-link elementwise chain (``analog_values →
+    analog_refine``), so a chain-capable RTS runs the whole round's
+    micro-batches as composed dispatches with the raw analog values never
+    leaving the device between the links.
+    """
+    import jax.numpy as jnp
+    return jnp.clip(jnp.asarray(values, jnp.float32), lo, hi)
+
+
+register_executable("analog_refine", analog_refine)
+
+
 class _SearchState:
     """Shared state the adaptive post_exec hooks steer."""
 
@@ -116,6 +137,11 @@ class _SearchState:
         self.errors: List[float] = []
         self.iteration = 0
         self.data = _dataset(seed, cfg.ny, cfg.nx, cfg.n_hist)
+        # bounds for the refine link (the historical observation range):
+        # plain floats, so they ride the chain as static arguments
+        obs = np.asarray(self.data.hist_obs)
+        self.obs_lo = float(obs.min())
+        self.obs_hi = float(obs.max())
         # the location slices of the round in flight: member results come
         # back as bare value arrays (device-resident on the fused path), so
         # the builder keeps the location bookkeeping host-side
@@ -206,23 +232,31 @@ class _SearchState:
     # ---- declarative description ------------------------------------------- #
 
     def make_round(self, ctx: api.LoopContext) -> api.Ensemble:
-        """One iteration: an ensemble of analog tasks over location slices.
+        """One iteration: a 2-link chain of ensembles over location slices
+        (``analog_values → analog_refine``, elementwise per slice).
 
         ``ctx.results`` (the previous round's values) were absorbed by
         :meth:`converged` before this builder runs, so proposals always see
         the up-to-date estimate — including on journal resume, where rounds
-        replay in order through the same two hooks.
+        replay in order through the same two hooks. Chain detection runs
+        when the round is planned at runtime, so every adaptive round gets
+        the composed-dispatch data plane, not just static workflows.
         """
         locs = self.propose(self.per_iter)
         slices = [sl for sl in np.array_split(locs, self.n_tasks)
                   if len(sl)]
         self._round_slices = [sl.tolist() for sl in slices]
-        return api.ensemble(
+        search = api.ensemble(
             analog_values,
             over=[{"seed": self.seed, "ny": self.cfg.ny, "nx": self.cfg.nx,
                    "n_hist": self.cfg.n_hist, "k": self.cfg.k,
                    "locations": sl.tolist()} for sl in slices],
             name=f"{self.method}-it{ctx.round}-{self.seed}",
+            max_retries=1, fuse=self.fuse)
+        return search.then(
+            analog_refine,
+            over=[{"lo": self.obs_lo, "hi": self.obs_hi} for _ in slices],
+            name=f"{self.method}-it{ctx.round}-{self.seed}-ref",
             max_retries=1, fuse=self.fuse)
 
     def converged(self, ctx: api.LoopContext) -> bool:

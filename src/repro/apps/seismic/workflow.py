@@ -84,6 +84,43 @@ def eval_misfit(source_x: int, nx: int = 64, nz: int = 64, nt: int = 120,
 register_executable("eval_misfit", eval_misfit)
 
 
+@fusable(static_argnames=("nx", "nz", "nt", "seed", "dv"))
+def forward_trial(source_x: int, nx: int = 64, nz: int = 64, nt: int = 120,
+                  seed: int = 0, dv: float = 0.0):
+    """Chain link 1: the trial model's synthetic seismogram for one source.
+
+    Split out of :func:`eval_misfit` so the evaluation sweep becomes an
+    elementwise forward→misfit *chain*: per member the forward wavefield
+    (the expensive link) hands its ``(nt, n_receivers)`` seismogram to the
+    misfit link device-resident — under chain fusion the whole sweep runs
+    both links as composed batched dispatches on one lease.
+    """
+    import jax.numpy as jnp
+    cfg = SeismicConfig(nx=nx, nz=nz, nt=nt)
+    vel_trial = _velocity("init", cfg, seed) + jnp.float32(dv)
+    return forward_simulation(vel_trial, source_x, cfg)
+
+
+register_executable("forward_trial", forward_trial)
+
+
+@fusable(static_argnames=("nx", "nz", "nt", "seed"))
+def trial_misfit(synthetic, source_x: int = 0, nx: int = 64, nz: int = 64,
+                 nt: int = 120, seed: int = 0):
+    """Chain link 2: L2 misfit of a trial seismogram against the observed
+    data for its source (the observed forward is recomputed from the true
+    model, exactly as :func:`eval_misfit` does — the two-link chain's
+    values match the single-kernel sweep to float precision)."""
+    import jax.numpy as jnp
+    cfg = SeismicConfig(nx=nx, nz=nz, nt=nt)
+    vel_true = _velocity("true", cfg, seed)
+    observed = forward_simulation(vel_true, source_x, cfg)
+    return 0.5 * jnp.sum((jnp.asarray(synthetic) - observed) ** 2)
+
+
+register_executable("trial_misfit", trial_misfit)
+
+
 def build_misfit_ensemble(n_events: int, *, nx: int = 64, nz: int = 64,
                           nt: int = 120, seed: int = 0, dv: float = 0.0,
                           max_retries: int = 0, fuse: bool = True
@@ -95,6 +132,57 @@ def build_misfit_ensemble(n_events: int, *, nx: int = 64, nz: int = 64,
         over=[{"source_x": int(sx), "nx": nx, "nz": nz, "nt": nt,
                "seed": seed, "dv": dv} for sx in xs],
         name=f"misfit-{seed}", max_retries=max_retries, fuse=fuse)
+
+
+def build_misfit_chain(n_events: int, *, nx: int = 64, nz: int = 64,
+                       nt: int = 120, seed: int = 0, dv: float = 0.0,
+                       max_retries: int = 0, fuse: bool = True
+                       ) -> api.Ensemble:
+    """The misfit sweep as a 2-link forward→misfit chain (one member per
+    earthquake source): ``api.compile`` detects the elementwise link and a
+    chain-capable RTS executes each micro-batch through BOTH links as one
+    composed dispatch, the per-source seismograms never touching the host."""
+    xs = np.linspace(8, nx - 9, n_events).astype(int)
+    forward = api.ensemble(
+        forward_trial,
+        over=[{"source_x": int(sx), "nx": nx, "nz": nz, "nt": nt,
+               "seed": seed, "dv": dv} for sx in xs],
+        name=f"forward-{seed}", max_retries=max_retries, fuse=fuse)
+    return forward.then(
+        trial_misfit,
+        over=[{"source_x": int(sx), "nx": nx, "nz": nz, "nt": nt,
+               "seed": seed} for sx in xs],
+        name=f"misfit-chain-{seed}", max_retries=max_retries, fuse=fuse)
+
+
+def run_misfit_chain(n_events: int, slots: int = 4, *, nx: int = 64,
+                     nt: int = 120, seed: int = 0, dv: float = 0.0,
+                     fuse: bool = True, chain: bool = True,
+                     timeout: float = 600.0) -> Dict:
+    """Evaluate the forward→misfit chain on the JaxRTS data plane.
+
+    ``chain=False`` runs the identical 2-stage description per-stage-fused;
+    ``fuse=False`` runs it member-per-task — the parity baselines."""
+    ens = build_misfit_chain(n_events, nx=nx, nz=nx, nt=nt, seed=seed,
+                             dv=dv, fuse=fuse)
+    objective = api.gather(ens, total_misfit, name=f"total-chain-{seed}")
+    t0 = time.time()
+    result = api.run(
+        objective, resources=ResourceDescription(slots=slots),
+        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
+        chain=chain, timeout=timeout)
+    elapsed = time.time() - t0
+    out = {
+        "n_events": n_events,
+        "fused": fuse,
+        "chained": chain,
+        "all_done": result.all_done,
+        "total_misfit": objective.out.result(),
+        "misfits": [float(np.asarray(s.out.result())) for s in ens.specs],
+        "wallclock_s": elapsed,
+    }
+    result.close()
+    return out
 
 
 def total_misfit(values: List) -> float:

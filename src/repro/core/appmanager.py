@@ -274,6 +274,15 @@ class AppManager:
 
         # ---- resources + execution ---------------------------------------- #
         self.emgr.acquire_resources()
+        # superstage scheduling is only sound against an RTS that composes
+        # chains itself (it receives downstream links before their inputs
+        # are routed and orders them internally); everywhere else stage
+        # ordering keeps gating submissions
+        chain_ok = getattr(self.emgr.rts, "supports_chain_fusion", None)
+        try:
+            self.wfp.chain_scheduling = bool(chain_ok and chain_ok())
+        except Exception:  # noqa: BLE001 - a dying RTS answers like "no"
+            self.wfp.chain_scheduling = False
         self.wfp.start()
         self.emgr.start()
         if self.component_supervision:

@@ -42,6 +42,10 @@ from .state_service import StateService
 from .wfprocessor import DONE_QUEUE, PENDING_QUEUE
 from ..rts.base import RTS, ResourceDescription, TaskCompletion
 
+#: Task.tags key of a fused-chain link (literal: the core never imports the
+#: fusion package; the api compiler stamps it, the JaxRTS consumes it).
+CHAIN_TAG = "_fusion_chain"
+
 
 class ExecManager:
     def __init__(
@@ -82,6 +86,14 @@ class ExecManager:
         self._backlog_uids: set = set()
         self._backlog_seq = itertools.count()
         self._head_skips = 0                    # rounds the head was passed over
+        # chain fusion (see _chain_ready_locked): a chain link may only be
+        # submitted once its member's terminal link is visible, so the RTS
+        # always receives whole member chains and orders the links itself
+        self._has_chain_backlog = False
+        self._chain_holding = False
+        self._chain_held_ids: set = set()
+        self._chain_released: set = set()
+        self._chain_stalls = 0
         self._spec_of: Dict[str, str] = {}      # clone uid -> original uid
         self._spec_for: Dict[str, str] = {}     # original uid -> clone uid
         self._speculated: set = set()           # originals already cloned
@@ -220,11 +232,18 @@ class ExecManager:
                                 task.slots, deque()).append(
                                     (next(self._backlog_seq), task))
                             self._backlog_uids.add(uid)
+                            if CHAIN_TAG in task.tags:
+                                # arms the whole-chain hand-off machinery;
+                                # chain-free workloads never pay its scan
+                                self._has_chain_backlog = True
                 self.broker.ack_many(PENDING_QUEUE, [t for t, _ in msgs])
                 self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
-            self._submit_ready()
+            # quiescent = a kick-only wakeup: while pending messages are
+            # still streaming in, a held chain is simply incomplete, not
+            # stalled — only kick wakeups may advance the anti-stall valve
+            self._submit_ready(quiescent=not msgs)
 
-    def _submit_ready(self) -> None:
+    def _submit_ready(self, quiescent: bool = True) -> None:
         """Pack backlog tasks into the RTS's free slots and submit them.
 
         Against a federated RTS (one exposing :meth:`member_slots`) the
@@ -270,6 +289,7 @@ class ExecManager:
                 batch = self._pick_batch_locked(free, fusion=fusion)
                 for task in batch:
                     self._submitted[task.uid] = task
+                self._chain_valve_locked(bool(batch), quiescent)
         if not batch:
             return
         self.submit_rounds += 1
@@ -329,8 +349,84 @@ class ExecManager:
                 best = (seq, task)
         return best[1] if best else None
 
+    # -- whole-chain hand-off (chain fusion) ----------------------------------#
+
+    def _chain_ready_locked(self) -> Optional[set]:
+        """Chain ids whose backlog fragment is submittable as one piece.
+
+        The superstage scheduler hands a chain's stages off in one batched
+        pending publish, but the broker delivers it in bounded chunks — so
+        a pack round can see link 0 of members whose links 1..L-1 are
+        still in the queue. Submitting such a fragment would hand the RTS
+        a downstream link later, mid-flight, racing the result-store
+        routing of its inputs. The rule: a chain is held until EVERY
+        member present in the backlog has its *fragment-terminal* link —
+        the highest link the superstage co-published, stamped as ``ss`` on
+        the tag — there too (FIFO delivery then guarantees all the links
+        in between as well), at which point the whole-chain drain submits
+        every member's full link range in one ``rts.submit``, and the RTS
+        owns the ordering. Tasks without an ``ss`` stamp were never
+        co-published (mixed stage, federation, gated continuation): their
+        stages flow one at a time, so they are never held. Returns None
+        when the backlog holds no chain (chain-free workloads skip the
+        scan entirely).
+        """
+        if not self._has_chain_backlog:
+            return None
+        seen: set = set()
+        waiting: Dict[str, set] = {}
+        arrived: Dict[str, set] = {}
+        for dq in self._backlog.values():
+            for _, task in dq:
+                tag = task.tags.get(CHAIN_TAG)
+                if not isinstance(tag, dict):
+                    continue
+                seen.add(tag.get("c"))
+                ss = tag.get("ss")
+                if not isinstance(ss, int):
+                    continue  # never co-published: nothing to wait for
+                side = arrived if tag.get("k") == ss else waiting
+                side.setdefault(tag.get("c"), set()).add(tag.get("m"))
+        if not seen:
+            # the last chain drained: stop paying the scan until the next
+            # chain-tagged task enters the backlog
+            self._has_chain_backlog = False
+            self._chain_released.clear()
+            return None
+        # a valve release is one-shot: it covers exactly the stuck fragment
+        # that tripped it — once that fragment leaves the backlog, later
+        # fragments of the same chain get the normal hold + custody veto
+        # again (and the set cannot grow across adaptive rounds)
+        self._chain_released &= seen
+        # custody veto: while ANY link of a chain is submitted-but-
+        # unfinished, later fragments of that chain (a retried member, a
+        # straggling broker chunk) must wait — submitting them would race
+        # the in-flight links' result routing exactly like a split fragment
+        busy = set()
+        for task in self._submitted.values():
+            tag = task.tags.get(CHAIN_TAG)
+            if isinstance(tag, dict):
+                busy.add(tag.get("c"))
+        return {c for c in set(waiting) | set(arrived)
+                if c not in busy
+                and waiting.get(c, set()) <= arrived.get(c, set())}
+
+    def _chain_held_locked(self, task: Task, chain_ready: set) -> bool:
+        tag = task.tags.get(CHAIN_TAG)
+        if not isinstance(tag, dict):
+            return False
+        if not isinstance(tag.get("ss"), int):
+            return False  # never superstaged: stage gating orders it
+        cid = tag.get("c")
+        if cid in chain_ready or cid in self._chain_released:
+            return False
+        self._chain_holding = True
+        self._chain_held_ids.add(cid)
+        return True
+
     def _take_locked(self, width: int, batch: List[Task],
-                     remaining: int, fusion: bool = False) -> int:
+                     remaining: int, fusion: bool = False,
+                     chain_ready: Optional[set] = None) -> int:
         """Move fitting live tasks of one width bucket into ``batch``.
 
         Against a fusion-capable RTS, taking a task that carries a
@@ -339,13 +435,22 @@ class ExecManager:
         executes the whole group as batched dispatches on one member-width
         device lease, so per-member slot accounting here would throttle
         submission to scalar speed — the opposite of what fusion buys.
+        A ``_fusion_chain`` link additionally drains its whole chain (every
+        link's group, one charge) and is held back while its member's
+        chain is still incomplete (see :meth:`_chain_ready_locked`).
         """
         dq = self._backlog.get(width)
         while dq and width <= remaining:
-            _, task = dq.popleft()
-            self._backlog_uids.discard(task.uid)
+            _, task = dq[0]
             if task.is_final:
+                dq.popleft()
+                self._backlog_uids.discard(task.uid)
                 continue  # lazily pruned
+            if (chain_ready is not None
+                    and self._chain_held_locked(task, chain_ready)):
+                break  # strict FIFO within the width: hold the bucket here
+            dq.popleft()
+            self._backlog_uids.discard(task.uid)
             batch.append(task)
             remaining -= width
             if fusion:
@@ -356,11 +461,39 @@ class ExecManager:
 
     def _drain_group_locked(self, dq: Optional[Deque], first: Task,
                             take: Callable[[Task], None]) -> None:
-        """Pop every consecutive task sharing ``first``'s fusion group off
-        the bucket front into ``take`` (lazily pruning finals) WITHOUT
-        charging slots: the group rides the single batched dispatch its
-        first member already paid for."""
+        """Pop every consecutive task sharing ``first``'s fusion group —
+        or, for a chain link, EVERY task of ``first``'s chain anywhere in
+        the bucket — into ``take`` (lazily pruning finals) WITHOUT
+        charging slots: the run rides the batched dispatches its first
+        member already paid for.
+
+        The chain drain deliberately ignores adjacency: two chains' (or a
+        chain's and other work's) tasks may interleave in one bucket, and
+        leaving a ready chain's tail behind would submit it as a separate
+        fragment in a later round — racing the links already in flight.
+        Non-chain tasks keep their relative FIFO order.
+        """
         group = first.tags.get("_fusion_group")
+        ftag = first.tags.get(CHAIN_TAG)
+        chain = ftag.get("c") if isinstance(ftag, dict) else None
+        if chain is not None:
+            if not dq:
+                return
+            kept: Deque = deque()
+            while dq:
+                entry = dq.popleft()
+                _, nxt = entry
+                if nxt.is_final:
+                    self._backlog_uids.discard(nxt.uid)
+                    continue
+                ntag = nxt.tags.get(CHAIN_TAG)
+                if isinstance(ntag, dict) and ntag.get("c") == chain:
+                    self._backlog_uids.discard(nxt.uid)
+                    take(nxt)
+                else:
+                    kept.append(entry)
+            dq.extend(kept)
+            return
         if group is None:
             return
         while dq:
@@ -369,7 +502,8 @@ class ExecManager:
                 dq.popleft()
                 self._backlog_uids.discard(nxt.uid)
                 continue
-            if nxt.tags.get("_fusion_group") != group:
+            ntag = nxt.tags.get(CHAIN_TAG)
+            if ntag is not None or nxt.tags.get("_fusion_group") != group:
                 return
             dq.popleft()
             self._backlog_uids.discard(nxt.uid)
@@ -390,6 +524,8 @@ class ExecManager:
         the Emgr, owns that error.
         """
         self._prune_fronts_locked()
+        self._chain_holding = False
+        self._chain_held_ids = set()
         if not self._backlog:
             return []
         if free is None:
@@ -399,6 +535,7 @@ class ExecManager:
             self._backlog.clear()
             self._backlog_uids.clear()
             return batch
+        chain_ready = self._chain_ready_locked() if fusion else None
         head = self._head_locked()
         if head is None:
             return []
@@ -414,16 +551,26 @@ class ExecManager:
             if self._head_skips >= self.starvation_limit:
                 return []  # hold everything: drain until the head fits
         elif self._head_skips >= self.starvation_limit:
+            if (chain_ready is not None
+                    and self._chain_held_locked(head, chain_ready)):
+                # a held chain link is starved by design: its missing links
+                # are seconds (or one valve trip) away — never force a
+                # partial chain past the hold
+                return []
             # starved head goes first, then backfill with what still fits
             self._pop_head_locked(head)
             batch.append(head)
             remaining -= head.slots
             self._head_skips = 0
+            if fusion:
+                self._drain_group_locked(
+                    self._backlog.get(head.slots), head, batch.append)
         for width in sorted(self._backlog, reverse=True):
             if remaining <= 0:
                 break
             remaining = self._take_locked(width, batch, remaining,
-                                          fusion=fusion)
+                                          fusion=fusion,
+                                          chain_ready=chain_ready)
         if not batch:
             return []
         if any(t.uid == head.uid for t in batch):
@@ -577,6 +724,28 @@ class ExecManager:
         else:
             del self._backlog[width]
 
+    def _chain_valve_locked(self, submitted_any: bool,
+                            quiescent: bool) -> None:
+        """Anti-stall valve for the chain hold: if holds are the ONLY thing
+        in the backlog and nothing is in custody for several consecutive
+        QUIESCENT rounds (kick-only wakeups — while pending messages still
+        stream in, a held chain is merely incomplete), the missing links
+        are never coming (e.g. a downstream retry whose sibling exhausted
+        its budget) — release the held chains so they run per-stage
+        instead of deadlocking the workflow. By the time the valve trips,
+        every earlier completion has long been routed, so per-stage
+        execution resolves its inputs safely."""
+        if submitted_any or not self._chain_holding:
+            self._chain_stalls = 0
+            return
+        if not quiescent or self._submitted:
+            return  # messages still flowing / work in flight: not a stall
+        self._chain_stalls += 1
+        if self._chain_stalls >= 3:
+            self._chain_released.update(self._chain_held_ids)
+            self._chain_stalls = 0
+            self.broker.kick(PENDING_QUEUE)
+
     def n_backlogged(self) -> int:
         with self._lock:
             return sum(len(dq) for dq in self._backlog.values())
@@ -651,6 +820,11 @@ class ExecManager:
                 ok = False
             if ok:
                 misses = 0
+                if self._chain_holding and not self._submitted:
+                    # drive the anti-stall valve forward: a held chain with
+                    # nothing in flight generates no completion kicks, so
+                    # the heartbeat supplies the wakeups the valve counts
+                    self.broker.kick(PENDING_QUEUE)
                 continue
             misses += 1
             if misses >= 2:
@@ -730,8 +904,13 @@ class ExecManager:
     def _clone_for_speculation(task: Task) -> Task:
         # drop the federation placement hint: the clone should be free to
         # land on a different (less loaded / healthier) member than the
-        # straggling original; the affinity constraint itself is kept
-        tags = {k: v for k, v in task.tags.items() if k != "_fed_member"}
+        # straggling original; the affinity constraint itself is kept.
+        # The chain tag is dropped too: a lone clone must run as an
+        # ordinary (scalar/group) task against the result store — by
+        # speculation time its upstream links are long routed — instead of
+        # waiting in the chain assembler for siblings that never come.
+        tags = {k: v for k, v in task.tags.items()
+                if k not in ("_fed_member", CHAIN_TAG)}
         clone = Task(
             name=f"{task.name}#spec",
             executable=task._fn if task._fn is not None else task.executable,

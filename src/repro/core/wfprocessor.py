@@ -75,6 +75,14 @@ class WFProcessor:
         # sidecar directory for results too rich to JSON onto a DONE record
         # (fused array handles journal a content hash + spill path instead)
         self.spill_dir = spill_dir
+        # Superstage scheduling (chain fusion): when the RTS composes
+        # ``_fusion_chain``-tagged stages (JaxRTS.supports_chain_fusion),
+        # a chain's downstream stages are handed off TOGETHER with its
+        # entry stage so the RTS can run the whole chain on one lease —
+        # the control plane stops sitting between the links. Off (the
+        # default), stage ordering gates submissions exactly as before;
+        # the AppManager flips it per run after acquiring resources.
+        self.chain_scheduling = False
         broker.declare(PENDING_QUEUE)
         broker.declare(DONE_QUEUE)
         broker.declare(SCHEDULE_QUEUE)
@@ -232,6 +240,12 @@ class WFProcessor:
                         return  # current stage still executing
                     self._schedule_stage(pipe, stage, sink, pending)
                     if not stage.is_final:
+                        if self.chain_scheduling:
+                            # superstage: a fused chain's downstream link
+                            # stages ride the same hand-off so the RTS can
+                            # compose the whole chain on one device lease
+                            self._schedule_chain_successors(
+                                pipe, stage, sink, pending)
                         return  # in flight; completions drive progress
                     # stage closed instantly (fully resumed): advance on
         finally:
@@ -287,6 +301,78 @@ class WFProcessor:
                              transact=False, sink=sink)
         # A stage whose every task was resumed completes immediately.
         self._maybe_finalize_stage(pipe, stage, sink=sink)
+
+    # -- superstage (chain fusion) -------------------------------------------#
+
+    #: Task.tags key stamped by the api compiler's chain detection (kept as
+    #: a literal here: the core must not import the fusion package).
+    CHAIN_TAG = "_fusion_chain"
+
+    @classmethod
+    def _stage_chain_links(cls, stage: Stage) -> Optional[Dict[str, set]]:
+        """``{chain id: {link indices}}`` when EVERY task of the stage is a
+        chain link, else None (a mixed stage never superstages — its
+        untagged tasks would be submitted ahead of their input routing)."""
+        sig: Dict[str, set] = {}
+        for task in stage.tasks:
+            tag = task.tags.get(cls.CHAIN_TAG)
+            if not (isinstance(tag, dict) and isinstance(tag.get("c"), str)
+                    and isinstance(tag.get("k"), int)):
+                return None
+            sig.setdefault(tag["c"], set()).add(tag["k"])
+        return sig or None
+
+    def _schedule_chain_successors(self, pipe: Pipeline, stage: Stage,
+                                   sink: Optional[List[Any]],
+                                   pending: Optional[List[str]]) -> None:
+        """Hand off the consecutive stages that continue ``stage``'s chains.
+
+        Stage *i+1* continues stage *i* when every one of its tasks is a
+        chain link whose (chain, link) is exactly one past a (chain, link)
+        in stage *i*. The whole run lands in ONE pending-queue hand-off
+        (the caller's batched ``put_many``), which is what lets the Emgr's
+        whole-chain drain and the JaxRTS's chain assembler see complete
+        member chains. Called under ``pipe.lock``.
+        """
+        sig = self._stage_chain_links(stage)
+        if not sig:
+            return
+        try:
+            idx = pipe.stages.index(stage)
+        except ValueError:  # pragma: no cover - stage always belongs to pipe
+            return
+        published = [stage]
+        for nxt in pipe.stages[idx + 1:]:
+            nsig = self._stage_chain_links(nxt)
+            if not nsig:
+                break
+            continues = all(
+                c in sig and all(k - 1 in sig[c] for k in links)
+                for c, links in nsig.items())
+            if not continues:
+                break
+            if nxt.state == st.STAGE_INITIAL:
+                self._schedule_stage(pipe, nxt, sink, pending)
+            published.append(nxt)
+            sig = nsig
+        if len(published) < 2:
+            return
+        # stamp the superstage EXTENT ("ss" = highest co-published link per
+        # chain) onto every published link task: the Emgr only holds a
+        # chain fragment for links it knows were co-published — a chain
+        # that could not superstage (mixed stage, gated continuation) flows
+        # stage by stage with zero hold latency, per-stage fused
+        extent: Dict[str, int] = {}
+        for s in published:
+            for task in s.tasks:
+                tag = task.tags.get(self.CHAIN_TAG)
+                if isinstance(tag, dict):
+                    extent[tag["c"]] = max(extent.get(tag["c"], 0), tag["k"])
+        for s in published:
+            for task in s.tasks:
+                tag = task.tags.get(self.CHAIN_TAG)
+                if isinstance(tag, dict):
+                    tag["ss"] = extent[tag["c"]]
 
     # -- Dequeue ------------------------------------------------------------#
 
@@ -519,12 +605,30 @@ class WFProcessor:
         if pipe.completed:
             if not pipe.is_final:
                 self._finalize_pipeline(pipe, sink=sink)
-        else:
+            return
+        # wake Enqueue only when this closure actually exposed schedulable
+        # work: under superstage scheduling the chain's downstream stages
+        # are already in flight, and a dirty mark per link closure would
+        # cost one full schedule-queue round trip per member per stage —
+        # O(members × links) no-op passes on the chain hot path
+        nxt = pipe.next_stage()
+        if nxt is None:
+            if pipe.completed and not pipe.is_final:
+                # the cursor caught up through already-final stages
+                self._finalize_pipeline(pipe, sink=sink)
+        elif nxt.state == st.STAGE_INITIAL:
             self._mark_dirty(pipe.uid)  # next stage is ready to schedule
 
     def _finalize_pipeline(self, pipe: Pipeline,
                            failed: Optional[bool] = None,
                            sink: Optional[List[Any]] = None) -> None:
+        if pipe.is_final:
+            # under superstage scheduling a chain's downstream stages are
+            # already in flight when fail_stage finalizes the pipeline;
+            # their (failed) closures must not re-finalize it — the state
+            # machine forbids FAILED->FAILED and the extra decrement would
+            # corrupt the open-pipeline count
+            return
         if failed is None:
             failed = (pipe.failed_tasks > 0
                       and self.on_task_failure == "fail_stage")

@@ -29,12 +29,15 @@ The ExecManager hands whole groups to any RTS advertising
 member does), charging pilot slots per *batch* instead of per member.
 """
 
-from .groups import (FUSION_ATTR, GROUP_TAG, FusionSpec, fusable,  # noqa: F401
-                     fusion_group_key, fusion_spec)
+from .groups import (CHAIN_TAG, FUSION_ATTR, GROUP_TAG, FusionSpec,  # noqa: F401
+                     chain_tag, fusable, fusion_group_key, fusion_spec,
+                     parse_chain_tag)
 from .handles import ArrayResult  # noqa: F401
-from .plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_BATCH, GroupPlan,  # noqa: F401
-                    plan_group)
+from .plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_BATCH,  # noqa: F401
+                    DEFAULT_MIN_CHAIN, GroupPlan, plan_chain, plan_group)
 
 __all__ = ["FusionSpec", "fusable", "fusion_spec", "fusion_group_key",
-           "ArrayResult", "GroupPlan", "plan_group", "GROUP_TAG",
-           "FUSION_ATTR", "DEFAULT_MIN_BATCH", "DEFAULT_MAX_BATCH"]
+           "ArrayResult", "GroupPlan", "plan_group", "plan_chain",
+           "GROUP_TAG", "CHAIN_TAG", "chain_tag", "parse_chain_tag",
+           "FUSION_ATTR", "DEFAULT_MIN_BATCH", "DEFAULT_MAX_BATCH",
+           "DEFAULT_MIN_CHAIN"]

@@ -1,4 +1,4 @@
-"""Fused execution engine: N congruent tasks → one batched JAX dispatch.
+"""Fused execution engine: N congruent tasks → batched JAX dispatches.
 
 Given a micro-batch of member tasks (same kernel, congruent kwargs — see
 :mod:`repro.fusion.groups`), the engine
@@ -10,20 +10,37 @@ Given a micro-batch of member tasks (same kernel, congruent kwargs — see
    variable-length arguments to the group maximum by edge replication,
    which is safe for per-row kernels because padded rows are trimmed from
    the outputs before delivery,
-3. dispatches **once**: the kernel's hand-written batched implementation
-   when it has one, else ``jax.vmap`` of the scalar kernel, jitted with a
-   cache keyed on (kernel, static arguments) so repeated micro-batches of
-   one ensemble reuse the trace,
-4. fans the stacked output back out as one completion per member — the
-   ``FusedCompletion`` fan-out: every member gets its own DONE/FAILED
-   event, so journal records, retry budgets and resume semantics are
-   per-task, exactly as if the members had run scalar.
+3. dispatches **once per link**: the kernel's hand-written batched
+   implementation when it has one, else ``jax.vmap`` of the scalar kernel,
+   jitted with a cache keyed on (kernel, static arguments) so repeated
+   micro-batches of one ensemble reuse the trace,
+4. fans the stacked output back out as one completion per member — every
+   member gets its own DONE/FAILED event, so journal records, retry
+   budgets and resume semantics are per-task, exactly as if the members
+   had run scalar.
 
-Failure isolation: a member whose outputs contain non-finite values FAILS
-alone (the rest of the batch completes); an exception raised by the batched
-dispatch itself degrades the whole micro-batch to per-member scalar
-execution so only the actually-culpable members fail. Resume of a
-partially-failed batch therefore re-runs exactly the failed members.
+Chain fusion (PR 5) extends this across stages: :class:`ChainExecution`
+takes a *list* of links (one micro-batch of members through L elementwise
+stages), composes consecutive ``vmap``-able links into a single jitted
+program (``jit(vmap(g∘f))``) and carries the stacked intermediate outputs
+between links device-resident — the host never re-stacks, and the control
+plane never sits between stages. Execution is **asynchronous**: the
+carrier's worker thread only resolves inputs, stacks and enqueues the
+dispatches (:meth:`ChainExecution.dispatch`), streaming per-link records to
+a completion drainer which blocks on the device output, fans out the
+per-stage per-member completions in link order (:meth:`ChainExecution.drain`)
+and releases the device lease. Host-side stacking of micro-batch *n+1*
+therefore overlaps device compute of micro-batch *n*.
+
+Failure isolation: a member whose outputs contain non-finite values at
+link *k* FAILS at *k* and its downstream links fail with an upstream
+marker, while every other member completes; an exception raised by a
+chain/batched dispatch degrades the remaining links to per-stage fused
+execution (consuming the already-resolved upstream values), and a failing
+per-stage dispatch degrades further to per-member scalar execution so only
+the actually-culpable members fail. Resume of a partially-failed batch
+therefore re-runs exactly the failed members, re-entering mid-chain from
+the last journaled link.
 """
 
 from __future__ import annotations
@@ -31,7 +48,7 @@ from __future__ import annotations
 import threading
 import time
 import traceback
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,7 +56,7 @@ import numpy as np
 from ..core.pst import Task, resolve_executable
 from ..rts.base import TaskCompletion
 from .groups import FusionSpec, fusion_spec
-from .handles import ArrayResult
+from .handles import ArrayResult, LazySlice
 
 Deliver = Callable[[TaskCompletion], None]
 
@@ -54,6 +71,25 @@ _JIT_CACHE_MAX = 64
 _jit_cache: "OrderedDict[Tuple, Callable[..., Any]]" = OrderedDict()
 _jit_lock = threading.Lock()
 
+# task uid -> (fn, args, kwargs) with ArrayResult handles unwrapped: the
+# resolve + unwrap recursion over a member's kwargs showed up hot in the
+# 10k-member stacking path (it ran once at Emgr pack time for the kernel
+# spec and again per dispatch). Entries are dropped when the member's
+# completion is delivered, so retries always re-resolve.
+_CALL_CACHE_MAX = 16384
+_call_cache: "OrderedDict[str, Tuple[Callable, list, dict]]" = OrderedDict()
+_call_lock = threading.Lock()
+
+# (kernel, frozenset(kwarg names)) -> (static names, shared names, batch
+# names): the kwarg partition is identical for every micro-batch of a group.
+_part_cache: "OrderedDict[Tuple, Tuple[tuple, tuple, tuple]]" = OrderedDict()
+_PART_CACHE_MAX = 256
+
+# (kernel, statics key) -> output treedef, reused across micro-batches of
+# the same group (flatten_up_to skips re-deriving the structure).
+_treedef_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+_TREEDEF_CACHE_MAX = 256
+
 
 class Incongruent(Exception):
     """Members cannot share a dispatch; the caller runs them scalar."""
@@ -62,23 +98,6 @@ class Incongruent(Exception):
 # --------------------------------------------------------------------------- #
 # Member resolution
 # --------------------------------------------------------------------------- #
-
-def member_call(task: Task) -> Tuple[Callable[..., Any], list, dict]:
-    """Resolve one member task to (fn, args, kwargs), placeholders resolved.
-
-    Tasks compiled by the declarative API run through the registered
-    trampoline; fusing must look *through* it to the user kernel, resolving
-    the same future placeholders the trampoline would.
-    """
-    if task.executable == TRAMPOLINE:
-        from ..api.runtime import resolve as resolve_placeholders
-        ns = task.kwargs["__ns__"]
-        fn = resolve_executable(task.kwargs["__fn__"])
-        args = resolve_placeholders(task.kwargs["__args__"], ns)
-        kwargs = resolve_placeholders(task.kwargs["__kwargs__"], ns)
-        return fn, list(args), dict(kwargs)
-    return task.resolve(), list(task.args), dict(task.kwargs)
-
 
 def _unwrap(value: Any) -> Any:
     """Unwrap ArrayResult handles nested in resolved kwargs."""
@@ -91,15 +110,109 @@ def _unwrap(value: Any) -> Any:
     return value
 
 
+def _resolve_call(task: Task, overrides: Optional[Dict[str, Any]]
+                  ) -> Tuple[Callable[..., Any], list, dict]:
+    if task.executable == TRAMPOLINE:
+        from ..api.runtime import resolve as resolve_placeholders
+        ns = task.kwargs["__ns__"]
+        fn = resolve_executable(task.kwargs["__fn__"])
+        if overrides:
+            args = _resolve_over(task.kwargs["__args__"], ns, overrides)
+            kwargs = _resolve_over(task.kwargs["__kwargs__"], ns, overrides)
+        else:
+            args = resolve_placeholders(task.kwargs["__args__"], ns)
+            kwargs = resolve_placeholders(task.kwargs["__kwargs__"], ns)
+        return fn, [_unwrap(a) for a in args], \
+            {k: _unwrap(v) for k, v in kwargs.items()}
+    return task.resolve(), [_unwrap(a) for a in task.args], \
+        {k: _unwrap(v) for k, v in task.kwargs.items()}
+
+
+def _resolve_over(value: Any, ns: str, overrides: Dict[str, Any]) -> Any:
+    """Placeholder resolution that prefers chain-carried values over the
+    store (mid-chain degrades must never race the Dequeue's store routing;
+    the carrier already holds the upstream member values)."""
+    from ..api.runtime import FUTURE_KEY
+    from ..core.results import STORE
+
+    if isinstance(value, dict):
+        if set(value) == {FUTURE_KEY}:
+            name = value[FUTURE_KEY]
+            if name in overrides:
+                return overrides[name]
+            return STORE.get(ns, name)
+        return {k: _resolve_over(v, ns, overrides) for k, v in value.items()}
+    if isinstance(value, list):
+        return [_resolve_over(v, ns, overrides) for v in value]
+    return value
+
+
+def member_call(task: Task, overrides: Optional[Dict[str, Any]] = None
+                ) -> Tuple[Callable[..., Any], list, dict]:
+    """Resolve one member task to (fn, args, kwargs), placeholders resolved
+    and ArrayResult handles unwrapped.
+
+    Tasks compiled by the declarative API run through the registered
+    trampoline; fusing must look *through* it to the user kernel, resolving
+    the same future placeholders the trampoline would. The resolution is
+    cached per task (the Emgr's kernel-spec probe and the dispatch both
+    need it); callers must treat the returned structures as read-only.
+    """
+    if overrides:
+        return _resolve_call(task, overrides)
+    with _call_lock:
+        hit = _call_cache.get(task.uid)
+        if hit is not None:
+            _call_cache.move_to_end(task.uid)
+            return hit
+    call = _resolve_call(task, None)
+    with _call_lock:
+        _call_cache[task.uid] = call
+        while len(_call_cache) > _CALL_CACHE_MAX:
+            _call_cache.popitem(last=False)
+    return call
+
+
+def drop_member_call(uid: str) -> None:
+    """Invalidate a member's cached resolution (delivery/retry boundary)."""
+    with _call_lock:
+        _call_cache.pop(uid, None)
+
+
 # --------------------------------------------------------------------------- #
 # Batch preparation
 # --------------------------------------------------------------------------- #
 
-def _prepare(calls: Sequence[Tuple[Callable, list, dict]]):
+def _partition(fn: Callable, spec: FusionSpec, kwargs0: dict
+               ) -> Tuple[tuple, tuple, tuple]:
+    """(static names, shared names, batch names) for one group's kwargs —
+    cached: the partition never changes between micro-batches of a group."""
+    key = (fn, frozenset(kwargs0))
+    with _jit_lock:
+        part = _part_cache.get(key)
+        if part is not None:
+            _part_cache.move_to_end(key)
+            return part
+    statics = tuple(k for k in spec.static_argnames if k in kwargs0)
+    shareds = tuple(k for k in spec.shared_argnames if k in kwargs0)
+    batch = tuple(k for k in kwargs0
+                  if k not in statics and k not in shareds)
+    part = (statics, shareds, batch)
+    with _jit_lock:
+        _part_cache[key] = part
+        while len(_part_cache) > _PART_CACHE_MAX:
+            _part_cache.popitem(last=False)
+    return part
+
+
+def _prepare(calls: Sequence[Tuple[Callable, list, dict]],
+             pad_to: Optional[int] = None):
     """Validate congruence and stack the batch kwargs.
 
-    Returns ``(fn, spec, static_kw, shared_kw, stacked, valid_lens)`` where
-    ``stacked`` maps batch kwarg → array with leading axis ``B`` and
+    Returns ``(fn, spec, static_kw, shared_kw, stacked, valid_lens, padded_b)``
+    where ``stacked`` maps batch kwarg → array with leading axis
+    ``padded_b`` (the batch axis bucketed to a power of two, or to
+    ``pad_to`` when a chain entry already fixed the bucket) and
     ``valid_lens`` is the per-member unpadded length (None when no padding
     was needed).
     """
@@ -114,17 +227,17 @@ def _prepare(calls: Sequence[Tuple[Callable, list, dict]]):
     for fn, args, kwargs in calls:
         if fn is not fn0 or args or set(kwargs) != keys0:
             raise Incongruent("members disagree on kernel or kwarg names")
-    static_kw = {k: kwargs0[k] for k in spec.static_argnames if k in kwargs0}
+    static_names, shared_names, batch_keys = _partition(fn0, spec, kwargs0)
+    static_kw = {k: kwargs0[k] for k in static_names}
     for _, _, kwargs in calls[1:]:
         for k, v in static_kw.items():
             if kwargs[k] != v:
                 raise Incongruent(f"static argument {k!r} differs "
                                   f"within the group")
-    shared_kw = {k: _unwrap(kwargs0[k])
-                 for k in spec.shared_argnames if k in kwargs0}
+    shared_kw = {k: kwargs0[k] for k in shared_names}
     for _, _, kwargs in calls[1:]:
         for k, v0 in shared_kw.items():
-            v = _unwrap(kwargs[k])
+            v = kwargs[k]
             if v is v0:
                 continue  # the common case: one object shared by reference
             a0, a1 = np.asarray(v0), np.asarray(v)
@@ -137,13 +250,11 @@ def _prepare(calls: Sequence[Tuple[Callable, list, dict]]):
                 # member against the wrong array
                 raise Incongruent(
                     f"shared argument {k!r} differs within the group")
-    batch_keys = [k for k in kwargs0
-                  if k not in static_kw and k not in shared_kw]
 
     stacked: Dict[str, Any] = {}
     valid_lens: Optional[List[int]] = None
     for k in batch_keys:
-        raw = [_unwrap(kwargs[k]) for _, _, kwargs in calls]
+        raw = [kwargs[k] for _, _, kwargs in calls]
         # stack host-side unless a leaf is already device-resident (an
         # ArrayResult from an upstream fused stage): per-member
         # jnp.asarray + device jnp.stack costs one dispatch per member —
@@ -177,15 +288,86 @@ def _prepare(calls: Sequence[Tuple[Callable, list, dict]]):
     # last member: jit compiles once per (kernel, statics, SHAPE), and an
     # Emgr submitting adaptively-sized micro-batches would otherwise pay a
     # fresh XLA compile (~100x a dispatch) for nearly every carrier. The
-    # duplicate rows compute and are discarded at fan-out.
+    # duplicate rows compute and are discarded at fan-out. A chain entry
+    # fixes the bucket for every downstream link (``pad_to``): the carried
+    # axis must stay congruent through the whole composed program.
     b = len(calls)
-    target_b = 1 << max(0, b - 1).bit_length()
+    target_b = pad_to if pad_to is not None \
+        else 1 << max(0, b - 1).bit_length()
+    if target_b < b:
+        raise Incongruent("chain links disagree on member count")
     if target_b != b:
         for k, arr in stacked.items():
             xp = jnp if not isinstance(arr, np.ndarray) else np
             stacked[k] = xp.concatenate(
                 [arr, xp.repeat(arr[-1:], target_b - b, axis=0)])
-    return fn0, spec, static_kw, shared_kw, stacked, valid_lens
+    return fn0, spec, static_kw, shared_kw, stacked, valid_lens, target_b
+
+
+def _continuation_calls(tasks: Sequence[Task], prev_tasks: Sequence[Task]
+                        ) -> Tuple[List[Tuple[Callable, list, dict]], str]:
+    """Resolve a continuation link's members WITHOUT touching their carried
+    input: the carry arrives device-resident from the previous link, so its
+    placeholder must not hit the result store (mid-chain it has no value
+    there yet — that is the whole point). Returns the carry kwarg name."""
+    from ..api.runtime import FUTURE_KEY
+    from ..api.runtime import resolve as resolve_placeholders
+
+    calls: List[Tuple[Callable, list, dict]] = []
+    names: set = set()
+    for t, prev in zip(tasks, prev_tasks):
+        if t.executable != TRAMPOLINE:
+            raise Incongruent("chain link is not a data-flow task")
+        if t.kwargs.get("__args__"):
+            raise Incongruent("chain link has positional args")
+        ns = t.kwargs["__ns__"]
+        fn = resolve_executable(t.kwargs["__fn__"])
+        carry_k = None
+        other: Dict[str, Any] = {}
+        for k, v in (t.kwargs.get("__kwargs__") or {}).items():
+            if isinstance(v, dict) and set(v) == {FUTURE_KEY}:
+                if v[FUTURE_KEY] == prev.name and carry_k is None:
+                    carry_k = k
+                    continue
+                raise Incongruent("chain link consumes a non-chain future")
+            other[k] = _unwrap(resolve_placeholders(v, ns))
+        if carry_k is None:
+            raise Incongruent("chain link does not consume its predecessor")
+        calls.append((fn, [], other))
+        names.add(carry_k)
+    if len(names) != 1:
+        raise Incongruent("chain links disagree on the carry kwarg")
+    return calls, names.pop()
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch
+# --------------------------------------------------------------------------- #
+
+def _statics_key(static_kw: dict) -> Optional[Tuple]:
+    try:
+        key = tuple(sorted(static_kw.items()))
+        hash(key)
+        return key
+    except TypeError:
+        return None
+
+
+def _jit_cached(cache_key: Optional[Tuple], build: Callable[[], Callable]
+                ) -> Callable:
+    if cache_key is not None:
+        with _jit_lock:
+            jitted = _jit_cache.get(cache_key)
+            if jitted is not None:
+                _jit_cache.move_to_end(cache_key)
+                return jitted
+    jitted = build()
+    if cache_key is not None:
+        with _jit_lock:
+            _jit_cache[cache_key] = jitted
+            while len(_jit_cache) > _JIT_CACHE_MAX:
+                _jit_cache.popitem(last=False)
+    return jitted
 
 
 def _dispatch(fn, spec: FusionSpec, static_kw: dict, shared_kw: dict,
@@ -195,46 +377,93 @@ def _dispatch(fn, spec: FusionSpec, static_kw: dict, shared_kw: dict,
 
     if spec.batched is not None:
         return spec.batched(**stacked, **static_kw, **shared_kw)
-    cache_key: Optional[Tuple] = None
-    try:
-        cache_key = (fn, tuple(sorted(static_kw.items())),
-                     tuple(sorted(stacked)))
-        hash(cache_key)
-    except TypeError:
-        cache_key = None  # unhashable statics: jit without the cache
-    with _jit_lock:
-        jitted = _jit_cache.get(cache_key) if cache_key is not None else None
-        if jitted is not None:
-            _jit_cache.move_to_end(cache_key)
-    if jitted is None:
+    skey = _statics_key(static_kw)
+    cache_key = None if skey is None else (fn, skey, tuple(sorted(stacked)))
+
+    def build():
         def call(batched: dict, shared: dict):
             return fn(**batched, **shared, **static_kw)
-        jitted = jax.jit(jax.vmap(call, in_axes=(0, None)))
-        if cache_key is not None:
-            with _jit_lock:
-                _jit_cache[cache_key] = jitted
-                while len(_jit_cache) > _JIT_CACHE_MAX:
-                    _jit_cache.popitem(last=False)
-    return jitted(stacked, shared_kw)
+        return jax.jit(jax.vmap(call, in_axes=(0, None)))
 
+    return _jit_cached(cache_key, build)(stacked, shared_kw)
+
+
+class _LinkPlan:
+    """One prepared chain link: resolved kernel + stacked batch kwargs."""
+
+    __slots__ = ("tasks", "fn", "spec", "static_kw", "shared_kw", "stacked",
+                 "valid_lens", "carry_name", "statics_key")
+
+    def __init__(self, tasks, fn, spec, static_kw, shared_kw, stacked,
+                 valid_lens, carry_name) -> None:
+        self.tasks = tasks
+        self.fn = fn
+        self.spec = spec
+        self.static_kw = static_kw
+        self.shared_kw = shared_kw
+        self.stacked = stacked
+        self.valid_lens = valid_lens
+        self.carry_name = carry_name
+        self.statics_key = _statics_key(static_kw)
+
+
+def _composed_segment(plans: Sequence[_LinkPlan]) -> Callable:
+    """One jitted program running consecutive vmap-able links back to back —
+    literally ``jit(vmap(g∘f))`` for a 2-link segment. The carried
+    intermediate is an XLA value inside the program: it never materializes
+    on the host, and XLA is free to fuse across the link boundary. Every
+    link's output is still returned (the fan-out owes each stage its
+    per-member completions)."""
+    import jax
+
+    metas = [(p.fn, dict(p.static_kw), p.carry_name) for p in plans]
+
+    def seg(stacked_list, shared_list, carry):
+        outs = []
+        for (fn, static_kw, carry_name), kwb, shb in zip(
+                metas, stacked_list, shared_list):
+            kw = dict(kwb)
+            if carry_name is not None:
+                kw[carry_name] = carry
+            def call(kw_, sh_, fn=fn, static_kw=static_kw):
+                return fn(**kw_, **sh_, **static_kw)
+            out = jax.vmap(call, in_axes=(0, None))(kw, shb)
+            outs.append(out)
+            carry = out
+        return outs
+
+    cache_key: Optional[Tuple] = tuple(
+        (p.fn, p.statics_key, tuple(sorted(p.stacked)), p.carry_name,
+         tuple(sorted(p.shared_kw))) for p in plans)
+    if any(p.statics_key is None for p in plans):
+        cache_key = None
+    return _jit_cached(("chain", cache_key) if cache_key else None,
+                       lambda: jax.jit(seg))
+
+
+# --------------------------------------------------------------------------- #
+# Fan-out
+# --------------------------------------------------------------------------- #
 
 class _FanOut:
     """Turns one stacked output pytree into per-member results.
 
     Built once per dispatch: per-member-scalar leaves (ndim == 1) transfer
     to the host in ONE copy and fan out as Python scalars; higher-rank
-    leaves stay on device and members receive zero-copy slices wrapped in
-    :class:`ArrayResult` (device-residency between stages). The finite
-    mask is likewise one reduction per leaf, a single device→host sync for
-    the whole batch instead of one per member.
+    leaves stay on device and members receive zero-copy LAZY slices
+    (:class:`~repro.fusion.handles.LazySlice`) — the gather only runs if a
+    consumer reads the handle, so chain-internal stages deliver at host
+    bookkeeping cost. The finite mask is likewise one reduction per leaf, a
+    single device→host sync for the whole batch instead of one per member.
     """
 
     def __init__(self, out: Any, n_live: int, check_finite: bool,
-                 valid_lens: Optional[List[int]]) -> None:
+                 valid_lens: Optional[List[int]],
+                 treedef_key: Optional[Tuple] = None) -> None:
         import jax
         import jax.numpy as jnp
 
-        self.leaves, self.treedef = jax.tree_util.tree_flatten(out)
+        self.leaves, self.treedef = self._flatten(out, treedef_key)
         self.valid_lens = valid_lens
         self.padded_len = max(valid_lens) if valid_lens else None
         self.ok = np.ones(n_live, bool)
@@ -248,25 +477,52 @@ class _FanOut:
                 fin = jnp.isfinite(arr.reshape(arr.shape[0], -1)).all(axis=1)
                 self.ok &= np.asarray(fin)[:n_live]
 
+    @staticmethod
+    def _flatten(out: Any, treedef_key: Optional[Tuple]):
+        import jax
+
+        if treedef_key is not None and treedef_key[-1] is None:
+            # unhashable statics: different static configs of one kernel
+            # would collide on (fn, None) and flatten_up_to would silently
+            # mis-structure the other config's output — same rule as the
+            # jit cache, which also disables itself for unhashable statics
+            treedef_key = None
+        if treedef_key is not None:
+            with _jit_lock:
+                cached = _treedef_cache.get(treedef_key)
+            if cached is not None:
+                try:
+                    return list(cached.flatten_up_to(out)), cached
+                except (ValueError, TypeError):
+                    pass  # structure changed: re-derive below
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        if treedef_key is not None:
+            with _jit_lock:
+                _treedef_cache[treedef_key] = treedef
+                while len(_treedef_cache) > _TREEDEF_CACHE_MAX:
+                    _treedef_cache.popitem(last=False)
+        return leaves, treedef
+
     def member(self, i: int) -> Any:
         import jax
 
         def pick(idx: int) -> Any:
             if idx in self.host:
                 return self.host[idx][i].item()
-            piece = self.leaves[idx][i]
-            if (self.valid_lens is not None and piece.ndim >= 1
-                    and piece.shape[0] == self.padded_len
+            leaf = self.leaves[idx]
+            trim = None
+            if (self.valid_lens is not None and leaf.ndim >= 2
+                    and leaf.shape[1] == self.padded_len
                     and self.valid_lens[i] < self.padded_len):
-                piece = piece[:self.valid_lens[i]]
-            return piece.item() if piece.ndim == 0 else ArrayResult(piece)
+                trim = self.valid_lens[i]
+            return LazySlice(leaf, i, trim=trim)
 
         return jax.tree_util.tree_unflatten(
             self.treedef, [pick(idx) for idx in range(len(self.leaves))])
 
 
 # --------------------------------------------------------------------------- #
-# Entry point
+# Single-link entry point (also the chain's per-stage degrade unit)
 # --------------------------------------------------------------------------- #
 
 def execute_fused(
@@ -277,6 +533,7 @@ def execute_fused(
     *,
     canceled: Optional[set] = None,
     fault_injector: Optional[Callable[[Task], bool]] = None,
+    overrides: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, int]:
     """Run ``members`` as one fused dispatch; deliver one completion each.
 
@@ -284,7 +541,9 @@ def execute_fused(
     ``failed`` member counts). ``canceled`` uids are skipped without a
     completion (the same semantics as dropping a queued task on cancel);
     ``fault_injector`` is honoured per member so the failure experiments
-    behave identically on the fused path.
+    behave identically on the fused path. ``overrides`` (chain degrade)
+    resolves future placeholders from the carrier's already-computed
+    upstream values instead of the store.
     """
     import jax
 
@@ -297,6 +556,10 @@ def execute_fused(
 
     def finish(task: Task, exit_code: int, result: Any = None,
                exception: Optional[str] = None, n_live: int = 1) -> None:
+        # invalidate BEFORE the cancel skip: a canceled member delivers no
+        # completion, but leaving its resolved arrays pinned in the call
+        # cache until LRU eviction would retain them long past the run
+        drop_member_call(task.uid)
         if task.uid in canceled:
             return
         now = time.time()
@@ -322,15 +585,18 @@ def execute_fused(
         return stats
 
     try:
-        calls = [member_call(t) for t in live]
-        fn, spec, static_kw, shared_kw, stacked, valid_lens = _prepare(calls)
+        calls = [member_call(t, overrides) for t in live]
+        fn, spec, static_kw, shared_kw, stacked, valid_lens, _ = \
+            _prepare(calls)
         out = _dispatch(fn, spec, static_kw, shared_kw, stacked)
         out = jax.block_until_ready(out)
         fan = _FanOut(out, len(live), spec.check_finite,
-                      valid_lens if spec.trim_outputs else None)
+                      valid_lens if spec.trim_outputs else None,
+                      treedef_key=(fn, _statics_key(static_kw)))
         stats["dispatches"] = 1
     except Exception:  # noqa: BLE001 - degrade to per-member execution
-        return _scalar_fallback(live, cancel_event, finish, stats)
+        return _scalar_fallback(live, cancel_event, finish, stats,
+                                overrides=overrides)
 
     for i, task in enumerate(live):
         if cancel_event.is_set():
@@ -347,7 +613,9 @@ def execute_fused(
 
 
 def _scalar_fallback(live: Sequence[Task], cancel_event: threading.Event,
-                     finish, stats: Dict[str, int]) -> Dict[str, int]:
+                     finish, stats: Dict[str, int],
+                     overrides: Optional[Dict[str, Any]] = None
+                     ) -> Dict[str, int]:
     """The batched dispatch raised (or could not be built): run each member
     on its own so only the actually-failing members fail."""
     for task in live:
@@ -355,9 +623,8 @@ def _scalar_fallback(live: Sequence[Task], cancel_event: threading.Event,
             finish(task, -2)
             continue
         try:
-            fn, args, kwargs = member_call(task)
-            result = fn(*[_unwrap(a) for a in args],
-                        **{k: _unwrap(v) for k, v in kwargs.items()})
+            fn, args, kwargs = member_call(task, overrides)
+            result = fn(*args, **kwargs)
             spec = fusion_spec(fn)
             if (spec is not None and spec.check_finite
                     and hasattr(result, "dtype")
@@ -372,3 +639,337 @@ def _scalar_fallback(live: Sequence[Task], cancel_event: threading.Event,
         except Exception:  # noqa: BLE001 - per-member isolation
             finish(task, 1, exception=traceback.format_exc(limit=10))
     return stats
+
+
+# --------------------------------------------------------------------------- #
+# Chain execution (async: dispatch on the carrier worker, drain elsewhere)
+# --------------------------------------------------------------------------- #
+
+class ChainExecution:
+    """One micro-batch of members through L chain links, asynchronously.
+
+    The carrier worker calls :meth:`dispatch` — resolve, stack, enqueue the
+    composed device dispatches, streaming one record per link — and
+    returns. The RTS's completion drainer calls :meth:`drain`, which blocks
+    on each link's device output in order and fans out the per-stage,
+    per-member completions (the journal sees exactly the records a
+    per-stage run would have produced, in the same order). A single-link
+    "chain" is the plain PR-4 fused micro-batch, just asynchronous.
+
+    Degrade ladder: a failed chain dispatch at link *k* falls back to
+    per-stage fused execution of links *k..L-1* (consuming the carrier's
+    own upstream values — never the store, which mid-chain may not have
+    been routed yet), and a failed per-stage dispatch falls back to
+    per-member scalar execution (inside :func:`execute_fused`).
+    """
+
+    def __init__(self, links: Sequence[Sequence[Task]],
+                 devices: Sequence[Any],
+                 cancel_event: threading.Event,
+                 deliver: Deliver,
+                 *,
+                 canceled: Optional[set] = None,
+                 fault_injector: Optional[Callable[[Task], bool]] = None,
+                 compose: bool = True) -> None:
+        self.links: List[List[Task]] = [list(link) for link in links]
+        self.compose = compose
+        self.devices = devices
+        self.cancel_event = cancel_event
+        self.deliver = deliver
+        self.canceled = canceled if canceled is not None else set()
+        self.fault_injector = fault_injector
+        self.started = time.time()
+        self.stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
+                      "dispatches": 0, "chain_links": 0}
+        self._plans: List[Optional[_LinkPlan]] = [None] * len(self.links)
+        self._injected: Dict[int, int] = {}   # member col -> first bad link
+        self._fail_retryable: Dict[int, bool] = {}
+        self._records: deque = deque()
+        self._cv = threading.Condition()
+        self._delivered: set = set()
+        self._fail_link = 0
+
+    # -- record stream ---------------------------------------------------- #
+
+    def _push(self, record: Tuple) -> None:
+        with self._cv:
+            self._records.append(record)
+            self._cv.notify_all()
+
+    def _pop(self, stop_event: Optional[threading.Event]) -> Optional[Tuple]:
+        with self._cv:
+            while not self._records:
+                if stop_event is not None and stop_event.is_set():
+                    return None
+                self._cv.wait(timeout=0.5)
+            return self._records.popleft()
+
+    # -- delivery --------------------------------------------------------- #
+
+    def _finish(self, task: Task, exit_code: int, result: Any = None,
+                exception: Optional[str] = None, n_live: int = 1,
+                pilot_lost: bool = False) -> None:
+        drop_member_call(task.uid)   # before the cancel skip: see finish()
+        if task.uid in self.canceled or task.uid in self._delivered:
+            return
+        self._delivered.add(task.uid)
+        now = time.time()
+        if exit_code == 1 and not pilot_lost:
+            self.stats["failed"] += 1
+        self.deliver(TaskCompletion(
+            uid=task.uid, exit_code=exit_code, result=result,
+            exception=exception, started_at=self.started, completed_at=now,
+            execution_seconds=(now - self.started) / max(1, n_live),
+            pilot_lost=pilot_lost))
+
+    # -- worker side ------------------------------------------------------ #
+
+    def dispatch(self) -> None:
+        """Resolve inputs, stack, and enqueue every link's device dispatch.
+
+        Never raises: a preparation/dispatch failure at link *k* streams a
+        ``degrade`` record so the drainer falls back for links *k..L-1*
+        after fanning out the links that did dispatch.
+        """
+        try:
+            self._dispatch_links()
+        except Exception:  # noqa: BLE001 - drainer owns the fallback
+            self._push(("degrade", self._fail_link,
+                        traceback.format_exc(limit=10)))
+        self._push(("end",))
+
+    def _dispatch_links(self) -> None:
+        if not self.links or not self.links[0]:
+            return
+        if self.cancel_event.is_set():
+            self._push(("canceled",))
+            return
+        # fault injection is a per-member, per-link contract: the first
+        # injected link fails the member there and poisons its downstream
+        for k, tasks in enumerate(self.links):
+            for m, t in enumerate(tasks):
+                if (self.fault_injector is not None and m not in self._injected
+                        and self.fault_injector(t)):
+                    self._injected[m] = k
+        if not self.compose and len(self.links) > 1:
+            # composition declined (fusion_min_chain at the RTS): run the
+            # links per-stage fused INSIDE the carrier — the carrier still
+            # owns the ordering, so link k+1 never races link k's routing
+            self._push(("degrade", 0, None))
+            return
+        self._fail_link = 0
+        entry_calls = [member_call(t) for t in self.links[0]]
+        fn, spec, static_kw, shared_kw, stacked, valid_lens, padded_b = \
+            _prepare(entry_calls)
+        self._plans[0] = _LinkPlan(self.links[0], fn, spec, static_kw,
+                                   shared_kw, stacked, valid_lens, None)
+        prev = self.links[0]
+        inherited = valid_lens
+        for j, tasks in enumerate(self.links[1:], start=1):
+            self._fail_link = j
+            calls, carry_name = _continuation_calls(tasks, prev)
+            fnj, specj, st_kw, sh_kw, stk, vl, _ = _prepare(
+                calls, pad_to=padded_b)
+            if vl is None:
+                # a padded axis rides the carry through the whole chain:
+                # downstream links inherit the entry's per-member lengths so
+                # their delivered values trim exactly like the scalar path's
+                vl = inherited
+            else:
+                inherited = vl
+            self._plans[j] = _LinkPlan(tasks, fnj, specj, st_kw, sh_kw, stk,
+                                       vl, carry_name)
+            prev = tasks
+        # dispatch: maximal runs of vmap-able links compose into ONE jitted
+        # program; a hand-written batched impl executes eagerly between
+        # segments (its jnp ops still enqueue asynchronously)
+        idx = 0
+        carry = None
+        while idx < len(self._plans):
+            self._fail_link = idx
+            plan = self._plans[idx]
+            if plan.spec.batched is not None:
+                kw = dict(plan.stacked)
+                if plan.carry_name is not None:
+                    kw[plan.carry_name] = carry
+                out = plan.spec.batched(**kw, **plan.static_kw,
+                                        **plan.shared_kw)
+                self.stats["dispatches"] += 1
+                self._push(("link", idx, out))
+                carry = out
+                idx += 1
+                continue
+            j = idx
+            while (j < len(self._plans)
+                   and self._plans[j].spec.batched is None):
+                j += 1
+            segment = self._plans[idx:j]
+            seg_fn = _composed_segment(segment)
+            outs = seg_fn([p.stacked for p in segment],
+                          [p.shared_kw for p in segment], carry)
+            self.stats["dispatches"] += 1
+            for off, out in enumerate(outs):
+                self._push(("link", idx + off, out))
+            carry = outs[-1]
+            idx = j
+
+    # -- drainer side ----------------------------------------------------- #
+
+    def drain(self, stop_event: Optional[threading.Event] = None
+              ) -> Dict[str, int]:
+        """Block through the link records in order, fanning out per-stage,
+        per-member completions; returns the accumulated statistics."""
+        n = len(self.links[0]) if self.links and self.links[0] else 0
+        ok = np.ones(n, bool)
+        fail_reason: Dict[int, str] = {}
+        # _fail_retryable: member col -> True when the failing link still
+        # has retry budget. Its downstream links then requeue through the
+        # pilot_lost channel (FAILED-without-budget-charge) instead of
+        # failing permanently, so the upstream retry re-runs the member's
+        # whole chain suffix — the outcome the per-stage gated path would
+        # have produced.
+        overrides: Dict[str, Any] = {}
+        fanned = 0
+        degraded = False
+        while True:
+            rec = self._pop(stop_event)
+            if rec is None:        # RTS stopping: abandon without fabricating
+                return self.stats
+            kind = rec[0]
+            if kind == "link":
+                _, k, out = rec
+                if degraded:
+                    continue       # already handled by the fallback
+                if not self._fan_link(k, out, ok, fail_reason, overrides):
+                    degraded = True
+                    fanned = len(self.links)
+                else:
+                    fanned = k + 1
+            elif kind == "degrade":
+                _, start, _exc = rec
+                if not degraded:
+                    start = max(start, fanned)
+                    self._degrade(start, ok, fail_reason, overrides)
+                    degraded = True
+                    fanned = len(self.links)
+            elif kind == "canceled":
+                for tasks in self.links:
+                    for t in tasks:
+                        self._finish(t, -2)
+                fanned = len(self.links)
+            elif kind == "end":
+                break
+        if fanned < len(self.links):
+            # the worker ended early without a degrade record (engine bug
+            # guard): fall back for whatever never dispatched
+            self._degrade(fanned, ok, fail_reason, overrides)
+        return self.stats
+
+    def _fan_link(self, k: int, out: Any, ok: np.ndarray,
+                  fail_reason: Dict[int, str],
+                  overrides: Dict[str, Any]) -> bool:
+        """Resolve link ``k``'s output and fan it out; False ⇒ resolving
+        failed (an async XLA error surfaced at transfer time) and the
+        remaining links were degraded."""
+        import jax
+
+        plan = self._plans[k]
+        tasks = self.links[k]
+        n = len(tasks)
+        try:
+            out = jax.block_until_ready(out)
+            fan = _FanOut(out, n, plan.spec.check_finite,
+                          plan.valid_lens if plan.spec.trim_outputs else None,
+                          treedef_key=(plan.fn, plan.statics_key))
+        except Exception:  # noqa: BLE001 - degrade this link and the rest
+            self._degrade(k, ok, fail_reason, overrides)
+            return False
+        if len(self.links) > 1:
+            self.stats["chain_links"] += 1
+        for i, task in enumerate(tasks):
+            if self.cancel_event.is_set():
+                self._finish(task, -2)
+                continue
+            if not ok[i]:
+                self._finish(task, 1, exception=fail_reason.get(
+                    i, "upstream chain member failed"), n_live=n,
+                    pilot_lost=self._fail_retryable.get(i, False))
+                continue
+            if self._injected.get(i) == k:
+                ok[i] = False
+                fail_reason[i] = (f"upstream chain member failed at link {k} "
+                                  f"(injected fault)")
+                self._fail_retryable[i] = task.retries < task.max_retries
+                self._finish(task, 1, exception="injected fault", n_live=n)
+                continue
+            if not fan.ok[i]:
+                ok[i] = False
+                fail_reason[i] = (f"upstream chain member failed at link {k} "
+                                  f"(non-finite output)")
+                self._fail_retryable[i] = task.retries < task.max_retries
+                self._finish(task, 1, exception=(
+                    "non-finite values in fused dispatch output "
+                    f"(member {task.name})"), n_live=n)
+                continue
+            value = fan.member(i)
+            overrides[task.name] = value
+            self._finish(task, 0, result=value, n_live=n)
+            self.stats["fused"] += 1
+        return True
+
+    def _degrade(self, start: int, ok: np.ndarray,
+                 fail_reason: Dict[int, str],
+                 overrides: Dict[str, Any]) -> None:
+        """Per-stage fused fallback for links ``start..L-1``, in link order,
+        resolving carried inputs from ``overrides`` (this carrier's own
+        fanned-out values) so the fallback can never race the store."""
+        for k in range(start, len(self.links)):
+            tasks = self.links[k]
+            n = len(tasks)
+            todo: List[Tuple[int, Task]] = []
+            for i, task in enumerate(tasks):
+                if self.cancel_event.is_set():
+                    self._finish(task, -2)
+                    continue
+                if not ok[i]:
+                    self._finish(task, 1, exception=fail_reason.get(
+                        i, "upstream chain member failed"), n_live=n,
+                        pilot_lost=self._fail_retryable.get(i, False))
+                    continue
+                if self._injected.get(i) == k:
+                    ok[i] = False
+                    fail_reason[i] = (f"upstream chain member failed at "
+                                      f"link {k} (injected fault)")
+                    self._fail_retryable[i] = \
+                        task.retries < task.max_retries
+                    self._finish(task, 1, exception="injected fault",
+                                 n_live=n)
+                    continue
+                todo.append((i, task))
+            if not todo:
+                continue
+            outcomes: Dict[str, TaskCompletion] = {}
+
+            def dl(c: TaskCompletion) -> None:
+                outcomes[c.uid] = c
+                if c.uid in self.canceled or c.uid in self._delivered:
+                    return
+                self._delivered.add(c.uid)
+                self.deliver(c)
+
+            sub = execute_fused(
+                [t for _, t in todo], self.devices, self.cancel_event, dl,
+                canceled=self.canceled, fault_injector=None,
+                overrides=overrides)
+            for key in ("fused", "scalar_fallback", "failed", "dispatches"):
+                self.stats[key] += sub.get(key, 0)
+            for i, task in todo:
+                c = outcomes.get(task.uid)
+                if c is not None and c.exit_code == 0:
+                    overrides[task.name] = c.result
+                elif c is None or c.exit_code != -2:
+                    ok[i] = False
+                    fail_reason[i] = (f"upstream chain member failed at "
+                                      f"link {k}")
+                    self._fail_retryable[i] = \
+                        task.retries < task.max_retries

@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, Optional, Sequence
 
 FUSION_ATTR = "__fusion__"
 GROUP_TAG = "_fusion_group"   # Task.tags key the Emgr / RTS read
+CHAIN_TAG = "_fusion_chain"   # Task.tags key marking one link of a chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,3 +131,46 @@ def fusion_group_key(fn: Callable[..., Any], kwargs: Dict[str, Any],
     digest = hashlib.sha1(statics.encode()).hexdigest()[:12]
     keys = ",".join(sorted(kwargs))
     return f"{name}|{keys}|s{slots}|b{backend}|{digest}"
+
+
+# --------------------------------------------------------------------------- #
+# Chain tags
+# --------------------------------------------------------------------------- #
+#
+# A *fusion chain* is a linear sequence of fusable ensemble stages with
+# elementwise data flow: stage k+1's member *i* consumes exactly member *i*'s
+# future from stage k, and the links agree on everything but the kernel
+# (same slots, same backend — "same group key modulo kernel"), so one
+# member-width device lease can run the whole chain. The compiler detects
+# chains (api/compiler._detect_chains) and stamps every member task with a
+# CHAIN_TAG dict; a chain-capable RTS re-assembles the links from the tags
+# and executes each micro-batch of members as one composed dispatch with the
+# intermediate buffers never touching the host.
+
+def chain_tag(chain_id: str, link: int, member: int, n_links: int,
+              carry: Optional[str] = None) -> Dict[str, Any]:
+    """The CHAIN_TAG value for one member task of one chain link.
+
+    ``c`` — chain id (unique per compile; NOT stable across sessions — the
+    tag is runtime routing, never resume keying); ``k`` — link index;
+    ``m`` — member index (aligns members across links); ``n`` — total links;
+    ``a`` — the kwarg name the carried value arrives under (links > 0).
+    Everything is JSON-scalar so the tag journals like any other tag.
+    """
+    tag: Dict[str, Any] = {"c": chain_id, "k": int(link), "m": int(member),
+                           "n": int(n_links)}
+    if carry is not None:
+        tag["a"] = carry
+    return tag
+
+
+def parse_chain_tag(tags: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """The validated CHAIN_TAG of a task, else None (malformed tags are
+    treated as absent — a half-formed tag must degrade to per-stage
+    fusion, never crash the packer)."""
+    tag = tags.get(CHAIN_TAG)
+    if (isinstance(tag, dict) and isinstance(tag.get("c"), str)
+            and all(isinstance(tag.get(f), int) for f in ("k", "m", "n"))
+            and 0 <= tag["k"] < tag["n"]):
+        return tag
+    return None

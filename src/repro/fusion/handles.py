@@ -51,25 +51,25 @@ class ArrayResult:
 
     @property
     def shape(self):
-        return getattr(self._value, "shape", ())
+        return getattr(self.value, "shape", ())
 
     @property
     def dtype(self):
-        return getattr(self._value, "dtype", None)
+        return getattr(self.value, "dtype", None)
 
     def __len__(self) -> int:
         return int(self.shape[0]) if self.shape else 0
 
     def __array__(self, dtype=None):
-        arr = np.asarray(self._value)
+        arr = np.asarray(self.value)
         return arr.astype(dtype) if dtype is not None else arr
 
     def __jax_array__(self):
         import jax.numpy as jnp
-        return jnp.asarray(self._value)
+        return jnp.asarray(self.value)
 
     def tolist(self):
-        return np.asarray(self._value).tolist()
+        return np.asarray(self.value).tolist()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<ArrayResult shape={tuple(self.shape)} dtype={self.dtype}>"
@@ -83,7 +83,7 @@ class ArrayResult:
         """
         if not spill_dir:
             return None
-        host = np.ascontiguousarray(np.asarray(self._value))
+        host = np.ascontiguousarray(np.asarray(self.value))
         digest = hashlib.sha256(host.tobytes()).hexdigest()
         os.makedirs(spill_dir, exist_ok=True)
         path = os.path.join(spill_dir, f"{digest[:32]}.npy")
@@ -97,6 +97,57 @@ class ArrayResult:
             os.replace(tmp, path)
         return {"__codec__": CODEC, "sha256": digest, "path": path,
                 "shape": list(host.shape), "dtype": str(host.dtype)}
+
+
+class LazySlice(ArrayResult):
+    """A member's row of a stacked fused output, sliced only when read.
+
+    At O(10³–10⁴) members, fan-out used to pay one device gather per member
+    per stage just to *deliver* the handle, whether or not anyone ever read
+    it. Inside a fused chain, intermediate link values are carried between
+    stages as the whole stacked array, so the per-member slice is usually
+    dead weight — this handle defers it until a consumer (the result store
+    reader, the journal spiller, a scalar downstream task) actually asks.
+    The parent array stays device-resident and alive for as long as any
+    member handle does, which is the same lifetime the eager slices had.
+    """
+
+    __slots__ = ("_parent", "_index", "_trim")
+
+    def __init__(self, parent: Any, index: int,
+                 trim: Optional[int] = None) -> None:
+        super().__init__(None)
+        self._parent = parent
+        self._index = index
+        self._trim = trim
+
+    @property
+    def value(self) -> Any:
+        if self._value is None:
+            piece = self._parent[self._index]
+            if self._trim is not None:
+                piece = piece[:self._trim]
+            self._value = piece
+            # drop the parent: a materialized slice must pin only its own
+            # row, exactly like the eager slices did — one retained member
+            # handle must not keep the whole stacked micro-batch alive
+            self._parent = None
+        return self._value
+
+    @property
+    def shape(self):
+        if self._value is not None:
+            return getattr(self._value, "shape", ())
+        shape = tuple(getattr(self._parent, "shape", ()))[1:]
+        if self._trim is not None and shape:
+            shape = (self._trim,) + shape[1:]
+        return shape
+
+    @property
+    def dtype(self):
+        if self._value is not None:
+            return getattr(self._value, "dtype", None)
+        return getattr(self._parent, "dtype", None)
 
 
 def _decode(record: Dict[str, Any]) -> ArrayResult:

@@ -33,6 +33,10 @@ DEFAULT_MIN_BATCH = 4
 #: Largest single fused dispatch (bounds padding memory / compiled shapes).
 DEFAULT_MAX_BATCH = 4096
 
+#: Below this many linked stages, chain fusion degrades to per-stage fusion
+#: (a 1-link "chain" is just a fused stage; composing buys nothing).
+DEFAULT_MIN_CHAIN = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class GroupPlan:
@@ -76,3 +80,25 @@ def plan_group(n_members: int, free_slots: Optional[int], member_slots: int,
     base, rem = divmod(n_members, lanes)
     batches = [base + (1 if i < rem else 0) for i in range(lanes)]
     return GroupPlan(batches=[b for b in batches if b], scalar=0)
+
+
+def plan_chain(n_members: int, free_slots: Optional[int], member_slots: int,
+               *, max_batch: int = DEFAULT_MAX_BATCH) -> List[int]:
+    """Micro-batch sizes for one chain cohort (members sharing an entry link).
+
+    Unlike :func:`plan_group` there is NO scalar fallback: chain members
+    must execute inside a carrier, because the carrier is what serializes
+    link k before link k+1 (a scalar remainder would race its own
+    downstream links through the store). A tiny cohort simply becomes a
+    tiny batched dispatch — ``vmap`` over 1 member is the scalar dispatch
+    with an extra axis, so the cost model loses nothing by always batching.
+    """
+    if n_members <= 0:
+        return []
+    lanes = 1
+    if free_slots is not None and member_slots > 0:
+        lanes = max(1, free_slots // member_slots)
+    lanes = min(lanes, n_members)
+    lanes = max(lanes, math.ceil(n_members / max(1, max_batch)))
+    base, rem = divmod(n_members, lanes)
+    return [base + (1 if i < rem else 0) for i in range(lanes) if base or i < rem]

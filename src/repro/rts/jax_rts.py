@@ -25,6 +25,22 @@ fans the result out as ordinary per-member completions — per-member DONE /
 FAILED journal records, retries and resume all behave exactly as if the
 members had run scalar.
 
+Chain fusion (PR 5): tasks additionally tagged ``_fusion_chain`` are links
+of a cross-stage elementwise chain. The packer re-assembles the links from
+the tags (``supports_chain_fusion``) and builds carriers spanning ALL of a
+member cohort's links, so one member-width lease runs the whole chain as
+composed dispatches with the intermediates never touching the host.
+Carrier execution is **asynchronous**: the worker thread stacks and
+enqueues the dispatches, then hands the carrier to a small pool of
+completion *drainer* threads; a drainer blocks on the device outputs, fans
+out the per-stage per-member completions in link order (ordering holds
+per carrier — carriers may complete in any relative order), and only then
+releases the device lease — so host-side stacking of micro-batch *n+1*
+overlaps device compute of micro-batch *n*. An awaited-but-undrained carrier still reports
+its member uids through :meth:`running_since` (straggler speculation keeps
+firing) and stays cancellable without leaking its lease (the drainer owns
+the unlease unconditionally).
+
 On this CPU container the inventory is logical (``slot_oversubscribe``
 logical slots share the physical CPU device) — the accounting, leasing and
 isolation logic is identical to the pod case; only the device objects differ.
@@ -34,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import queue
 import threading
 import time
 import traceback
@@ -41,20 +58,28 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 
 from ..core.pst import Task, resolve_executable
 from ..fusion import engine as fusion_engine
-from ..fusion.groups import GROUP_TAG, FusionSpec, fusion_spec
-from ..fusion.plans import DEFAULT_MAX_BATCH, plan_group
+from ..fusion.groups import GROUP_TAG, FusionSpec, fusion_spec, parse_chain_tag
+from ..fusion.plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_CHAIN, plan_chain,
+                            plan_group)
 from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
 
 
 class _FusedBatch:
-    """Carrier-side bookkeeping for one fused micro-batch."""
+    """Carrier-side bookkeeping for one fused micro-batch.
 
-    __slots__ = ("members", "pending")
+    ``links`` — one aligned task list per chain link (a plain fused group
+    is a 1-link chain); ``members`` — every member task across links;
+    ``pending`` — member uids still owing a completion.
+    """
 
-    def __init__(self, members: List[Task]) -> None:
-        self.members = members
-        self.pending: Set[str] = {m.uid for m in members}
+    __slots__ = ("links", "members", "pending", "compose")
+
+    def __init__(self, links: List[List[Task]], compose: bool = True) -> None:
+        self.links = links
+        self.members = [t for link in links for t in link]
+        self.pending: Set[str] = {m.uid for m in self.members}
+        self.compose = compose
 
 
 class JaxRTS(LocalRTS):
@@ -62,6 +87,7 @@ class JaxRTS(LocalRTS):
                  slot_oversubscribe: int = 1, fusion: bool = True,
                  fusion_min_batch: Optional[int] = None,
                  fusion_max_batch: int = DEFAULT_MAX_BATCH,
+                 fusion_min_chain: int = DEFAULT_MIN_CHAIN,
                  **kwargs: Any) -> None:
         super().__init__(**kwargs)
         if devices is None:
@@ -77,12 +103,27 @@ class JaxRTS(LocalRTS):
         self.fusion = fusion
         self.fusion_min_batch = fusion_min_batch
         self.fusion_max_batch = fusion_max_batch
+        self.fusion_min_chain = max(2, fusion_min_chain)
         self._fusion_lock = threading.Lock()
         self._fused: Dict[str, _FusedBatch] = {}      # carrier uid -> batch
         self._member_carrier: Dict[str, str] = {}     # member uid -> carrier
         self._fused_canceled: Set[str] = set()        # member uids
         self.fusion_stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
-                             "dispatches": 0}
+                             "dispatches": 0, "chain_links": 0,
+                             "chain_carriers": 0}
+        # -- async data plane -------------------------------------------------#
+        # dispatched-but-undrained carriers flow through this queue to a
+        # small pool of drainer threads, which own unlease + release: the
+        # carrier worker returns as soon as the dispatches are enqueued, so
+        # the next carrier's host-side stacking overlaps this one's device
+        # compute. A pool (not one thread) so a single hung dispatch
+        # head-of-line blocks at most one drainer — other carriers keep
+        # completing and straggler speculation stays scoped to the members
+        # actually stuck. Per-carrier link ordering is preserved (a carrier
+        # drains wholly inside one thread).
+        self._drain_q: "queue.Queue" = queue.Queue()
+        self._drainers: List[threading.Thread] = []
+        self._n_drainers = 2
 
     def start(self, resources: ResourceDescription) -> Pilot:
         n_logical = len(self._devices) * self._oversubscribe
@@ -99,10 +140,23 @@ class JaxRTS(LocalRTS):
             self._fused.clear()
             self._member_carrier.clear()
             self._fused_canceled.clear()
-        return super().start(resources)
+        self._drain_q = queue.Queue()
+        pilot = super().start(resources)
+        self._drainers = [
+            threading.Thread(target=self._drain_loop,
+                             name=f"rts-fusion-drainer-{i}", daemon=True)
+            for i in range(self._n_drainers)]
+        for t in self._drainers:
+            t.start()
+        return pilot
 
     def stop(self) -> None:
         super().stop()
+        for _ in self._drainers:
+            self._drain_q.put(None)
+        for t in self._drainers:
+            t.join(timeout=5.0)
+        self._drainers = []
         with self._fusion_lock:
             self._fused.clear()
             self._member_carrier.clear()
@@ -120,6 +174,14 @@ class JaxRTS(LocalRTS):
             return len(self._pool)
 
     def supports_fusion(self) -> bool:
+        return self.fusion
+
+    def supports_chain_fusion(self) -> bool:
+        """True when this RTS composes ``_fusion_chain``-tagged stages into
+        single multi-link dispatches. The WFProcessor only *superstages*
+        (hands a chain's downstream stages off together with the entry
+        stage) against an RTS that answers True — everywhere else, stage
+        ordering keeps gating submissions exactly as before."""
         return self.fusion
 
     # -- submission -----------------------------------------------------------#
@@ -148,10 +210,25 @@ class JaxRTS(LocalRTS):
     def _pack_fusible(self, tasks: List[Task]) -> List[Task]:
         """Group tagged tasks by fusion key; each group becomes carriers
         (micro-batched from the free-device count) plus a scalar remainder
-        when the cost model says a batch would be too small to pay off."""
+        when the cost model says a batch would be too small to pay off.
+        ``_fusion_chain``-tagged tasks are first re-assembled into chain
+        carriers spanning every link present in this submission."""
         groups: Dict[str, List[Task]] = {}
-        order: List[Any] = []   # tasks and group keys, submission order
+        chains: Dict[str, Dict[int, Dict[int, Task]]] = {}  # c->member->link
+        order: List[Any] = []   # tasks / group keys / chain ids, in order
         for task in tasks:
+            chain = parse_chain_tag(task.tags)
+            if chain is not None:
+                # ALWAYS routed through the assembler — even chains the
+                # min_chain policy declines to compose execute inside a
+                # carrier (per-stage, link-ordered): superstaged downstream
+                # links must never run as free-floating concurrent tasks
+                per_member = chains.get(chain["c"])
+                if per_member is None:
+                    chains[chain["c"]] = per_member = {}
+                    order.append(("chain", chain["c"]))
+                per_member.setdefault(chain["m"], {})[chain["k"]] = task
+                continue
             key = task.tags.get(GROUP_TAG)
             if key is None:
                 order.append(task)
@@ -161,29 +238,78 @@ class JaxRTS(LocalRTS):
                 groups[key] = bucket = []
                 order.append((GROUP_TAG, key))
             bucket.append(task)
-        if not groups:
+        if not groups and not chains:
             return tasks
         out: List[Task] = []
         for entry in order:
             if isinstance(entry, Task):
                 out.append(entry)
                 continue
-            members = groups[entry[1]]
-            spec = self._kernel_spec(members[0])
-            if spec is None:
-                out.extend(members)   # unmarked kernel: never fuse
+            if entry[0] == "chain":
+                self._assemble_chain(chains[entry[1]], out)
                 continue
-            min_batch = (spec.min_batch if spec.min_batch is not None
-                         else self.fusion_min_batch)
-            plan = plan_group(len(members), self.free_slots(),
-                              members[0].slots, min_batch=min_batch,
-                              max_batch=self.fusion_max_batch)
-            idx = 0
-            for size in plan.batches:
-                out.append(self._make_carrier(members[idx:idx + size]))
-                idx += size
-            out.extend(members[idx:])  # below-threshold remainder: scalar
+            self._pack_group(groups[entry[1]], out)
         return out
+
+    def _pack_group(self, members: List[Task], out: List[Task]) -> None:
+        spec = self._kernel_spec(members[0])
+        if spec is None:
+            out.extend(members)   # unmarked kernel: never fuse
+            return
+        min_batch = (spec.min_batch if spec.min_batch is not None
+                     else self.fusion_min_batch)
+        plan = plan_group(len(members), self.free_slots(),
+                          members[0].slots, min_batch=min_batch,
+                          max_batch=self.fusion_max_batch)
+        idx = 0
+        for size in plan.batches:
+            out.append(self._make_carrier([members[idx:idx + size]]))
+            idx += size
+        out.extend(members[idx:])  # below-threshold remainder: scalar
+
+    def _assemble_chain(self, per_member: Dict[int, Dict[int, Task]],
+                        out: List[Task]) -> None:
+        """Build chain carriers from the links present in this submission.
+
+        Members are grouped into *cohorts* by the link range they submit
+        (a fresh run submits every member at link 0; a resumed run submits
+        survivors at the first un-journaled link and failed members at
+        their failure link — different cohorts, each re-entering the chain
+        mid-way). A cohort's links must be a contiguous range — the
+        superstage hand-off and the Emgr's whole-chain drain guarantee it —
+        and each cohort is micro-batched like a fused group, except that
+        there is never a scalar remainder (the carrier is what orders link
+        k before link k+1; see :func:`repro.fusion.plans.plan_chain`).
+        Single-link cohorts fall back to plain per-stage fused groups.
+        """
+        cohorts: Dict[tuple, List[int]] = {}
+        for m in sorted(per_member):
+            links = tuple(sorted(per_member[m]))
+            contiguous = links == tuple(range(links[0], links[0] + len(links)))
+            cohorts.setdefault(links if contiguous else None, []).append(m)
+        for links, member_idxs in cohorts.items():
+            if links is None or len(links) < 2:
+                # single link (or a defensive non-contiguous surprise):
+                # per-stage fused groups, keyed by each task's own group tag
+                regroup: Dict[str, List[Task]] = {}
+                for m in member_idxs:
+                    for task in per_member[m].values():
+                        key = task.tags.get(GROUP_TAG) or "?"
+                        regroup.setdefault(key, []).append(task)
+                for members in regroup.values():
+                    self._pack_group(members, out)
+                continue
+            sizes = plan_chain(len(member_idxs), self.free_slots(),
+                               per_member[member_idxs[0]][links[0]].slots,
+                               max_batch=self.fusion_max_batch)
+            compose = len(links) >= self.fusion_min_chain
+            idx = 0
+            for size in sizes:
+                cohort = member_idxs[idx:idx + size]
+                link_lists = [[per_member[m][k] for m in cohort]
+                              for k in links]
+                out.append(self._make_carrier(link_lists, compose=compose))
+                idx += size
 
     @staticmethod
     def _kernel_spec(task: Task) -> Optional[FusionSpec]:
@@ -197,17 +323,24 @@ class JaxRTS(LocalRTS):
             return None
         return fusion_spec(fn)
 
-    def _make_carrier(self, members: List[Task]) -> Task:
-        hints = [m.duration_hint for m in members
+    def _make_carrier(self, links: List[List[Task]],
+                      compose: bool = True) -> Task:
+        batch = _FusedBatch(links, compose=compose)
+        hints = [m.duration_hint for m in batch.members
                  if m.duration_hint is not None]
+        n, width = len(links), len(links[0])
+        name = (f"fused[{width}]:{links[0][0].name}" if n == 1
+                else f"chain[{n}x{width}]:{links[0][0].name}")
         carrier = Task(
-            name=f"fused[{len(members)}]:{members[0].name}",
-            executable=f"fused://{len(members)}", slots=members[0].slots,
+            name=name, executable=f"fused://{n}x{width}",
+            slots=links[0][0].slots,
             duration_hint=max(hints) if hints else None)
         with self._fusion_lock:
-            self._fused[carrier.uid] = _FusedBatch(members)
-            for m in members:
+            self._fused[carrier.uid] = batch
+            for m in batch.members:
                 self._member_carrier[m.uid] = carrier.uid
+            if n > 1:
+                self.fusion_stats["chain_carriers"] += 1
         return carrier
 
     # -- cancellation / introspection over carriers ---------------------------#
@@ -315,60 +448,75 @@ class JaxRTS(LocalRTS):
 
     def _run_fused(self, carrier: Task, batch: _FusedBatch,
                    cancel_event: threading.Event) -> None:
-        """Carrier worker: lease devices all-or-nothing, run the batched
-        dispatch, fan completions out per member. No carrier-level fault
-        injection or staging — those are member semantics, and the engine
-        applies the injector per member."""
-        requeue = False
+        """Carrier worker: lease devices all-or-nothing, resolve + stack +
+        enqueue the batched dispatches, then hand the carrier to the
+        completion drainer and RETURN — the worker never parks in
+        ``block_until_ready``. The drainer owns fan-out, unlease and
+        release, so the lease's lifetime spans the whole chain while the
+        scheduler is already stacking the next carrier. No carrier-level
+        fault injection or staging — those are member semantics, and the
+        engine applies the injector per member."""
+        try:
+            devices = self._lease(carrier)
+        except RequeueTask:
+            self._release(carrier)
+            if not self._stop.is_set():
+                self._requeue(carrier)   # whole group, once, at the front
+            return
 
         def deliver(c: TaskCompletion) -> None:
             with self._fusion_lock:
                 batch.pending.discard(c.uid)
             self._deliver(c)
 
-        try:
-            self._lease(carrier)
+        exe = fusion_engine.ChainExecution(
+            batch.links, devices, cancel_event, deliver,
+            canceled=self._fused_canceled,
+            fault_injector=self.fault_injector, compose=batch.compose)
+        # registered BEFORE the dispatches run so the drainer can fan out
+        # early links of a chain while a later link is still dispatching
+        # (mid-chain journal records exist the moment a link resolves)
+        self._drain_q.put((carrier, batch, exe))
+        exe.dispatch()
+
+    def _drain_loop(self) -> None:
+        """One drainer of the pool: resolve a dispatched carrier's outputs,
+        fan out its completions (link order holds within the carrier;
+        carriers on different drainers complete independently), then (and
+        only then) return its devices — a canceled or crashed carrier can
+        never leak its lease, because this release is unconditional."""
+        while True:
+            item = self._drain_q.get()
+            if item is None:
+                return
+            carrier, batch, exe = item
             try:
-                stats = fusion_engine.execute_fused(
-                    batch.members, self._lease_devices(carrier),
-                    cancel_event, deliver,
-                    canceled=self._fused_canceled,
-                    fault_injector=self.fault_injector)
+                stats = exe.drain(stop_event=self._stop)
                 with self._fusion_lock:
                     for k, v in stats.items():
-                        self.fusion_stats[k] += v
+                        self.fusion_stats[k] = \
+                            self.fusion_stats.get(k, 0) + v
+            except Exception:  # noqa: BLE001 - engine failed outside guards
+                exc = traceback.format_exc(limit=10)
+                now = time.time()
+                with self._fusion_lock:
+                    undelivered = [m for m in batch.members
+                                   if m.uid in batch.pending
+                                   and m.uid not in self._fused_canceled]
+                for m in undelivered:
+                    with self._fusion_lock:
+                        batch.pending.discard(m.uid)
+                    self._deliver(TaskCompletion(
+                        uid=m.uid, exit_code=1, exception=exc,
+                        started_at=now, completed_at=now))
             finally:
                 self._unlease(carrier)
-        except RequeueTask:
-            requeue = True
-        except Exception:  # noqa: BLE001 - engine failed outside its guards
-            exc = traceback.format_exc(limit=10)
-            now = time.time()
-            with self._fusion_lock:
-                undelivered = [m for m in batch.members
-                               if m.uid in batch.pending
-                               and m.uid not in self._fused_canceled]
-            for m in undelivered:
-                deliver(TaskCompletion(
-                    uid=m.uid, exit_code=1, exception=exc,
-                    started_at=now, completed_at=now))
-        finally:
-            self._release(carrier)
-        if requeue:
-            if not self._stop.is_set():
-                self._requeue(carrier)   # whole group, once, at the front
-            return
-        with self._fusion_lock:
-            self._fused.pop(carrier.uid, None)
-            for m in batch.members:
-                self._member_carrier.pop(m.uid, None)
-                self._fused_canceled.discard(m.uid)
-
-    def _lease_devices(self, task: Task) -> List[Any]:
-        """The concrete device objects behind an already-held lease."""
-        with self._pool_lock:
-            ids = list(self._leases.get(task.uid, ()))
-        return [self._devices[i % len(self._devices)] for i in ids]
+                self._release(carrier)
+                with self._fusion_lock:
+                    self._fused.pop(carrier.uid, None)
+                    for m in batch.members:
+                        self._member_carrier.pop(m.uid, None)
+                        self._fused_canceled.discard(m.uid)
 
     def _execute(self, task: Task, cancel_event: threading.Event,
                  stall: float):

@@ -1,9 +1,12 @@
 """Resume/replay through the declarative API: a repeat_until ensemble killed
 mid-run resumes from the journal with task *results* intact and no
-re-execution of DONE tasks."""
+re-execution of DONE tasks; a fused chain killed mid-chain resumes from the
+last journaled link."""
 
 import threading
+import time
 
+import numpy as np
 import pytest
 
 from repro import api
@@ -11,7 +14,9 @@ from repro.core import AppManager
 from repro.core import states as st
 from repro.core.exceptions import EnTKError
 from repro.core.journal import Journal
+from repro.fusion import fusable
 from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
 
 # module-level so registration names are stable across the two "sessions"
 EXECUTIONS = []
@@ -115,6 +120,189 @@ def test_imperative_results_survive_resume_too(tmp_path):
     task = amgr.workflow[0].stages[0].tasks[0]
     assert task.result == {"payload": [1, 2, 3]}
     assert spec2.out.result() == {"payload": [1, 2, 3]}
+
+
+# --------------------------------------------------------------------------- #
+# Chain resume (chain fusion, PR 5)
+# --------------------------------------------------------------------------- #
+
+CL_CALLS = {0: 0, 1: 0, 2: 0, 3: 0}
+CHAIN_GATE = threading.Event()
+
+
+@fusable(static_argnames=("scale",))
+def cl0(x, scale=1.0):
+    CL_CALLS[0] += 1
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale + 1.0
+
+
+@fusable(static_argnames=("scale",))
+def cl1(x, scale=1.0):
+    CL_CALLS[1] += 1
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale + 2.0
+
+
+def _cl2_batched(x, scale=1.0):
+    # hand-batched: executes eagerly at dispatch time, so session 1 blocks
+    # HERE — after links 0-1 already streamed to the drainer and journaled
+    CL_CALLS[2] += 1
+    CHAIN_GATE.wait(30)
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale + 3.0
+
+
+@fusable(static_argnames=("scale",), batched=_cl2_batched)
+def cl2(x, scale=1.0):
+    CL_CALLS[2] += 1
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale + 3.0
+
+
+@fusable(static_argnames=("scale",))
+def cl3(x, scale=1.0):
+    CL_CALLS[3] += 1
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale + 4.0
+
+
+def _chain_workflow():
+    e = api.ensemble(cl0, over=[{"x": float(i)} for i in range(4)],
+                     name="l0")
+    e = e.then(cl1, name="l1")
+    e = e.then(cl2, name="l2")
+    return e.then(cl3, name="l3")
+
+
+def test_chain_resume_reenters_mid_chain_from_last_journaled_link(tmp_path):
+    """Kill a 4-link chain after link 2 of 4 journals DONE: resume must
+    re-dispatch only links 3-4 (as a chain re-entering mid-way), with zero
+    re-execution of journaled work."""
+    jp = str(tmp_path / "chain-resume.jsonl")
+
+    # ---- session 1: link 3's dispatch blocks; the run is killed by timeout.
+    # slot_oversubscribe=1 -> one carrier, so every member's links 1-2 fan
+    # out (and journal) before the blocked link wedges the chain.
+    CHAIN_GATE.clear()
+    for k in CL_CALLS:
+        CL_CALLS[k] = 0
+    with pytest.raises(EnTKError, match="timed out"):
+        api.run(_chain_workflow(), resources=ResourceDescription(slots=1),
+                rts_factory=lambda: JaxRTS(devices=["d0"],
+                                           slot_oversubscribe=1),
+                name="cwf", journal_path=jp, timeout=3.0)
+    replay = Journal.replay(jp)
+    for i in range(4):
+        assert replay["state"][("task", f"l0-{i}")] == st.DONE
+        assert replay["state"][("task", f"l1-{i}")] == st.DONE
+        assert replay["results"][f"l1-{i}"] == float(i) + 3.0
+        assert replay["state"].get(("task", f"l2-{i}")) != st.DONE
+        assert replay["state"].get(("task", f"l3-{i}")) != st.DONE
+
+    # let the abandoned session-1 worker drain out before counting, and
+    # clear the engine's process-global jit cache — a real resume is a
+    # fresh process, and a trace the ghost worker left behind would let
+    # session 2 run cl3 without ever calling its (counted) Python body
+    CHAIN_GATE.set()
+    time.sleep(0.5)
+    from repro.fusion import engine as fengine
+    with fengine._jit_lock:
+        fengine._jit_cache.clear()
+    for k in CL_CALLS:
+        CL_CALLS[k] = 0
+
+    # ---- session 2: resume; only links 3-4 may execute, re-entering the
+    # chain mid-way (their entry inputs come from the journaled results)
+    holder = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(devices=["d0"], slot_oversubscribe=1)
+        return holder["rts"]
+
+    chain2 = _chain_workflow()
+    res = api.run(chain2, resources=ResourceDescription(slots=1),
+                  rts_factory=factory, name="cwf", journal_path=jp,
+                  resume=True, timeout=60)
+    assert res.all_done
+    assert CL_CALLS[0] == 0 and CL_CALLS[1] == 0   # zero re-execution
+    assert CL_CALLS[2] >= 1 and CL_CALLS[3] >= 1
+    # the surviving links executed as a chain carrier, not loose stages
+    assert holder["rts"].fusion_stats["chain_carriers"] >= 1
+    for i, s in enumerate(chain2.specs):
+        assert float(np.asarray(s.out.result())) == float(i) + 10.0
+    res.close()
+
+
+CP_CALLS = {0: 0, 1: 0, 2: 0, 3: 0}
+
+
+def _cp(level, bump):
+    @fusable(static_argnames=("scale",))
+    def kernel(x, poison=0.0, scale=1.0):
+        CP_CALLS[level] += 1
+        import jax.numpy as jnp
+        return jnp.asarray(x, jnp.float32) * scale + bump + poison
+    kernel.__name__ = kernel.__qualname__ = f"cp{level}"
+    return kernel
+
+
+cp0, cp1, cp2, cp3 = (_cp(i, float(i + 1)) for i in range(4))
+
+
+def _poison_chain(poisoned):
+    e = api.ensemble(
+        cp0, over=[{"x": float(i)} for i in range(6)], name="p0")
+    e = e.then(cp1, over=[
+        {"poison": float("nan") if i in poisoned else 0.0}
+        for i in range(6)], name="p1")
+    e = e.then(cp2, name="p2")
+    return e.then(cp3, name="p3")
+
+
+def test_chain_resume_redispatches_only_failed_members_links(tmp_path):
+    """A member that blew up at link 2 of the chain fails its downstream
+    links too; resume re-dispatches exactly that member's links 2-4 (a
+    one-member cohort re-entering the chain at its failure link) and
+    nothing else."""
+    jp = str(tmp_path / "chain-poison.jsonl")
+
+    # run 1: member 2 goes non-finite at link 2 (index 1)
+    res = api.run(_poison_chain({2}),
+                  resources=ResourceDescription(slots=4),
+                  rts_factory=lambda: JaxRTS(devices=["d0"],
+                                             slot_oversubscribe=4),
+                  name="pwf", journal_path=jp, timeout=60)
+    states = res.task_states
+    assert states["p0-2"] == st.DONE
+    assert states["p1-2"] == st.FAILED
+    assert states["p2-2"] == st.FAILED and states["p3-2"] == st.FAILED
+    assert sum(v == st.DONE for v in states.values()) == 21  # 24 - 3
+    res.close()
+
+    # run 2 (resume, poison fixed): exactly the failed member's links 2-4
+    # execute; every journaled DONE member restores without re-running
+    for k in CP_CALLS:
+        CP_CALLS[k] = 0
+    holder = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(devices=["d0"], slot_oversubscribe=4)
+        return holder["rts"]
+
+    chain2 = _poison_chain(set())
+    res2 = api.run(chain2, resources=ResourceDescription(slots=4),
+                   rts_factory=factory, name="pwf", journal_path=jp,
+                   resume=True, timeout=60)
+    assert res2.all_done
+    assert CP_CALLS[0] == 0                  # link 1 untouched
+    assert all(CP_CALLS[k] >= 1 for k in (1, 2, 3))
+    stats = holder["rts"].fusion_stats
+    # exactly three member-links executed (member 2 at links 2-4)
+    assert stats["fused"] + stats["scalar_fallback"] == 3
+    for i, s in enumerate(chain2.specs):
+        assert float(np.asarray(s.out.result())) == float(i) + 10.0
+    res2.close()
 
 
 def test_non_serializable_result_reruns_producer_on_resume(tmp_path):

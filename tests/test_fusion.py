@@ -546,6 +546,315 @@ def test_array_result_without_spill_dir_is_omitted():
 
 
 # --------------------------------------------------------------------------- #
+# Chain fusion: detection, whole-chain hand-off, composed execution
+# --------------------------------------------------------------------------- #
+
+CHAIN_TAG = "_fusion_chain"
+
+
+def _two_link(fuse=True, n=4):
+    e0 = api.ensemble(k_square,
+                      over=[{"x": float(i), "scale": 2.0} for i in range(n)],
+                      name="d0", fuse=fuse)
+    return e0.then(k_square, name="d1", fuse=fuse)
+
+
+def test_chain_detection_tags_and_opt_outs():
+    compiled = api.compile(_two_link(), name="wf-ct")
+    tags = {t.name: t.tags.get(CHAIN_TAG)
+            for p in compiled for s in p.stages for t in s.tasks}
+    cids = set()
+    for i in range(4):
+        t0, t1 = tags[f"d0-{i}"], tags[f"d1-{i}"]
+        assert t0 == {"c": t0["c"], "k": 0, "m": i, "n": 2}
+        assert t1 == {"c": t0["c"], "k": 1, "m": i, "n": 2, "a": "x"}
+        cids.add(t0["c"])
+    assert len(cids) == 1
+
+    # chain=False / min_chain opt-outs, and fuse=False (no groups, no chain)
+    for kwargs, builder in (
+            ({"chain": False}, lambda: _two_link()),
+            ({"min_chain": 3}, lambda: _two_link()),
+            ({}, lambda: _two_link(fuse=False))):
+        compiled = api.compile(builder(), name=f"wf-ct-off-{kwargs}",
+                               **kwargs)
+        assert all(t.tags.get(CHAIN_TAG) is None
+                   for p in compiled for s in p.stages for t in s.tasks)
+
+
+def test_chain_detection_rejects_non_elementwise_shapes():
+    # a member consuming TWO futures is not an elementwise link
+    e0 = api.ensemble(k_square, over=[{"x": float(i)} for i in range(4)],
+                      name="nc0")
+    mixed = api.ensemble(
+        k_square, over=[{"x": [e0.specs[i].out, e0.specs[(i + 1) % 4].out]}
+                        for i in range(4)], name="nc1")
+    compiled = api.compile(mixed, name="wf-ncx")
+    assert all(t.tags.get(CHAIN_TAG) is None
+               for p in compiled for s in p.stages for t in s.tasks)
+    # permuted member alignment breaks the chain too
+    e2 = api.ensemble(k_square, over=[{"x": float(i)} for i in range(4)],
+                      name="nc2")
+    rot = api.ensemble(
+        k_square, over=[{"x": e2.specs[(i + 1) % 4].out} for i in range(4)],
+        name="nc3")
+    compiled = api.compile(rot, name="wf-ncr")
+    assert all(t.tags.get(CHAIN_TAG) is None
+               for p in compiled for s in p.stages for t in s.tasks)
+
+
+def test_emgr_holds_incomplete_chain_then_drains_whole_on_one_charge():
+    def link(k, m, n=3):
+        # "ss" = superstage extent: the WFProcessor stamps it when it
+        # co-publishes the chain's stages; only stamped links are held
+        return Task(name=f"c{k}m{m}", executable="sleep://0",
+                    tags={"_fusion_group": f"G{k}",
+                          CHAIN_TAG: {"c": "C", "k": k, "m": m, "n": n,
+                                      "ss": n - 1}})
+
+    partial = [link(k, m) for k in range(2) for m in range(4)]
+    emgr = _emgr_with_backlog(partial)
+    emgr._has_chain_backlog = True
+    # links 0-1 present, terminal link 2 still in the queue: hold everything
+    assert emgr._pick_batch_locked(free=4, fusion=True) == []
+    assert emgr.n_backlogged() == 8
+    # the terminal arrives: the WHOLE chain drains on a single slot charge
+    import collections
+    for m in range(4):
+        t = link(2, m)
+        emgr._backlog.setdefault(t.slots, collections.deque()).append(
+            (next(emgr._backlog_seq), t))
+        emgr._backlog_uids.add(t.uid)
+    batch = emgr._pick_batch_locked(free=1, fusion=True)
+    assert len(batch) == 12 and emgr.n_backlogged() == 0
+
+
+def test_chain_fused_run_matches_scalar_values_and_states():
+    def run(fuse, chain):
+        e0 = api.ensemble(k_square,
+                          over=[{"x": float(i), "scale": 2.0}
+                                for i in range(12)], name="ch0", fuse=fuse)
+        e1 = e0.then(k_square, name="ch1", fuse=fuse)
+        e2 = e1.then(k_square, name="ch2", fuse=fuse)
+        # float64 reduction: the scalar path stores fp32 device scalars,
+        # the fused fan-out delivers host floats — both exact images of
+        # the same fp32 values, but a naive fp32 np.sum would round them
+        # differently at this magnitude
+        total = api.gather(e2, lambda vals: float(
+            sum(float(np.asarray(v)) for v in vals)), name="chtot")
+        holder = {}
+
+        def factory():
+            holder["rts"] = JaxRTS(devices=["d0"], slot_oversubscribe=4)
+            return holder["rts"]
+
+        res = api.run(total, resources=ResourceDescription(slots=4),
+                      rts_factory=factory, chain=chain, timeout=60)
+        states = dict(res.task_states)
+        vals = [float(np.asarray(s.out.result())) for s in e2.specs]
+        stats = dict(holder["rts"].fusion_stats)
+        out = (states, vals, total.out.result(), stats)
+        res.close()
+        return out
+
+    s_states, s_vals, s_total, _ = run(fuse=False, chain=False)
+    c_states, c_vals, c_total, c_stats = run(fuse=True, chain=True)
+    assert s_states == c_states
+    assert all(v == st.DONE for v in c_states.values())
+    assert s_vals == c_vals          # bit-identical member results
+    assert s_total == c_total
+    # and the run really used the chain data plane, not per-stage fusion
+    assert c_stats["chain_carriers"] > 0
+    assert c_stats["chain_links"] > 0
+
+
+def test_chain_nonfinite_fails_member_and_downstream_links():
+    e0 = api.ensemble(k_vector,
+                      over=[{"x": float(i), "scale": 1.0,
+                             "poison": float("nan") if i == 2 else 0.0}
+                            for i in range(6)], name="pz0")
+    e1 = e0.then(k_square, name="pz1", arg="x")
+    res = api.run(e1, resources=ResourceDescription(slots=4),
+                  rts_factory=lambda: JaxRTS(devices=["d0"],
+                                             slot_oversubscribe=4),
+                  timeout=60)
+    states = res.task_states
+    assert states["pz0-2"] == st.FAILED
+    assert states["pz1-2"] == st.FAILED   # downstream of the poisoned link
+    done = [n for n, v in states.items() if v == st.DONE]
+    assert len(done) == 10                # every other member, both links
+    for p in res.amgr.workflow:
+        for s in p.stages:
+            for t in s.tasks:
+                if t.name == "pz1-2":
+                    assert "upstream chain member failed" in t.exception
+    res.close()
+
+
+def test_chain_exception_degrades_to_per_stage_then_scalar():
+    # k_touchy raises under vmap (the composed trace dies), and scalar for
+    # x >= 100: the chain must degrade per-stage, then per-member, so only
+    # the culpable member (and its downstream link) fails
+    e0 = api.ensemble(k_square,
+                      over=[{"x": x, "scale": 1.0}
+                            for x in (1.0, 10.0, 2.0, 3.0)], name="tc0")
+    e1 = e0.then(k_touchy, name="tc1", arg="x")
+    e2 = e1.then(k_square, name="tc2", arg="x")
+    holder = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(devices=["d0"], slot_oversubscribe=4)
+        return holder["rts"]
+
+    res = api.run(e2, resources=ResourceDescription(slots=4),
+                  rts_factory=factory, timeout=60)
+    states = res.task_states
+    # member 1: 10^2 = 100 -> k_touchy raises scalar too -> FAILED there,
+    # and its tc2 link fails downstream; everyone else completes
+    assert states["tc1-1"] == st.FAILED and states["tc2-1"] == st.FAILED
+    assert sum(v == st.DONE for v in states.values()) == 10
+    assert holder["rts"].fusion_stats["scalar_fallback"] >= 1
+    for i, x in enumerate((1.0, 10.0, 2.0, 3.0)):
+        if i == 1:
+            continue
+        got = float(np.asarray(
+            [s for p in res.amgr.workflow for st_ in p.stages
+             for s in st_.tasks if s.name == f"tc2-{i}"][0].result))
+        assert got == (x * x + 1.0) ** 2
+    res.close()
+
+
+def test_chain_fail_stage_finalizes_once_and_never_hangs():
+    """on_task_failure='fail_stage' + superstage: the downstream link
+    stage is already in flight when the entry stage's failure finalizes
+    the pipeline — its later closure must not re-finalize (the state
+    machine forbids FAILED->FAILED; pre-fix this killed the Dequeue
+    thread and hung the run until timeout)."""
+    e0 = api.ensemble(k_vector,
+                      over=[{"x": float(i), "scale": 1.0,
+                             "poison": float("nan") if i == 1 else 0.0}
+                            for i in range(4)], name="fs0")
+    e1 = e0.then(k_square, name="fs1")
+    compiled = api.compile(e1, name="wf-fs")
+    amgr = AppManager(resources=ResourceDescription(slots=4),
+                      rts_factory=lambda: JaxRTS(devices=["d0"],
+                                                 slot_oversubscribe=4),
+                      on_task_failure="fail_stage")
+    amgr.workflow = compiled
+    amgr.run(timeout=30)          # a hang would raise the timeout error
+    assert amgr.wfp.component_errors == []
+    states = {t.name: t.state for p in amgr.workflow
+              for s in p.stages for t in s.tasks}
+    assert states["fs0-1"] == st.FAILED
+    assert states["fs0-0"] == st.DONE and states["fs1-0"] == st.DONE
+    compiled.close()
+
+
+def test_chain_upstream_retry_revives_downstream_links():
+    """A transient upstream failure with retry budget must not permanently
+    fail its downstream chain links: they requeue through the pilot_lost
+    channel (no budget charge) and re-run with the upstream retry — the
+    outcome the per-stage gated path produces."""
+    attempts = {"n": 0}
+
+    def injector(task):
+        if task.name == "rt0-2":
+            attempts["n"] += 1
+            return attempts["n"] == 1   # first attempt only
+        return False
+
+    e0 = api.ensemble(k_square,
+                      over=[{"x": float(i), "scale": 1.0} for i in range(6)],
+                      name="rt0", max_retries=1)
+    e1 = e0.then(k_square, name="rt1")   # downstream budget: zero retries
+    res = api.run(e1, resources=ResourceDescription(slots=4),
+                  rts_factory=lambda: JaxRTS(devices=["d0"],
+                                             slot_oversubscribe=4,
+                                             fault_injector=injector),
+                  timeout=60)
+    assert attempts["n"] == 2            # exactly one retry
+    assert all(v == st.DONE for v in res.task_states.values())
+    for i, s in enumerate(e1.specs):
+        assert float(np.asarray(s.out.result())) == float(i) ** 4
+    res.close()
+
+
+def test_running_since_and_cancel_for_undrained_async_carrier():
+    """Satellite: an awaited-but-undrained dispatch must surface its member
+    uids (straggler speculation keys on them) and stay cancellable without
+    leaking its device lease."""
+    rts = JaxRTS(devices=["d0"], slot_oversubscribe=2, fusion_min_batch=2)
+    rts.start(ResourceDescription(slots=2))
+    unplug = threading.Event()
+
+    class _Plug:
+        def drain(self, stop_event=None):
+            unplug.wait(10)
+            return {}
+
+    try:
+        # wedge EVERY drainer behind a plug so the real carrier stays
+        # dispatched-but-undrained (the plugs are never leased, so their
+        # release only touches thread-pool accounting of this throwaway RTS)
+        for i in range(rts._n_drainers):
+            plug_carrier = Task(name=f"plug{i}", executable="plug://")
+            rts._drain_q.put((plug_carrier,
+                              type("B", (), {"members": []})(), _Plug()))
+        members = [Task(name=f"ac{i}", executable=k_square,
+                        kwargs={"x": float(i), "scale": 1.0},
+                        tags={"_fusion_group": "AC"}) for i in range(3)]
+        rts.submit(members)
+        uids = {m.uid for m in members}
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            running = rts.running_since()
+            if uids <= set(running):
+                break
+            time.sleep(0.01)
+        # undrained carrier: every member uid visible with an elapsed time
+        assert uids <= set(rts.running_since())
+        assert uids <= set(rts.in_flight())
+        # cancel while undrained: bookkeeping must drain clean afterwards
+        rts.cancel(list(uids))
+        unplug.set()
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            with rts._pool_lock:
+                leaked = bool(rts._leases)
+            with rts._fusion_lock:
+                tracked = bool(rts._fused)
+            if not leaked and not tracked and rts.free_slots() == 2:
+                break
+            time.sleep(0.01)
+        with rts._pool_lock:
+            assert not rts._leases          # no leaked device lease
+        assert rts.free_slots() == 2
+        with rts._fusion_lock:
+            assert not rts._fused and not rts._member_carrier
+    finally:
+        unplug.set()
+        rts.stop()
+
+
+def test_member_call_cache_unwraps_and_invalidates_on_delivery():
+    """Satellite: the kwarg resolve+unwrap is cached per task and dropped
+    when the member's completion is delivered (retries re-resolve)."""
+    arr = ArrayResult(np.ones(3, np.float32))
+    t = Task(name="mc", executable=k_square, kwargs={"x": arr, "scale": 1.0})
+    call = fengine.member_call(t)
+    assert isinstance(call[2]["x"], np.ndarray)    # handle unwrapped
+    assert fengine.member_call(t) is call          # cached
+    fengine.drop_member_call(t.uid)
+    assert fengine.member_call(t) is not call      # invalidated
+    # delivery drops the cache entry (a retry must re-resolve its inputs)
+    done, deliver = _collect()
+    fengine.execute_fused([t], ["d0"], threading.Event(), deliver)
+    assert done[0].exit_code == 0
+    with fengine._call_lock:
+        assert t.uid not in fengine._call_cache
+
+
+# --------------------------------------------------------------------------- #
 # Pallas AnEn distance kernel
 # --------------------------------------------------------------------------- #
 
