@@ -17,10 +17,19 @@ Two gates share this entry point, selected with ``--bench``:
   fusion: chain-fused throughput may not regress more than ``--factor``
   versus the PR-5 baseline AND the within-run chain/per-stage speedup
   must stay above ``--min-speedup``.
+* ``shard`` — whole-mesh SPMD dispatch must keep up with per-device
+  fused dispatch on multi-device hosts: sharded throughput may not
+  regress more than ``--factor`` versus the PR-6 baseline AND the
+  within-run sharded/fused speedup must stay above ``--min-speedup``
+  (CI passes 1.0: sharded >= fused). On a single-device runner the mesh
+  planner never fires, so the gate auto-skips with an explicit log line
+  instead of failing on a meaningless comparison.
 
     python -m benchmarks.check_regression current.json baseline.json
     python -m benchmarks.check_regression cur.json base.json --bench fusion
     python -m benchmarks.check_regression cur.json base.json --bench chain
+    python -m benchmarks.check_regression cur.json base.json --bench shard \
+        --min-speedup 1.0
 
 Exit 0 = within budget; exit 1 = regression (or unusable inputs).
 """
@@ -136,11 +145,32 @@ def check_chain(args) -> int:
                             speedup_label="chain/per-stage")
 
 
+def check_shard(args) -> int:
+    cur = _rows(args.current, "shard_", "n_members")
+    if not cur:
+        print(f"[check] no shard rows in {args.current}")
+        return 1
+    n_devices = int(cur[max(cur)].get("n_devices", 1) or 1)
+    if n_devices < 2:
+        # the mesh planner requires >= 2 devices; on a single-device
+        # runner sharded == fused by construction and the gate would
+        # measure only noise — skip loudly, never silently
+        print(f"[check] shard: single-device runner "
+              f"(n_devices={n_devices}) — skipping gate")
+        return 0
+    return _check_dataplane(args, bench="shard",
+                            rate_field="shard_tasks_per_s",
+                            speedup_field="speedup_vs_fused",
+                            rate_label="sharded",
+                            speedup_label="sharded/fused")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="bench JSON from this run")
     ap.add_argument("baseline", help="checked-in baseline JSON")
-    ap.add_argument("--bench", choices=("sched", "fusion", "chain"),
+    ap.add_argument("--bench", choices=("sched", "fusion", "chain",
+                                        "shard"),
                     default="sched")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed regression ratio vs the baseline")
@@ -150,6 +180,8 @@ def main() -> int:
     args = ap.parse_args()
     if args.bench == "sched":
         return check_sched(args)
+    if args.bench == "shard":
+        return check_shard(args)
     return check_fusion(args) if args.bench == "fusion" else check_chain(args)
 
 

@@ -190,6 +190,33 @@ def chain_throughput(quick: bool) -> None:
         raise RuntimeError(f"chain drift/incomplete at sizes: {bad}")
 
 
+def shard_throughput(quick: bool) -> None:
+    from benchmarks import shard
+    rows = shard.run(quick)
+    for r in rows:
+        derived = dict(
+            n_members=r["n_members"],
+            n_devices=r["n_devices"],
+            fused_tasks_per_s=round(r["fused_tasks_per_s"], 1),
+            shard_tasks_per_s=round(r["shard_tasks_per_s"], 1),
+            speedup_vs_fused=round(r["speedup_vs_fused"], 2),
+            fused_dispatches=r["fused_dispatches"],
+            shard_dispatches=r["shard_dispatches"],
+            shard_carriers=r["shard_carriers"],
+            max_drift=r["max_drift"],
+            all_done=r["all_done"])
+        if "scalar_tasks_per_s" in r:
+            derived["scalar_tasks_per_s"] = round(r["scalar_tasks_per_s"], 1)
+        _row(f"shard_{r['n_members']}",
+             1e6 / max(1e-9, r["shard_tasks_per_s"]), **derived)
+    # the sharded path must produce the member kernel's values — a drifting
+    # or incomplete run fails the bench (and the CI smoke job) outright
+    bad = [r["n_members"] for r in rows
+           if not r["all_done"] or r["max_drift"] > 1e-4]
+    if bad:
+        raise RuntimeError(f"shard drift/incomplete at sizes: {bad}")
+
+
 def fed_throughput(quick: bool) -> None:
     from benchmarks import federation
     rows = federation.run(quick)
@@ -250,6 +277,7 @@ BENCHES = {
     "fed": fed_throughput,
     "fusion": fusion_throughput,
     "chain": chain_throughput,
+    "shard": shard_throughput,
     "roofline": roofline_table,
 }
 
@@ -262,7 +290,7 @@ TRAJECTORY = "BENCH_fusion.json"
 def _append_trajectory(picks: "list[str]", quick: bool) -> None:
     import os
     rows = [r for r in _ROWS
-            if r["name"].startswith(("fusion_", "chain_"))
+            if r["name"].startswith(("fusion_", "chain_", "shard_"))
             and not r["name"].endswith("_ERROR")]
     if not rows:
         return

@@ -1,0 +1,130 @@
+"""Shard benchmark: per-device fused vs whole-mesh SPMD sharded dispatch.
+
+The scenario the SPMD data plane exists for: an ensemble wide enough that
+even fused micro-batches leave the mesh idle — one device crunches a batch
+while the others wait for the scheduler to hand them theirs. The *fused*
+path runs the declarative description with sharding off
+(``JaxRTS(shard=False)``): per-device micro-batches, one dispatch each —
+the PR-4 engine. The *sharded* path runs the identical description with
+sharding on: the planner picks a mesh shape, the RTS takes one
+whole-mesh lease and each carrier executes ONE ``shard_map`` program that
+spans every device. Both paths run the same AppManager, scheduler core and
+JaxRTS on the same host, so the ratio isolates exactly what mesh sharding
+buys. The *scalar* path (member-per-task) is timed at the smallest size
+only — it is minutes-per-10k and its role here is the value reference,
+which we get more cheaply from the kernel itself.
+
+Values are gated at EVERY size: members reuse a small set of distinct
+parameters, the reference is the member kernel evaluated directly on the
+distinct set, and a deterministic sample of members (all of them up to
+10k) is compared at <= 1e-4 relative drift. A drifting or incomplete run
+raises — the speedup is never bought with semantic drift.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import api
+from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+
+from benchmarks.fusion import bench_member
+
+#: members reuse this many distinct parameter values so the value gate can
+#: hold a dense reference even at 10^6 members
+_DISTINCT = 1024
+
+#: value-gate sample cap per run (members checked = min(n, this))
+_SAMPLE = 4096
+
+
+def _member_x(i: int) -> float:
+    return (i % _DISTINCT) / _DISTINCT
+
+
+def _reference() -> np.ndarray:
+    """The member kernel evaluated directly on the distinct parameter set —
+    the drift gate's ground truth (identical code path to the scalar
+    member, minus the toolkit)."""
+    return np.asarray([float(np.asarray(bench_member(_member_x(i))))
+                       for i in range(_DISTINCT)])
+
+
+def _run_once(n_members: int, slots: int, *, fuse: bool, shard: bool,
+              sample: int, timeout: float) -> Dict:
+    ens = api.ensemble(
+        bench_member,
+        over=[{"x": _member_x(i)} for i in range(n_members)],
+        name="shardbench", fuse=fuse)
+    holder: Dict = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(slot_oversubscribe=slots, shard=shard)
+        return holder["rts"]
+
+    t0 = time.time()
+    result = api.run(ens, resources=ResourceDescription(slots=slots),
+                     rts_factory=factory, shard=shard, timeout=timeout)
+    elapsed = time.time() - t0
+    idx = (range(n_members) if n_members <= sample
+           else range(0, n_members, max(1, n_members // sample)))
+    values = {i: float(np.asarray(ens.specs[i].out.result())) for i in idx}
+    stats = dict(holder["rts"].fusion_stats)
+    all_done = result.all_done
+    result.close()
+    return {"elapsed_s": elapsed, "values": values, "stats": stats,
+            "all_done": all_done}
+
+
+def _gate(values: Dict[int, float], ref: np.ndarray) -> float:
+    worst = 0.0
+    for i, v in values.items():
+        r = ref[i % _DISTINCT]
+        worst = max(worst, abs(v - r) / max(1e-9, abs(r)))
+    return worst
+
+
+def run(quick: bool = False, slots: int = 16,
+        sizes: "tuple[int, ...]" = ()) -> List[Dict]:
+    import jax
+    n_devices = len(jax.devices())
+    if not sizes:
+        sizes = (10_000,) if quick else (10_000, 100_000, 1_000_000)
+    bench_member(0.5)          # warm jax's global first-dispatch setup
+    ref = _reference()
+    rows = []
+    for n in sizes:
+        timeout = max(600.0, n * 0.05)
+        scalar_rate = None
+        if n <= 10_000:
+            scalar = _run_once(n, slots, fuse=False, shard=False,
+                               sample=_SAMPLE, timeout=timeout)
+            scalar_rate = n / scalar["elapsed_s"]
+        fused = _run_once(n, slots, fuse=True, shard=False,
+                          sample=_SAMPLE, timeout=timeout)
+        sharded = _run_once(n, slots, fuse=True, shard=True,
+                            sample=_SAMPLE, timeout=timeout)
+        drift = max(_gate(fused["values"], ref),
+                    _gate(sharded["values"], ref))
+        row = {
+            "n_members": n,
+            "n_devices": n_devices,
+            "fused_s": fused["elapsed_s"],
+            "shard_s": sharded["elapsed_s"],
+            "fused_tasks_per_s": n / fused["elapsed_s"],
+            "shard_tasks_per_s": n / sharded["elapsed_s"],
+            "speedup_vs_fused": fused["elapsed_s"] / sharded["elapsed_s"],
+            "fused_dispatches": fused["stats"]["dispatches"],
+            "shard_dispatches": sharded["stats"]["sharded_dispatches"],
+            "shard_carriers": sharded["stats"]["shard_carriers"],
+            "max_drift": drift,
+            "all_done": fused["all_done"] and sharded["all_done"],
+        }
+        if scalar_rate is not None:
+            row["scalar_tasks_per_s"] = scalar_rate
+        rows.append(row)
+    return rows

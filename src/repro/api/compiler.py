@@ -105,7 +105,8 @@ class _Ctx:
     """Per-workflow compile state: namespace, name allocation, name set."""
 
     def __init__(self, ns: str, wf_name: str, chain: bool = True,
-                 min_chain: int = DEFAULT_MIN_CHAIN) -> None:
+                 min_chain: int = DEFAULT_MIN_CHAIN,
+                 shard: bool = True) -> None:
         self.ns = ns
         self.wf_name = wf_name
         self.used_names: Set[str] = set()
@@ -116,6 +117,9 @@ class _Ctx:
         # documented opt-outs
         self.chain = chain
         self.min_chain = max(2, int(min_chain))
+        # shard=False stamps a _no_shard tag on fused members: the RTS then
+        # plans micro-batch lanes only, never an SPMD mesh
+        self.shard = shard
         # adaptive-hook failures (predicate/body/arm raised at runtime):
         # post_exec exceptions are recorded-not-fatal in the core, so the
         # API surfaces them through here — api.run() raises on them
@@ -286,6 +290,8 @@ def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
         # the Emgr packer and a fusion-capable RTS read this tag to batch
         # congruent ensemble members into one device dispatch
         task.tags["_fusion_group"] = spec.fusion_group
+        if not ctx.shard:
+            task.tags["_no_shard"] = True
     if spec._chain_tag is not None:
         # chain detection placed this member on a fused chain: the WFP
         # superstage scheduler and a chain-capable RTS read this tag to
@@ -715,7 +721,8 @@ class _JoinRuntime:
 def compile_workflow(*nodes: Union[Node, Future],
                      name: Optional[str] = None,
                      chain: bool = True,
-                     min_chain: int = DEFAULT_MIN_CHAIN) -> Compiled:
+                     min_chain: int = DEFAULT_MIN_CHAIN,
+                     shard: bool = True) -> Compiled:
     """Compile a declarative description into PST pipelines.
 
     Weakly-connected components of the task DAG become separate (and
@@ -728,12 +735,17 @@ def compile_workflow(*nodes: Union[Node, Future],
     dispatches with the intermediate member values never touching the
     host. ``chain=False`` opts the workflow out (stages still fuse
     per-stage); raising ``min_chain`` opts out short chains only.
+
+    ``shard=False`` opts the workflow out of SPMD mesh sharding: fused
+    groups then execute as per-device micro-batch lanes even on a
+    multi-device runtime (``JaxRTS(shard_min_members=n)`` is the
+    runtime-side knob for tuning rather than disabling).
     """
     if not nodes:
         raise CompileError("compile() needs at least one node")
     ns = uid.generate("wf")
     wf_name = name or ns
-    ctx = _Ctx(ns, wf_name, chain=chain, min_chain=min_chain)
+    ctx = _Ctx(ns, wf_name, chain=chain, min_chain=min_chain, shard=shard)
     units = _collect_units(list(nodes), ns)
     if not units:
         raise CompileError("compile() found no tasks to run — every input "
@@ -779,4 +791,20 @@ def compile_workflow(*nodes: Union[Node, Future],
                 f"stages")
         pipe.add_stages(stages)
         pipelines.append(pipe)
+    # stamp each fused member with its group's total width: the RTS packer
+    # reads the hint to hold a partially-arrived wide group for a full-mesh
+    # dispatch instead of fragmenting it across the submission stream
+    widths: Dict[str, int] = {}
+    for pipe in pipelines:
+        for stage in pipe.stages:
+            for task in stage.tasks:
+                key = task.tags.get("_fusion_group")
+                if key is not None:
+                    widths[key] = widths.get(key, 0) + 1
+    for pipe in pipelines:
+        for stage in pipe.stages:
+            for task in stage.tasks:
+                key = task.tags.get("_fusion_group")
+                if key is not None:
+                    task.tags["_fusion_width"] = widths[key]
     return Compiled(pipelines, ns, wf_name, ctx)

@@ -59,6 +59,11 @@ def _analog_values_batched(locations, *, seed: int, ny: int, nx: int,
     location slices. The member axis folds into the location axis (every
     location is independent), the similarity matrix runs through the
     Pallas distance kernel, and the analog means unfold back to (B, n).
+
+    Traceability: the dataset fields go through ``jnp.asarray`` before the
+    gather so the whole function jits — the SPMD sharded path runs it under
+    ``jit(shard_map(...))`` with ``locations`` a tracer, and numpy arrays
+    cannot be fancy-indexed by tracers.
     """
     import jax
     import jax.numpy as jnp
@@ -68,9 +73,9 @@ def _analog_values_batched(locations, *, seed: int, ny: int, nx: int,
     b, n, _ = locations.shape
     flat = locations.reshape(b * n, 2)
     ys, xs = flat[:, 0], flat[:, 1]
-    f_now = data.forecast_now[:, ys, xs]            # (V, B·n)
-    f_h = data.hist_forecast[:, :, ys, xs]          # (H, V, B·n)
-    o_h = data.hist_obs[:, ys, xs]                  # (H, B·n)
+    f_now = jnp.asarray(data.forecast_now)[:, ys, xs]    # (V, B·n)
+    f_h = jnp.asarray(data.hist_forecast)[:, :, ys, xs]  # (H, V, B·n)
+    o_h = jnp.asarray(data.hist_obs)[:, ys, xs]          # (H, B·n)
     interpret = jax.default_backend() == "cpu"
     d2 = anen_distance(f_h, f_now, interpret=interpret)
     _, idx = jax.lax.top_k(-d2.T, k)                # (B·n, k) most similar
@@ -273,7 +278,7 @@ class _SearchState:
 
 def _run(method: str, seed: int, *, ny: int, nx: int, n_hist: int,
          per_iter: int, max_iters: int, n_tasks: int, slots: int,
-         timeout: float, fuse: bool = True) -> Dict:
+         timeout: float, fuse: bool = True, shard: bool = True) -> Dict:
     cfg = AnEnConfig(ny=ny, nx=nx, n_hist=n_hist, seed=seed)
     search = _SearchState(method, seed, cfg, per_iter, max_iters, n_tasks,
                           fuse=fuse)
@@ -281,8 +286,11 @@ def _run(method: str, seed: int, *, ny: int, nx: int, n_hist: int,
                       # the fused path: congruent analog members of one
                       # round batch into a single dispatch on the device
                       # pool (fuse=False or a LocalRTS factory reproduces
-                      # the per-task scalar behaviour bit-for-bit)
-                      rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
+                      # the per-task scalar behaviour bit-for-bit). On a
+                      # multi-device pool a wide round shards across the
+                      # whole mesh (shard=False opts out)
+                      rts_factory=lambda: JaxRTS(slot_oversubscribe=slots,
+                                                 shard=shard),
                       heartbeat_interval=1.0)
     compiled = api.compile(search.as_loop(), name=f"anen-{method}-{seed}")
     amgr.workflow = compiled

@@ -158,19 +158,21 @@ def build_misfit_chain(n_events: int, *, nx: int = 64, nz: int = 64,
 def run_misfit_chain(n_events: int, slots: int = 4, *, nx: int = 64,
                      nt: int = 120, seed: int = 0, dv: float = 0.0,
                      fuse: bool = True, chain: bool = True,
-                     timeout: float = 600.0) -> Dict:
+                     shard: bool = True, timeout: float = 600.0) -> Dict:
     """Evaluate the forward→misfit chain on the JaxRTS data plane.
 
     ``chain=False`` runs the identical 2-stage description per-stage-fused;
-    ``fuse=False`` runs it member-per-task — the parity baselines."""
+    ``fuse=False`` runs it member-per-task — the parity baselines. On a
+    multi-device pool a wide event ensemble shards its chain across the
+    whole mesh; ``shard=False`` pins it to per-device micro-batches."""
     ens = build_misfit_chain(n_events, nx=nx, nz=nx, nt=nt, seed=seed,
                              dv=dv, fuse=fuse)
     objective = api.gather(ens, total_misfit, name=f"total-chain-{seed}")
     t0 = time.time()
     result = api.run(
         objective, resources=ResourceDescription(slots=slots),
-        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
-        chain=chain, timeout=timeout)
+        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots, shard=shard),
+        chain=chain, shard=shard, timeout=timeout)
     elapsed = time.time() - t0
     out = {
         "n_events": n_events,
@@ -192,12 +194,14 @@ def total_misfit(values: List) -> float:
 
 def run_misfit_ensemble(n_events: int, slots: int = 4, *, nx: int = 64,
                         nt: int = 120, seed: int = 0, dv: float = 0.0,
-                        fuse: bool = True, timeout: float = 600.0) -> Dict:
+                        fuse: bool = True, shard: bool = True,
+                        timeout: float = 600.0) -> Dict:
     """Evaluate the source-ensemble misfit on the fused JaxRTS path.
 
     ``fuse=False`` runs the identical description member-per-task — the
     scalar baseline the fusion benchmark and the parity tests compare
-    against.
+    against. ``shard=False`` keeps per-device micro-batches on
+    multi-device inventories (a single-device run is unaffected).
     """
     ens = build_misfit_ensemble(n_events, nx=nx, nz=nx, nt=nt, seed=seed,
                                 dv=dv, fuse=fuse)
@@ -205,8 +209,8 @@ def run_misfit_ensemble(n_events: int, slots: int = 4, *, nx: int = 64,
     t0 = time.time()
     result = api.run(
         objective, resources=ResourceDescription(slots=slots),
-        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots),
-        timeout=timeout)
+        rts_factory=lambda: JaxRTS(slot_oversubscribe=slots, shard=shard),
+        shard=shard, timeout=timeout)
     elapsed = time.time() - t0
     out = {
         "n_events": n_events,

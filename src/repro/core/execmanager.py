@@ -438,6 +438,9 @@ class ExecManager:
         A ``_fusion_chain`` link additionally drains its whole chain (every
         link's group, one charge) and is held back while its member's
         chain is still incomplete (see :meth:`_chain_ready_locked`).
+        A group the RTS plans to execute as an SPMD *mesh* dispatch is
+        charged the whole mesh instead (:meth:`RTS.planned_group_slots`) —
+        one sharded carrier really does occupy every mesh device.
         """
         dq = self._backlog.get(width)
         while dq and width <= remaining:
@@ -454,10 +457,25 @@ class ExecManager:
             batch.append(task)
             remaining -= width
             if fusion:
+                before = len(batch)
                 self._drain_group_locked(dq, task, batch.append)
+                remaining -= self._group_surcharge(
+                    1 + len(batch) - before, width)
         if dq is not None and not dq:
             del self._backlog[width]
         return remaining
+
+    def _group_surcharge(self, n_members: int, width: int) -> int:
+        """Slots beyond the historical one-member charge for a drained
+        fused group: a sharded carrier leases the whole mesh, so the
+        packer must not backfill other work into those slots."""
+        if n_members < 2 or self.rts is None:
+            return 0
+        try:
+            planned = int(self.rts.planned_group_slots(n_members, width))
+        except Exception:  # noqa: BLE001 - advisory hook only
+            return 0
+        return max(0, planned - width)
 
     def _drain_group_locked(self, dq: Optional[Deque], first: Task,
                             take: Callable[[Task], None]) -> None:
@@ -563,8 +581,11 @@ class ExecManager:
             remaining -= head.slots
             self._head_skips = 0
             if fusion:
+                before = len(batch)
                 self._drain_group_locked(
                     self._backlog.get(head.slots), head, batch.append)
+                remaining -= self._group_surcharge(
+                    1 + len(batch) - before, head.slots)
         for width in sorted(self._backlog, reverse=True):
             if remaining <= 0:
                 break
@@ -798,6 +819,7 @@ class ExecManager:
             "execution_seconds": c.execution_seconds,
             "staging_seconds": c.staging_seconds,
             "pilot_lost": getattr(c, "pilot_lost", False),
+            "plan": getattr(c, "plan", None),
         })
         # capacity freed: wake the Emgr — but only when it actually holds
         # tasks back for slots (unconditional kicks would wake it once per

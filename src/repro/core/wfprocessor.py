@@ -452,8 +452,14 @@ class WFProcessor:
             if msg.get("canceled") or msg.get("exit_code") == -2:
                 self.svc.advance_seq(task, prefix + (st.CANCELED,), sink=sink)
             elif msg.get("exit_code") == 0:
+                extras = self._route_result(task)
+                if msg.get("plan") is not None:
+                    # the fused carrier's chosen execution plan (mesh shape
+                    # or lane count) rides the DONE record for postmortem
+                    # perf debugging
+                    extras.setdefault("plan", msg["plan"])
                 self.svc.advance_seq(task, prefix + (st.DONE,),
-                                     sink=sink, **self._route_result(task))
+                                     sink=sink, **extras)
             else:
                 exc = str(msg.get("exception", ""))[:500]
                 if task.retries < task.max_retries:

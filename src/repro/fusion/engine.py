@@ -32,6 +32,18 @@ per-stage per-member completions in link order (:meth:`ChainExecution.drain`)
 and releases the device lease. Host-side stacking of micro-batch *n+1*
 therefore overlaps device compute of micro-batch *n*.
 
+SPMD sharding (PR 6) widens one carrier across the whole device mesh: when
+the RTS leases several distinct devices for a carrier (``mesh_devices``),
+the stacked member kwargs are placed with ``NamedSharding`` over a 1-D
+``Mesh`` on the member axis and the composed program (or hand-batched
+kernel) executes under ``shard_map`` — ONE XLA program spans every leased
+device, chain intermediates stay sharded end-to-end between links, and the
+fan-out hands members sharding-aware lazy slices (a per-member read touches
+one device's shard, never a batch gather). Every sharded wrapper passes
+``check_rep=False``: user kernels may contain ``pallas_call``, which has no
+replication rule. Any sharded-dispatch failure degrades through the
+existing ladder (per-stage fused on one device, then per-member scalar).
+
 Failure isolation: a member whose outputs contain non-finite values at
 link *k* FAILS at *k* and its downstream links fail with an upstream
 marker, while every other member completes; an exception raised by a
@@ -45,6 +57,7 @@ the last journaled link.
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 import traceback
@@ -407,13 +420,55 @@ class _LinkPlan:
         self.statics_key = _statics_key(static_kw)
 
 
-def _composed_segment(plans: Sequence[_LinkPlan]) -> Callable:
+def _mesh_key(mesh) -> Tuple:
+    """Hashable identity of a mesh (device ids) for the jit cache."""
+    return tuple(int(d.id) for d in mesh.devices.flat)
+
+
+def build_mesh(devices: Optional[Sequence[Any]]):
+    """A 1-D member-axis ``Mesh`` over ``devices``, or None when the lease
+    is not meshable (empty, placeholder device names, duplicate physical
+    devices from logical-slot oversubscription)."""
+    if not devices:
+        return None
+    try:
+        import jax
+        from jax.sharding import Mesh
+
+        uniq = list(dict.fromkeys(devices))
+        if len(uniq) != len(devices):
+            return None
+        if any(not isinstance(d, jax.Device) for d in uniq):
+            return None
+        return Mesh(np.array(uniq, dtype=object), ("m",))
+    except Exception:  # noqa: BLE001 - unmeshable lease ⇒ micro-batch path
+        return None
+
+
+def shard_pad(n_members: int, n_shards: int) -> int:
+    """Padded batch axis for a sharded dispatch: ``n_shards`` equal shards,
+    each bucketed to a power of two — the compile-shape bucketing rule of
+    the micro-batch path, applied per shard. Past 512 members per shard
+    the bucket quantum flattens to 256: pow2 bucketing there would pad a
+    wide dispatch by up to ~2x in dead compute to save at most a handful
+    of cached compiles."""
+    per = max(1, math.ceil(n_members / max(1, n_shards)))
+    if per > 512:
+        return n_shards * (256 * math.ceil(per / 256))
+    return n_shards * (1 << max(0, per - 1).bit_length())
+
+
+def _composed_segment(plans: Sequence[_LinkPlan], mesh=None) -> Callable:
     """One jitted program running consecutive vmap-able links back to back —
     literally ``jit(vmap(g∘f))`` for a 2-link segment. The carried
     intermediate is an XLA value inside the program: it never materializes
     on the host, and XLA is free to fuse across the link boundary. Every
     link's output is still returned (the fan-out owes each stage its
-    per-member completions)."""
+    per-member completions).
+
+    With ``mesh``, the whole segment runs under ``shard_map`` on the member
+    axis: one program spans every mesh device and the carried intermediates
+    stay sharded across link boundaries."""
     import jax
 
     metas = [(p.fn, dict(p.static_kw), p.carry_name) for p in plans]
@@ -437,8 +492,24 @@ def _composed_segment(plans: Sequence[_LinkPlan]) -> Callable:
          tuple(sorted(p.shared_kw))) for p in plans)
     if any(p.statics_key is None for p in plans):
         cache_key = None
-    return _jit_cached(("chain", cache_key) if cache_key else None,
-                       lambda: jax.jit(seg))
+
+    if mesh is None:
+        return _jit_cached(("chain", cache_key) if cache_key else None,
+                           lambda: jax.jit(seg))
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def build():
+        # check_rep=False: links may contain pallas_call (no replication
+        # rule); out_specs is a pytree prefix over every link's output
+        return jax.jit(shard_map(
+            seg, mesh=mesh, in_specs=(P("m"), P(), P("m")),
+            out_specs=P("m"), check_rep=False))
+
+    return _jit_cached(
+        ("chain-shard", _mesh_key(mesh), cache_key) if cache_key else None,
+        build)
 
 
 # --------------------------------------------------------------------------- #
@@ -660,7 +731,10 @@ class ChainExecution:
     per-stage fused execution of links *k..L-1* (consuming the carrier's
     own upstream values — never the store, which mid-chain may not have
     been routed yet), and a failed per-stage dispatch falls back to
-    per-member scalar execution (inside :func:`execute_fused`).
+    per-member scalar execution (inside :func:`execute_fused`). A sharded
+    carrier (``mesh_devices``) enters the same ladder: any failure in the
+    SPMD dispatch streams a degrade record and links re-run per-stage
+    fused on a single device.
     """
 
     def __init__(self, links: Sequence[Sequence[Task]],
@@ -670,7 +744,8 @@ class ChainExecution:
                  *,
                  canceled: Optional[set] = None,
                  fault_injector: Optional[Callable[[Task], bool]] = None,
-                 compose: bool = True) -> None:
+                 compose: bool = True,
+                 mesh_devices: Optional[Sequence[Any]] = None) -> None:
         self.links: List[List[Task]] = [list(link) for link in links]
         self.compose = compose
         self.devices = devices
@@ -679,8 +754,10 @@ class ChainExecution:
         self.canceled = canceled if canceled is not None else set()
         self.fault_injector = fault_injector
         self.started = time.time()
+        self._mesh = build_mesh(mesh_devices)
         self.stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
-                      "dispatches": 0, "chain_links": 0}
+                      "dispatches": 0, "chain_links": 0,
+                      "sharded_dispatches": 0}
         self._plans: List[Optional[_LinkPlan]] = [None] * len(self.links)
         self._injected: Dict[int, int] = {}   # member col -> first bad link
         self._fail_retryable: Dict[int, bool] = {}
@@ -759,8 +836,13 @@ class ChainExecution:
             return
         self._fail_link = 0
         entry_calls = [member_call(t) for t in self.links[0]]
+        mesh = self._mesh
+        # a sharded batch pads to n_shards equal pow2 shards so every mesh
+        # device receives an identical block shape from the P('m') split
+        entry_pad = None if mesh is None \
+            else shard_pad(len(entry_calls), mesh.devices.size)
         fn, spec, static_kw, shared_kw, stacked, valid_lens, padded_b = \
-            _prepare(entry_calls)
+            _prepare(entry_calls, pad_to=entry_pad)
         self._plans[0] = _LinkPlan(self.links[0], fn, spec, static_kw,
                                    shared_kw, stacked, valid_lens, None)
         prev = self.links[0]
@@ -780,9 +862,12 @@ class ChainExecution:
             self._plans[j] = _LinkPlan(tasks, fnj, specj, st_kw, sh_kw, stk,
                                        vl, carry_name)
             prev = tasks
+        if mesh is not None:
+            self._place_plans(mesh)
         # dispatch: maximal runs of vmap-able links compose into ONE jitted
         # program; a hand-written batched impl executes eagerly between
-        # segments (its jnp ops still enqueue asynchronously)
+        # segments (its jnp ops still enqueue asynchronously). Under a mesh
+        # every dispatch is one shard_map program spanning all devices.
         idx = 0
         carry = None
         while idx < len(self._plans):
@@ -792,8 +877,12 @@ class ChainExecution:
                 kw = dict(plan.stacked)
                 if plan.carry_name is not None:
                     kw[plan.carry_name] = carry
-                out = plan.spec.batched(**kw, **plan.static_kw,
-                                        **plan.shared_kw)
+                if mesh is not None:
+                    out = self._sharded_batched(plan, kw)
+                    self.stats["sharded_dispatches"] += 1
+                else:
+                    out = plan.spec.batched(**kw, **plan.static_kw,
+                                            **plan.shared_kw)
                 self.stats["dispatches"] += 1
                 self._push(("link", idx, out))
                 carry = out
@@ -804,14 +893,55 @@ class ChainExecution:
                    and self._plans[j].spec.batched is None):
                 j += 1
             segment = self._plans[idx:j]
-            seg_fn = _composed_segment(segment)
+            seg_fn = _composed_segment(segment, mesh=mesh)
             outs = seg_fn([p.stacked for p in segment],
                           [p.shared_kw for p in segment], carry)
             self.stats["dispatches"] += 1
+            if mesh is not None:
+                self.stats["sharded_dispatches"] += 1
             for off, out in enumerate(outs):
                 self._push(("link", idx + off, out))
             carry = outs[-1]
             idx = j
+
+    def _place_plans(self, mesh) -> None:
+        """Place every link's stacked kwargs across the mesh member axis
+        (shared kwargs replicate). Raises on unplaceable leaves — caught by
+        :meth:`dispatch`, which degrades to the micro-batch ladder."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sharded = NamedSharding(mesh, P("m"))
+        for plan in self._plans:
+            plan.stacked = {k: jax.device_put(v, sharded)
+                            for k, v in plan.stacked.items()}
+            plan.shared_kw = jax.tree_util.tree_map(
+                jnp.asarray, plan.shared_kw)
+
+    def _sharded_batched(self, plan: _LinkPlan, kw: Dict[str, Any]) -> Any:
+        """Run a hand-batched kernel under ``shard_map``: each mesh device
+        invokes the kernel on its own member shard (the kernel's internal
+        tiling — e.g. the Pallas grid — applies per shard)."""
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self._mesh
+        batched = plan.spec.batched
+        static_kw = plan.static_kw
+
+        def build():
+            def call(kw_, sh_):
+                return batched(**kw_, **sh_, **static_kw)
+            return jax.jit(shard_map(
+                call, mesh=mesh, in_specs=(P("m"), P()),
+                out_specs=P("m"), check_rep=False))
+
+        cache_key = None if plan.statics_key is None else (
+            "shard-batched", _mesh_key(mesh), batched, plan.statics_key,
+            tuple(sorted(kw)), tuple(sorted(plan.shared_kw)))
+        return _jit_cached(cache_key, build)(kw, plan.shared_kw)
 
     # -- drainer side ----------------------------------------------------- #
 

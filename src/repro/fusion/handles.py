@@ -15,13 +15,20 @@ directory. Replay decodes the record back into an :class:`ArrayResult`
 resume path answers by re-running the producer — exactly the existing
 ``result_omitted`` contract, with the cap now only ever charged for the
 tiny record itself.
+
+Sharded outputs (SPMD carriers): when the wrapped value is a jax array laid
+out across several devices on its leading axis, the handles stay
+sharding-aware end-to-end — a per-member read slices ONE device's shard
+(never gathering the stacked batch to host), and the journal spill
+serializes per-shard as ``{"__codec__": "sharded_array", "shards": [...]}``
+with each shard content-addressed exactly like a fused spill.
 """
 
 from __future__ import annotations
 
 import hashlib
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,6 +36,59 @@ from ..core.exceptions import MissingError
 from ..core.results import register_result_codec, register_result_spiller
 
 CODEC = "fused_array"
+SHARDED_CODEC = "sharded_array"
+
+
+def _axis0_shards(value: Any) -> Optional[List[Tuple[int, Any]]]:
+    """``[(start_row, shard_data), ...]`` when ``value`` is a jax array split
+    across >1 devices on its leading axis, else None.
+
+    Per-shard reads and spills must never fall back to a full gather on a
+    layout they don't understand, so anything other than a clean 1-D
+    axis-0 split (replicated, multi-axis, non-addressable) returns None and
+    the caller uses the dense path.
+    """
+    shards = getattr(value, "addressable_shards", None)
+    shape = getattr(value, "shape", None)
+    if shards is None or shape is None or len(shape) == 0:
+        return None
+    try:
+        if len(shards) < 2 or not value.is_fully_addressable:
+            return None
+        out: List[Tuple[int, Any]] = []
+        for s in shards:
+            idx = s.index  # tuple of slices into the global array
+            start = idx[0].start or 0
+            if any(i.start not in (None, 0) or i.stop not in (None, dim)
+                   for i, dim in zip(idx[1:], shape[1:])):
+                return None
+            out.append((start, s.data))
+        out.sort(key=lambda p: p[0])
+        rows = 0
+        for start, data in out:
+            if start != rows:
+                return None
+            rows += data.shape[0]
+        if rows != shape[0]:
+            return None
+        return out
+    except Exception:  # pragma: no cover - exotic sharding layouts
+        return None
+
+
+def _write_spill(host: np.ndarray, spill_dir: str) -> Tuple[str, str]:
+    """Content-addressed ``.npy`` write; returns ``(sha256, path)``."""
+    digest = hashlib.sha256(host.tobytes()).hexdigest()
+    path = os.path.join(spill_dir, f"{digest[:32]}.npy")
+    if not os.path.exists(path):
+        # content-addressed: concurrent writers of the same value are
+        # idempotent; write-then-rename keeps replay from reading a torn
+        # file after a crash mid-spill (the tmp name must end in .npy —
+        # np.save appends the suffix to anything else)
+        tmp = f"{path}.{os.getpid()}.tmp.npy"
+        np.save(tmp, host)
+        os.replace(tmp, path)
+    return digest, path
 
 
 class ArrayResult:
@@ -37,13 +97,15 @@ class ArrayResult:
     Ergonomics: ``np.asarray(handle)`` / ``jnp.asarray(handle)`` yield the
     host / device array; ``.value`` is the wrapped array itself; ``len`` /
     ``.shape`` / ``.dtype`` forward. Consumers that just do arithmetic can
-    usually pass the handle straight into jnp ops.
+    usually pass the handle straight into jnp ops. The host view is gathered
+    once and cached — N consumers of one handle cost one device transfer.
     """
 
-    __slots__ = ("_value",)
+    __slots__ = ("_value", "_host")
 
     def __init__(self, value: Any) -> None:
         self._value = value
+        self._host = None
 
     @property
     def value(self) -> Any:
@@ -61,15 +123,16 @@ class ArrayResult:
         return int(self.shape[0]) if self.shape else 0
 
     def __array__(self, dtype=None):
-        arr = np.asarray(self.value)
-        return arr.astype(dtype) if dtype is not None else arr
+        if self._host is None:
+            self._host = np.asarray(self.value)
+        return self._host.astype(dtype) if dtype is not None else self._host
 
     def __jax_array__(self):
         import jax.numpy as jnp
         return jnp.asarray(self.value)
 
     def tolist(self):
-        return np.asarray(self.value).tolist()
+        return self.__array__().tolist()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<ArrayResult shape={tuple(self.shape)} dtype={self.dtype}>"
@@ -80,21 +143,28 @@ class ArrayResult:
         """Spill the bytes and return the journalable record (or ``None``
         when no sidecar directory exists — the caller then journals the
         plain ``result_omitted`` flag and the producer re-runs on resume).
+
+        A sharded value spills per-shard: each device's block is hashed and
+        written independently (no host gather of the stacked batch), and the
+        record carries the ordered shard list so replay can verify each
+        block's sha256 before concatenating.
         """
         if not spill_dir:
             return None
-        host = np.ascontiguousarray(np.asarray(self.value))
-        digest = hashlib.sha256(host.tobytes()).hexdigest()
         os.makedirs(spill_dir, exist_ok=True)
-        path = os.path.join(spill_dir, f"{digest[:32]}.npy")
-        if not os.path.exists(path):
-            # content-addressed: concurrent writers of the same value are
-            # idempotent; write-then-rename keeps replay from reading a torn
-            # file after a crash mid-spill (the tmp name must end in .npy —
-            # np.save appends the suffix to anything else)
-            tmp = f"{path}.{os.getpid()}.tmp.npy"
-            np.save(tmp, host)
-            os.replace(tmp, path)
+        shards = _axis0_shards(self.value)
+        if shards is not None:
+            records = []
+            for start, data in shards:
+                host = np.ascontiguousarray(np.asarray(data))
+                digest, path = _write_spill(host, spill_dir)
+                records.append({"sha256": digest, "path": path,
+                                "rows": int(host.shape[0])})
+            value = self.value
+            return {"__codec__": SHARDED_CODEC, "shards": records,
+                    "shape": list(value.shape), "dtype": str(value.dtype)}
+        host = np.ascontiguousarray(self.__array__())
+        digest, path = _write_spill(host, spill_dir)
         return {"__codec__": CODEC, "sha256": digest, "path": path,
                 "shape": list(host.shape), "dtype": str(host.dtype)}
 
@@ -110,6 +180,10 @@ class LazySlice(ArrayResult):
     reader, the journal spiller, a scalar downstream task) actually asks.
     The parent array stays device-resident and alive for as long as any
     member handle does, which is the same lifetime the eager slices had.
+
+    When the parent is sharded on the member axis, a read slices only the
+    one device shard that owns this member's row — the other devices'
+    blocks are never touched, let alone gathered.
     """
 
     __slots__ = ("_parent", "_index", "_trim")
@@ -124,7 +198,17 @@ class LazySlice(ArrayResult):
     @property
     def value(self) -> Any:
         if self._value is None:
-            piece = self._parent[self._index]
+            shards = _axis0_shards(self._parent)
+            if shards is not None:
+                piece = None
+                for start, data in shards:
+                    if start <= self._index < start + data.shape[0]:
+                        piece = data[self._index - start]
+                        break
+                if piece is None:  # pragma: no cover - _FanOut bounds rows
+                    piece = self._parent[self._index]
+            else:
+                piece = self._parent[self._index]
             if self._trim is not None:
                 piece = piece[:self._trim]
             self._value = piece
@@ -150,16 +234,41 @@ class LazySlice(ArrayResult):
         return getattr(self._parent, "dtype", None)
 
 
-def _decode(record: Dict[str, Any]) -> ArrayResult:
-    path = record.get("path")
+def _verify_load(path: Optional[str], sha256: Optional[str],
+                 kind: str) -> np.ndarray:
     if not path or not os.path.exists(path):
-        raise MissingError(f"fused-array spill missing: {path!r}")
+        raise MissingError(f"{kind} spill missing: {path!r}")
     host = np.load(path)
-    digest = hashlib.sha256(
-        np.ascontiguousarray(host).tobytes()).hexdigest()
-    if digest != record.get("sha256"):
-        raise MissingError(f"fused-array spill corrupted: {path!r} "
+    digest = hashlib.sha256(np.ascontiguousarray(host).tobytes()).hexdigest()
+    if digest != sha256:
+        raise MissingError(f"{kind} spill corrupted: {path!r} "
                            f"(content hash mismatch)")
+    return host
+
+
+def _decode(record: Dict[str, Any]) -> ArrayResult:
+    return ArrayResult(_verify_load(record.get("path"), record.get("sha256"),
+                                    "fused-array"))
+
+
+def _decode_sharded(record: Dict[str, Any]) -> ArrayResult:
+    """Rebuild a sharded spill: every per-shard sha256 must verify, and the
+    shard row counts must tile the recorded global shape — any mismatch is
+    the ``result_omitted`` contract (raise, producer re-runs on resume)."""
+    shards = record.get("shards") or []
+    if not shards:
+        raise MissingError("sharded-array spill record has no shards")
+    blocks = [_verify_load(s.get("path"), s.get("sha256"), "sharded-array")
+              for s in shards]
+    for block, s in zip(blocks, shards):
+        if int(block.shape[0]) != int(s.get("rows", -1)):
+            raise MissingError(
+                f"sharded-array spill corrupted: {s.get('path')!r} "
+                f"(shard row count mismatch)")
+    host = np.concatenate(blocks, axis=0) if len(blocks) > 1 else blocks[0]
+    if list(host.shape) != list(record.get("shape") or host.shape):
+        raise MissingError("sharded-array spill corrupted: reassembled "
+                           "shape does not match record")
     return ArrayResult(host)
 
 
@@ -177,4 +286,5 @@ def _spill_bare_array(value: Any, spill_dir: str) -> Optional[Dict[str, Any]]:
 
 
 register_result_codec(CODEC, _decode)
+register_result_codec(SHARDED_CODEC, _decode_sharded)
 register_result_spiller(_spill_bare_array)

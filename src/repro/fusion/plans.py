@@ -19,13 +19,24 @@ A group larger than one device's worth of work is carved into
 split follows the RTS's free capacity at submission time, not a constant.
 ``max_batch`` bounds any single dispatch (padding memory and compile-shape
 growth are linear in the batch), re-chunking oversized lanes.
+
+Mesh sharding
+-------------
+When the free capacity spans several devices AND the group is wide enough
+(``shard_min_members``), micro-batch lanes stop paying: each lane is its own
+lease + dispatch + compile-shape bucket. :func:`plan_mesh` instead plans a
+1-D **mesh shape** — every free device joins one all-or-nothing lease and a
+single ``shard_map`` dispatch splits the member axis across the mesh, so the
+whole group executes in ``ceil(n / (devices × max_batch))`` dispatches.
+``max_batch`` here bounds the *per-shard* batch, keeping per-device memory
+identical to the micro-batch path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Any, Dict, List, Optional
 
 #: Below this many congruent members, scalar execution wins.
 DEFAULT_MIN_BATCH = 4
@@ -36,6 +47,10 @@ DEFAULT_MAX_BATCH = 4096
 #: Below this many linked stages, chain fusion degrades to per-stage fusion
 #: (a 1-link "chain" is just a fused stage; composing buys nothing).
 DEFAULT_MIN_CHAIN = 2
+
+#: Below this many members, sharding across the mesh is not worth the
+#: collective placement cost — per-device micro-batch lanes win.
+DEFAULT_SHARD_MIN_MEMBERS = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +69,56 @@ class GroupPlan:
     @property
     def fused_members(self) -> int:
         return sum(self.batches)
+
+    def record(self) -> Dict[str, Any]:
+        """JSON-able plan summary for the carrier's journal record."""
+        return {"kind": "fused", "lanes": len(self.batches),
+                "scalar": self.scalar}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """How one wide group executes as SPMD sharded dispatches.
+
+    ``n_shards`` devices form a 1-D mesh; each entry of ``batches`` is the
+    TOTAL member count of one sharded dispatch (the engine splits it into
+    ``n_shards`` equal shards, padding the tail shard). Every dispatch takes
+    one all-or-nothing lease of ``n_shards × member_slots`` slots.
+    """
+
+    n_shards: int
+    batches: List[int]
+
+    def record(self) -> Dict[str, Any]:
+        """JSON-able plan summary for the carrier's journal record."""
+        per_shard = max(math.ceil(b / self.n_shards) for b in self.batches)
+        return {"kind": "shard", "mesh": [self.n_shards, per_shard],
+                "dispatches": len(self.batches)}
+
+
+def plan_mesh(n_members: int, free_slots: Optional[int], member_slots: int,
+              *, max_batch: int = DEFAULT_MAX_BATCH,
+              shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,
+              max_devices: Optional[int] = None) -> Optional[MeshPlan]:
+    """Plan a mesh shape for one wide group, or None when lanes should win.
+
+    ``max_devices`` caps the mesh at the RTS's *distinct physical* device
+    count — logical slot oversubscription widens lanes, not meshes. Returns
+    None (caller falls back to :func:`plan_group` / :func:`plan_chain`)
+    unless at least two devices are free and the group clears
+    ``shard_min_members``.
+    """
+    if free_slots is None or member_slots <= 0:
+        return None
+    devices = free_slots // member_slots
+    if max_devices is not None:
+        devices = min(devices, max_devices)
+    if devices < 2 or n_members < max(shard_min_members, devices):
+        return None
+    dispatches = math.ceil(n_members / (devices * max(1, max_batch)))
+    base, rem = divmod(n_members, dispatches)
+    batches = [base + (1 if i < rem else 0) for i in range(dispatches)]
+    return MeshPlan(n_shards=devices, batches=batches)
 
 
 def plan_group(n_members: int, free_slots: Optional[int], member_slots: int,

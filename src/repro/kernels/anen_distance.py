@@ -20,6 +20,12 @@ lanes, never wrong values.
 
 Validated on CPU with ``interpret=True`` against the jnp reference in
 ``tests/test_fusion.py``.
+
+:func:`anen_distance_sharded` extends the grid across a device mesh: the H
+axis (the member-folded axis in the fused AnEn workflow) is sharded over a
+1-D mesh and each device invokes :func:`anen_distance` — the same Pallas
+block tiling — on its local shard under ``shard_map``
+(``check_rep=False``: pallas_call has no replication rule).
 """
 
 from __future__ import annotations
@@ -86,3 +92,43 @@ def anen_distance(f_hist: jnp.ndarray, f_now: jnp.ndarray,
         interpret=interpret,
     )(fh, fn)
     return out[:H, :N]
+
+
+def anen_distance_sharded(f_hist: jnp.ndarray, f_now: jnp.ndarray,
+                          devices=None, interpret: bool = False,
+                          block_h: int = 64,
+                          block_n: int = 128) -> jnp.ndarray:
+    """:func:`anen_distance` with the H axis sharded across ``devices``.
+
+    ``f_hist`` (H, V, N) is split into per-device blocks on axis 0 (padded
+    by edge rows to divide evenly — padded rows are sliced off the result);
+    ``f_now`` (V, N) replicates. Falls back to the single-device kernel for
+    an empty/unit device list. One ``shard_map`` program spans the mesh;
+    inside it each device runs the existing block-tiled Pallas grid on its
+    own (H/D, V, N) shard.
+    """
+    devices = [d for d in (devices or []) if isinstance(d, jax.Device)]
+    devices = list(dict.fromkeys(devices))
+    if len(devices) < 2:
+        return anen_distance(f_hist, f_now, interpret=interpret,
+                             block_h=block_h, block_n=block_n)
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    H = f_hist.shape[0]
+    n = len(devices)
+    pad = (-H) % n
+    fh = f_hist if pad == 0 else jnp.concatenate(
+        [f_hist, jnp.repeat(f_hist[-1:], pad, axis=0)])
+    mesh = Mesh(np.array(devices, dtype=object), ("h",))
+
+    def shard(fh_, fn_):
+        return anen_distance(fh_, fn_, interpret=interpret,
+                             block_h=block_h, block_n=block_n)
+
+    fn_sharded = jax.jit(shard_map(
+        shard, mesh=mesh, in_specs=(P("h"), P()), out_specs=P("h"),
+        check_rep=False))
+    fh = jax.device_put(fh, NamedSharding(mesh, P("h")))
+    return fn_sharded(fh, jnp.asarray(f_now))[:H]

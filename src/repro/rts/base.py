@@ -51,6 +51,11 @@ class TaskCompletion:
     pilot executing the task died (federation member failover): the task
     itself did not fail, so the WFProcessor re-journals it as FAILED with an
     unconditional requeue that does not consume the task's retry budget.
+
+    ``plan`` is the fused carrier's execution plan (mesh shape or
+    micro-batch lane count, a small JSON-able dict) when the task ran as a
+    member of one — journaled on the DONE record for postmortem perf
+    debugging; None for scalar execution.
     """
 
     uid: str
@@ -62,6 +67,7 @@ class TaskCompletion:
     staging_seconds: float = 0.0
     execution_seconds: float = 0.0
     pilot_lost: bool = False
+    plan: Optional[Dict[str, Any]] = None
 
 
 CompletionCallback = Callable[[TaskCompletion], None]
@@ -145,6 +151,14 @@ class RTS(ABC):
         advertising fusion without batching would let the Emgr submit far
         past their real capacity."""
         return False
+
+    def planned_group_slots(self, n_members: int, member_slots: int) -> int:
+        """Slots one fusible group of ``n_members`` will occupy if handed
+        over right now. The default is the historical per-batch charge of
+        one member's width; a backend that executes wide groups as SPMD
+        sharded dispatches overrides this so the ExecManager charges the
+        whole mesh when packing its submission backlog."""
+        return member_slots
 
     # -- elasticity (beyond paper: required for 1000+-node operation) ---------#
 

@@ -41,6 +41,19 @@ its member uids through :meth:`running_since` (straggler speculation keeps
 firing) and stays cancellable without leaking its lease (the drainer owns
 the unlease unconditionally).
 
+SPMD sharding (PR 6): a fusion group (or chain cohort) wide enough to clear
+``shard_min_members`` on a multi-device pool is planned as a **mesh shape**
+(:func:`~repro.fusion.plans.plan_mesh`) instead of micro-batch lanes: each
+sharded carrier takes ONE all-or-nothing lease of ``devices ×
+member_slots`` slots and the engine executes the whole batch under
+``shard_map`` over a 1-D member-axis mesh — O(10^6) members complete in a
+handful of dispatches. ``shard=False`` (or a ``_no_shard`` member tag, see
+``api.compile(shard=False)``) opts out; oversubscribed pools never shard
+(a mesh needs distinct physical devices). The chosen plan — mesh shape or
+lane count — is stamped on every member completion for postmortem
+debugging, and :meth:`planned_group_slots` lets the ExecManager charge the
+whole mesh when packing its submission backlog.
+
 On this CPU container the inventory is logical (``slot_oversubscribe``
 logical slots share the physical CPU device) — the accounting, leasing and
 isolation logic is identical to the pod case; only the device objects differ.
@@ -50,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import math
 import queue
 import threading
 import time
@@ -59,8 +73,9 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 from ..core.pst import Task, resolve_executable
 from ..fusion import engine as fusion_engine
 from ..fusion.groups import GROUP_TAG, FusionSpec, fusion_spec, parse_chain_tag
-from ..fusion.plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_CHAIN, plan_chain,
-                            plan_group)
+from ..fusion.plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_CHAIN,
+                            DEFAULT_SHARD_MIN_MEMBERS, MeshPlan, plan_chain,
+                            plan_group, plan_mesh)
 from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
 
@@ -70,16 +85,23 @@ class _FusedBatch:
 
     ``links`` — one aligned task list per chain link (a plain fused group
     is a 1-link chain); ``members`` — every member task across links;
-    ``pending`` — member uids still owing a completion.
+    ``pending`` — member uids still owing a completion; ``mesh_shards`` —
+    device count of a planned SPMD mesh (0 = plain micro-batch carrier);
+    ``plan`` — the JSON-able plan record stamped onto member completions.
     """
 
-    __slots__ = ("links", "members", "pending", "compose")
+    __slots__ = ("links", "members", "pending", "compose", "mesh_shards",
+                 "plan")
 
-    def __init__(self, links: List[List[Task]], compose: bool = True) -> None:
+    def __init__(self, links: List[List[Task]], compose: bool = True,
+                 mesh_shards: int = 0,
+                 plan: Optional[Dict[str, Any]] = None) -> None:
         self.links = links
         self.members = [t for link in links for t in link]
         self.pending: Set[str] = {m.uid for m in self.members}
         self.compose = compose
+        self.mesh_shards = mesh_shards
+        self.plan = plan
 
 
 class JaxRTS(LocalRTS):
@@ -88,6 +110,9 @@ class JaxRTS(LocalRTS):
                  fusion_min_batch: Optional[int] = None,
                  fusion_max_batch: int = DEFAULT_MAX_BATCH,
                  fusion_min_chain: int = DEFAULT_MIN_CHAIN,
+                 shard: bool = True,
+                 shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,
+                 shard_hold_s: float = 0.25,
                  **kwargs: Any) -> None:
         super().__init__(**kwargs)
         if devices is None:
@@ -104,13 +129,33 @@ class JaxRTS(LocalRTS):
         self.fusion_min_batch = fusion_min_batch
         self.fusion_max_batch = fusion_max_batch
         self.fusion_min_chain = max(2, fusion_min_chain)
+        self.shard = shard
+        self.shard_min_members = shard_min_members
+        self.shard_hold_s = shard_hold_s
+        self._meshable: Optional[bool] = None   # lazily probed device types
+        # -- shard hold buffer ----------------------------------------------#
+        # members of a wide group arrive as a stream of partial submissions
+        # (the Broker hands the Emgr what the WFP has enqueued so far);
+        # packing each partial slice would fragment the group into many
+        # small mesh dispatches. Groups whose compile-time width hint
+        # (``_fusion_width``) says more members are coming are held here
+        # until a full-mesh batch (devices x max_batch) accumulates, the
+        # whole group has arrived, or ``shard_hold_s`` elapses — whichever
+        # is first. The deadline bounds the latency cost of holding and
+        # guarantees progress when the hint overstates (resume re-runs a
+        # subset of the original ensemble).
+        self._held: Dict[str, List[Task]] = {}
+        self._hold_seen: Dict[str, int] = {}
+        self._hold_timers: Dict[str, threading.Timer] = {}
+        self._hold_lock = threading.Lock()
         self._fusion_lock = threading.Lock()
         self._fused: Dict[str, _FusedBatch] = {}      # carrier uid -> batch
         self._member_carrier: Dict[str, str] = {}     # member uid -> carrier
         self._fused_canceled: Set[str] = set()        # member uids
         self.fusion_stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
                              "dispatches": 0, "chain_links": 0,
-                             "chain_carriers": 0}
+                             "chain_carriers": 0, "sharded_dispatches": 0,
+                             "shard_carriers": 0}
         # -- async data plane -------------------------------------------------#
         # dispatched-but-undrained carriers flow through this queue to a
         # small pool of drainer threads, which own unlease + release: the
@@ -152,6 +197,12 @@ class JaxRTS(LocalRTS):
 
     def stop(self) -> None:
         super().stop()
+        with self._hold_lock:
+            for timer in self._hold_timers.values():
+                timer.cancel()
+            self._hold_timers.clear()
+            self._held.clear()
+            self._hold_seen.clear()
         for _ in self._drainers:
             self._drain_q.put(None)
         for t in self._drainers:
@@ -175,6 +226,18 @@ class JaxRTS(LocalRTS):
 
     def supports_fusion(self) -> bool:
         return self.fusion
+
+    def planned_group_slots(self, n_members: int, member_slots: int) -> int:
+        """Slots the Emgr should charge for one fusible group right now:
+        a group wide enough to shard occupies the WHOLE mesh for its
+        dispatch, so the Emgr must not pack other work into those slots
+        (the micro-batch case keeps the historical one-member charge —
+        lanes backfill into genuinely free capacity)."""
+        mesh = self._plan_mesh(n_members, self.free_slots(), member_slots,
+                               None)
+        if mesh is not None:
+            return mesh.n_shards * member_slots
+        return member_slots
 
     def supports_chain_fusion(self) -> bool:
         """True when this RTS composes ``_fusion_chain``-tagged stages into
@@ -212,7 +275,12 @@ class JaxRTS(LocalRTS):
         (micro-batched from the free-device count) plus a scalar remainder
         when the cost model says a batch would be too small to pay off.
         ``_fusion_chain``-tagged tasks are first re-assembled into chain
-        carriers spanning every link present in this submission."""
+        carriers spanning every link present in this submission.
+
+        ``free_slots()`` is read ONCE here and threaded through the group
+        planners: it takes the pool lock, and a submission can contain many
+        groups — the plan should reflect one consistent snapshot of the
+        inventory, not a fresh lock round-trip per micro-batch."""
         groups: Dict[str, List[Task]] = {}
         chains: Dict[str, Dict[int, Dict[int, Task]]] = {}  # c->member->link
         order: List[Any] = []   # tasks / group keys / chain ids, in order
@@ -240,35 +308,190 @@ class JaxRTS(LocalRTS):
             bucket.append(task)
         if not groups and not chains:
             return tasks
+        free = self.free_slots()
         out: List[Task] = []
         for entry in order:
             if isinstance(entry, Task):
                 out.append(entry)
                 continue
             if entry[0] == "chain":
-                self._assemble_chain(chains[entry[1]], out)
+                self._assemble_chain(chains[entry[1]], out, free)
                 continue
-            self._pack_group(groups[entry[1]], out)
+            self._pack_or_hold(entry[1], groups[entry[1]], out, free)
         return out
 
-    def _pack_group(self, members: List[Task], out: List[Task]) -> None:
+    def _pack_or_hold(self, key: str, members: List[Task], out: List[Task],
+                      free: Optional[int]) -> None:
+        """Pack a fused group now, or hold a partially-arrived wide one.
+
+        Holding applies only when the mesh planner could fire for the full
+        group (shard on, real multi-device inventory, no ``_no_shard``)
+        and the compile-time width hint says members beyond this
+        submission are still in flight. Full-mesh batches are emitted as
+        they fill; the remainder waits for the rest of the group or the
+        ``shard_hold_s`` deadline."""
+        tags = members[0].tags
+        width = int(tags.get("_fusion_width") or 0)
+        if (not self.shard or len(self._devices) < 2
+                or not self._mesh_capable() or tags.get("_no_shard")
+                or width < self.shard_min_members
+                or self._kernel_spec(members[0]) is None):
+            self._pack_group(members, out, free)
+            return
+        # emit in equal quanta sized so the whole group needs exactly
+        # ceil(width / (devices x max_batch)) dispatches — the planner's
+        # dispatch bound — while early quanta still overlap the stream
+        capacity = len(self._devices) * self.fusion_max_batch
+        target = math.ceil(width / max(1, math.ceil(width / capacity)))
+        arm_key = None
+        with self._hold_lock:
+            held = self._held.setdefault(key, [])
+            held.extend(members)
+            seen = self._hold_seen.get(key, 0) + len(members)
+            self._hold_seen[key] = seen
+            batches: List[List[Task]] = []
+            while len(held) >= target:
+                batches.append(held[:target])
+                del held[:target]
+            if held and seen >= width:
+                batches.append(held[:])   # the whole group has arrived
+                del held[:]
+            if not held:
+                self._held.pop(key, None)
+                self._hold_seen.pop(key, None)
+                timer = self._hold_timers.pop(key, None)
+                if timer is not None:
+                    timer.cancel()
+            elif key not in self._hold_timers:
+                arm_key = key    # idle timer runs from the FIRST hold
+        for batch in batches:
+            self._pack_group(batch, out, free)
+        if arm_key is not None:
+            self._arm_hold_timer(arm_key)
+
+    def _arm_hold_timer(self, key: str) -> None:
+        """Arm (or re-arm) the inactivity timer for a held group; the seen
+        count at arm time lets the flush distinguish a stalled stream from
+        one that is still making progress."""
+        with self._hold_lock:
+            if key not in self._held or key in self._hold_timers:
+                return
+            timer = threading.Timer(self.shard_hold_s, self._flush_held,
+                                    args=(key, self._hold_seen.get(key, 0)))
+            timer.daemon = True
+            self._hold_timers[key] = timer
+        timer.start()
+
+    def _flush_held(self, key: Optional[str] = None,
+                    seen_at_arm: Optional[int] = None) -> None:
+        """Inactivity flush: pack whatever a held group accumulated.
+
+        ``shard_hold_s`` is an idle timeout, not an absolute deadline —
+        while the Emgr is still streaming group members in, the timer
+        re-arms instead of fragmenting the hold into undersized packs
+        (enqueuing a very wide group takes far longer than the timeout).
+        A busy RTS counts as progress too: while carriers are queued or
+        running, the stream only looks stalled because the scheduler is
+        waiting out this group's own earlier quanta (or the GIL is pinned
+        by their stacking) — flushing would just freeze the pack width
+        mid-stream, fragmenting the group far past the planner's dispatch
+        bound. A partial hold flushes only once the RTS is otherwise idle
+        AND the stream made no progress for a full period — i.e. the held
+        members are the only work left."""
+        busy = False
+        if key is not None and seen_at_arm is not None:
+            with self._lock:
+                busy = bool(self._running) or bool(self._queue)
+        with self._hold_lock:
+            rearm = False
+            if key is not None and seen_at_arm is not None:
+                self._hold_timers.pop(key, None)
+                rearm = key in self._held and (
+                    busy or self._hold_seen.get(key, 0) > seen_at_arm)
+            keys = [] if rearm else (
+                [key] if key is not None else list(self._held))
+            flushed: List[List[Task]] = []
+            for k in keys:
+                members = self._held.pop(k, None)
+                self._hold_seen.pop(k, None)
+                timer = self._hold_timers.pop(k, None)
+                if timer is not None:
+                    timer.cancel()
+                if members:
+                    flushed.append(members)
+        if rearm:
+            self._arm_hold_timer(key)
+            return
+        out: List[Task] = []
+        for members in flushed:
+            self._pack_group(members, out, self.free_slots())
+        if out:
+            super().submit(out)
+
+    def _mesh_capable(self) -> bool:
+        """True when the inventory is real jax devices (a unit-test pool of
+        placeholder names cannot host a Mesh)."""
+        if self._meshable is None:
+            try:
+                import jax
+                self._meshable = bool(self._devices) and all(
+                    isinstance(d, jax.Device) for d in self._devices)
+            except Exception:  # noqa: BLE001 - no jax, no mesh
+                self._meshable = False
+        return self._meshable
+
+    def _plan_mesh(self, n_members: int, free: Optional[int],
+                   member_slots: int,
+                   tags: Optional[Dict[str, Any]]) -> Optional[MeshPlan]:
+        """Mesh plan for a wide group, or None → micro-batch lanes.
+
+        The free count is clamped to the scheduler's slot total so a mesh
+        carrier can never be planned wider than the pilot will ever admit
+        (the pool counts logical inventory, which may exceed the pilot),
+        and the mesh is capped at the distinct physical device count —
+        oversubscribed logical slots widen lanes, never meshes."""
+        if not self.shard or not self._mesh_capable():
+            return None
+        if tags is not None and tags.get("_no_shard"):
+            return None
+        if free is not None:
+            free = min(free, self._slots_total)
+        return plan_mesh(n_members, free, member_slots,
+                         max_batch=self.fusion_max_batch,
+                         shard_min_members=self.shard_min_members,
+                         max_devices=len(self._devices))
+
+    def _pack_group(self, members: List[Task], out: List[Task],
+                    free: Optional[int]) -> None:
         spec = self._kernel_spec(members[0])
         if spec is None:
             out.extend(members)   # unmarked kernel: never fuse
             return
+        mesh = self._plan_mesh(len(members), free, members[0].slots,
+                               members[0].tags)
+        if mesh is not None:
+            record = mesh.record()
+            idx = 0
+            for size in mesh.batches:
+                out.append(self._make_carrier(
+                    [members[idx:idx + size]], mesh_shards=mesh.n_shards,
+                    plan=record))
+                idx += size
+            return
         min_batch = (spec.min_batch if spec.min_batch is not None
                      else self.fusion_min_batch)
-        plan = plan_group(len(members), self.free_slots(),
+        plan = plan_group(len(members), free,
                           members[0].slots, min_batch=min_batch,
                           max_batch=self.fusion_max_batch)
         idx = 0
         for size in plan.batches:
-            out.append(self._make_carrier([members[idx:idx + size]]))
+            out.append(self._make_carrier([members[idx:idx + size]],
+                                          plan=plan.record()))
             idx += size
         out.extend(members[idx:])  # below-threshold remainder: scalar
 
     def _assemble_chain(self, per_member: Dict[int, Dict[int, Task]],
-                        out: List[Task]) -> None:
+                        out: List[Task], free: Optional[int] = None) -> None:
         """Build chain carriers from the links present in this submission.
 
         Members are grouped into *cohorts* by the link range they submit
@@ -297,18 +520,28 @@ class JaxRTS(LocalRTS):
                         key = task.tags.get(GROUP_TAG) or "?"
                         regroup.setdefault(key, []).append(task)
                 for members in regroup.values():
-                    self._pack_group(members, out)
+                    self._pack_group(members, out, free)
                 continue
-            sizes = plan_chain(len(member_idxs), self.free_slots(),
-                               per_member[member_idxs[0]][links[0]].slots,
-                               max_batch=self.fusion_max_batch)
+            entry = per_member[member_idxs[0]][links[0]]
             compose = len(links) >= self.fusion_min_chain
+            mesh = self._plan_mesh(len(member_idxs), free, entry.slots,
+                                   entry.tags) if compose else None
+            if mesh is not None:
+                sizes, mesh_shards, record = \
+                    mesh.batches, mesh.n_shards, mesh.record()
+            else:
+                sizes = plan_chain(len(member_idxs), free, entry.slots,
+                                   max_batch=self.fusion_max_batch)
+                mesh_shards, record = 0, {"kind": "fused",
+                                          "lanes": len(sizes), "scalar": 0}
             idx = 0
             for size in sizes:
                 cohort = member_idxs[idx:idx + size]
                 link_lists = [[per_member[m][k] for m in cohort]
                               for k in links]
-                out.append(self._make_carrier(link_lists, compose=compose))
+                out.append(self._make_carrier(link_lists, compose=compose,
+                                              mesh_shards=mesh_shards,
+                                              plan=record))
                 idx += size
 
     @staticmethod
@@ -324,16 +557,23 @@ class JaxRTS(LocalRTS):
         return fusion_spec(fn)
 
     def _make_carrier(self, links: List[List[Task]],
-                      compose: bool = True) -> Task:
-        batch = _FusedBatch(links, compose=compose)
+                      compose: bool = True, mesh_shards: int = 0,
+                      plan: Optional[Dict[str, Any]] = None) -> Task:
+        batch = _FusedBatch(links, compose=compose, mesh_shards=mesh_shards,
+                            plan=plan)
         hints = [m.duration_hint for m in batch.members
                  if m.duration_hint is not None]
         n, width = len(links), len(links[0])
-        name = (f"fused[{width}]:{links[0][0].name}" if n == 1
-                else f"chain[{n}x{width}]:{links[0][0].name}")
+        if mesh_shards:
+            name = f"shard[{mesh_shards}x{n}x{width}]:{links[0][0].name}"
+        else:
+            name = (f"fused[{width}]:{links[0][0].name}" if n == 1
+                    else f"chain[{n}x{width}]:{links[0][0].name}")
         carrier = Task(
             name=name, executable=f"fused://{n}x{width}",
-            slots=links[0][0].slots,
+            # a sharded carrier leases the WHOLE mesh all-or-nothing: one
+            # member-width of slots per mesh device
+            slots=links[0][0].slots * max(1, mesh_shards),
             duration_hint=max(hints) if hints else None)
         with self._fusion_lock:
             self._fused[carrier.uid] = batch
@@ -341,6 +581,8 @@ class JaxRTS(LocalRTS):
                 self._member_carrier[m.uid] = carrier.uid
             if n > 1:
                 self.fusion_stats["chain_carriers"] += 1
+            if mesh_shards:
+                self.fusion_stats["shard_carriers"] += 1
         return carrier
 
     # -- cancellation / introspection over carriers ---------------------------#
@@ -348,7 +590,20 @@ class JaxRTS(LocalRTS):
     def cancel(self, uids: List[str]) -> None:
         """Translate member uids to their carriers: a canceled member is
         skipped at fan-out time; a carrier whose every member is canceled
-        is canceled itself (dequeued, or its dispatch interrupted)."""
+        is canceled itself (dequeued, or its dispatch interrupted). Members
+        still parked in the shard hold buffer are simply dropped."""
+        wanted = set(uids)
+        with self._hold_lock:
+            for k in list(self._held):
+                kept = [t for t in self._held[k] if t.uid not in wanted]
+                if not kept:
+                    self._held.pop(k)
+                    self._hold_seen.pop(k, None)
+                    timer = self._hold_timers.pop(k, None)
+                    if timer is not None:
+                        timer.cancel()
+                elif len(kept) != len(self._held[k]):
+                    self._held[k] = kept
         translated: List[str] = []
         emptied: List[str] = []
         with self._fusion_lock:
@@ -382,7 +637,9 @@ class JaxRTS(LocalRTS):
 
     def in_flight(self) -> List[str]:
         """Member uids, never carrier uids: EnTK's custody, failover and
-        resubmission logic reasons about the tasks it submitted."""
+        resubmission logic reasons about the tasks it submitted. Members
+        parked in the shard hold buffer are in flight too — they have been
+        accepted and will run at the latest when the hold deadline fires."""
         base = super().in_flight()
         with self._fusion_lock:
             out: List[str] = []
@@ -392,7 +649,10 @@ class JaxRTS(LocalRTS):
                     out.append(uid)
                 else:
                     out.extend(batch.pending)
-            return out
+        with self._hold_lock:
+            for ms in self._held.values():
+                out.extend(t.uid for t in ms)
+        return out
 
     def running_since(self) -> Dict[str, float]:
         """Member uids with their carrier's elapsed time: the ExecManager's
@@ -465,14 +725,27 @@ class JaxRTS(LocalRTS):
             return
 
         def deliver(c: TaskCompletion) -> None:
+            if batch.plan is not None:
+                # postmortem perf debugging: every member's journal record
+                # carries the carrier's chosen plan (mesh shape or lanes)
+                c.plan = batch.plan
             with self._fusion_lock:
                 batch.pending.discard(c.uid)
             self._deliver(c)
 
+        mesh_devices = None
+        if batch.mesh_shards:
+            # an oversubscribed pool can lease the same physical device
+            # twice; a mesh needs distinct devices — when the lease
+            # collapses short, run the carrier on the single-device path
+            uniq = list(dict.fromkeys(devices))
+            if len(uniq) >= batch.mesh_shards:
+                mesh_devices = uniq[:batch.mesh_shards]
         exe = fusion_engine.ChainExecution(
             batch.links, devices, cancel_event, deliver,
             canceled=self._fused_canceled,
-            fault_injector=self.fault_injector, compose=batch.compose)
+            fault_injector=self.fault_injector, compose=batch.compose,
+            mesh_devices=mesh_devices)
         # registered BEFORE the dispatches run so the drainer can fan out
         # early links of a chain while a later link is still dispatching
         # (mid-chain journal records exist the moment a link resolves)
