@@ -17,6 +17,10 @@ Two gates share this entry point, selected with ``--bench``:
   fusion: chain-fused throughput may not regress more than ``--factor``
   versus the PR-5 baseline AND the within-run chain/per-stage speedup
   must stay above ``--min-speedup``.
+* ``dag`` — whole-round DAG composition must keep beating per-stage
+  fusion with a scalar reduction: dag-fused throughput may not regress
+  more than ``--factor`` versus the PR-7 baseline AND the within-run
+  dag/per-stage speedup must stay above ``--min-speedup``.
 * ``shard`` — whole-mesh SPMD dispatch must keep up with per-device
   fused dispatch on multi-device hosts: sharded throughput may not
   regress more than ``--factor`` versus the PR-6 baseline AND the
@@ -145,6 +149,14 @@ def check_chain(args) -> int:
                             speedup_label="chain/per-stage")
 
 
+def check_dag(args) -> int:
+    return _check_dataplane(args, bench="dag",
+                            rate_field="dag_tasks_per_s",
+                            speedup_field="speedup_vs_staged",
+                            rate_label="dag-fused",
+                            speedup_label="dag/per-stage")
+
+
 def check_shard(args) -> int:
     cur = _rows(args.current, "shard_", "n_members")
     if not cur:
@@ -170,7 +182,7 @@ def main() -> int:
     ap.add_argument("current", help="bench JSON from this run")
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--bench", choices=("sched", "fusion", "chain",
-                                        "shard"),
+                                        "shard", "dag"),
                     default="sched")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed regression ratio vs the baseline")
@@ -182,6 +194,8 @@ def main() -> int:
         return check_sched(args)
     if args.bench == "shard":
         return check_shard(args)
+    if args.bench == "dag":
+        return check_dag(args)
     return check_fusion(args) if args.bench == "fusion" else check_chain(args)
 
 

@@ -1,0 +1,179 @@
+"""DAG-fusion benchmark: per-stage fused vs whole-round composed dispatch.
+
+The scenario DAG fusion exists for: an adaptive ``repeat_until`` loop whose
+every round is the diamond ``ensemble → gather → broadcast → ensemble`` —
+the shape of the AnEn rounds (analogs → spread → refine) and of ensemble
+Kalman / consensus methods generally. Three executions of the IDENTICAL
+description:
+
+* **scalar** — ``fuse=False``: one task per member per node, the
+  pre-fusion toolkit. The semantic reference: both fused paths must
+  reproduce its values within the 1e-4 relative-drift gate.
+* **staged** — ``fuse=True, dag=False``: the PR-4/5 engine; each ensemble
+  node is a batched dispatch but the reduction runs scalar on the host,
+  so every round pays two stage barriers, a host gather of every member
+  value, and a host broadcast re-stack before the next node starts.
+* **dag** — ``fuse=True, dag=True`` (the default): the compiler tags the
+  round's node path, the WFProcessor superstages it, and the JaxRTS runs
+  the WHOLE round — both ensembles plus the device-side segment
+  reduction and the broadcast — as ONE composed dispatch per round.
+
+All three run the same AppManager, scheduler core and JaxRTS on the same
+host, so dag_s vs staged_s isolates exactly what the fused reduction data
+plane buys (and the values gate proves it was not bought with drift).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import api
+from repro.fusion import fusable, fusable_reduction
+from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+
+#: kernel sizing: the (192, 192) fp32 field makes the member VALUES what
+#: the round moves (~147 KB each, ~147 MB per node at 1k members):
+#: per-stage execution hauls every member's field through the host at the
+#: reduction (stack + np.mean in a scalar task) and re-stacks the batch
+#: for the broadcast stage, while the DAG path keeps all of it inside one
+#: composed program — exactly the traffic the fused reduction eliminates.
+#: Deliberately NOT larger: gigabyte-scale stacked buffers (e.g. a
+#: (384, 384) field at 1k members) push every path into erratic
+#: allocator/bandwidth behaviour on small hosts and the measurement stops
+#: reproducing; at this size repeated runs agree to a few percent. The
+#: structural metric is exact either way: one composed dispatch per round
+#: versus ~60 per-stage dispatches (``dispatches_per_round`` is gated at
+#: 1.0, and the run raises on any drift from the scalar reference).
+_SIZE = 192
+_DEPTH = 4
+_ROUNDS = 3
+
+
+@fusable(static_argnames=("size", "depth"))
+def dag_member(field, size: int = _SIZE, depth: int = _DEPTH):
+    """Round node A for one member: seed/evolve a (size, size) field.
+
+    sin/cos keep the values bounded, so any number of rounds stays
+    numerically stable; the field-valued output is what the round's
+    reduction consumes (fan-in) and what carries elementwise into node B.
+    """
+    import jax.numpy as jnp
+    a = jnp.asarray(field, jnp.float32)
+    if a.ndim == 0:
+        a = jnp.full((size, size), a, jnp.float32)
+    for _ in range(depth):
+        a = jnp.sin(a) + 0.1 * jnp.cos(a)
+    return a
+
+
+@fusable(static_argnames=())
+def dag_recenter(a, center=0.0):
+    """Round node B for one member: re-center the member's field around
+    the round's ensemble mean — ``center`` is the broadcast fan-out of the
+    reduction, ``a`` the elementwise carry from node A (the diamond)."""
+    import jax.numpy as jnp
+    return jnp.asarray(a, jnp.float32) - 0.5 * jnp.asarray(
+        center, jnp.float32)
+
+
+@fusable_reduction(kind="mean")
+def ensemble_mean(values) -> float:
+    """Round fan-in: the ensemble-mean field value (all members, all
+    elements) — scalar body = ``np.mean`` over the stacked values, fused
+    body = the engine's masked device-side mean (``psum`` when sharded)."""
+    return float(np.mean([np.asarray(v) for v in values]))
+
+
+def _run_once(n_members: int, rounds: int, slots: int, *, fuse: bool,
+              dag: bool, timeout: float) -> Dict:
+    final: Dict = {}
+
+    def body(ctx):
+        # seeds vary per round but are host scalars: the member FIELDS
+        # stay on the round's data plane (reading every member's array
+        # back at each round boundary would add an identical host-transfer
+        # tax to all three paths, masking what the bench isolates)
+        k = ctx.round + 1
+        seeds = [{"field": float(i) / (n_members * k)}
+                 for i in range(n_members)]
+        e0 = api.ensemble(dag_member, over=seeds,
+                          name=f"dg{ctx.round}a", fuse=fuse)
+        r = api.gather(e0, ensemble_mean, name=f"dg{ctx.round}r")
+        e1 = e0.then(dag_recenter, name=f"dg{ctx.round}b", arg="a",
+                     over=[{"center": r.out} for _ in range(n_members)],
+                     fuse=fuse)
+        final["stage"] = e1
+        return e1
+
+    loop = api.repeat_until(lambda ctx: ctx.round >= rounds - 1, body,
+                            name="dgloop", max_rounds=rounds)
+    holder: Dict = {}
+
+    def factory():
+        holder["rts"] = JaxRTS(slot_oversubscribe=slots)
+        return holder["rts"]
+
+    t0 = time.time()
+    result = api.run(loop, resources=ResourceDescription(slots=slots),
+                     rts_factory=factory, dag=dag, timeout=timeout)
+    elapsed = time.time() - t0
+    values = [float(np.asarray(s.out.result()).mean())
+              for s in final["stage"].specs]
+    stats = dict(holder["rts"].fusion_stats)
+    out = {"elapsed_s": elapsed, "values": values,
+           "all_done": result.all_done, "stats": stats}
+    result.close()
+    return out
+
+
+def _drift(ref: List[float], got: List[float]) -> float:
+    a, b = np.asarray(ref), np.asarray(got)
+    return float(np.max(np.abs(a - b) / np.maximum(1e-9, np.abs(a))))
+
+
+def run(quick: bool = False, slots: int = 4, rounds: int = _ROUNDS,
+        sizes: "tuple[int, ...]" = ()) -> List[Dict]:
+    if not sizes:
+        sizes = (250,) if quick else (250, 1_000)
+    # warm jax's global first-dispatch setup outside the measurement (each
+    # path still pays its own first trace inside its run)
+    dag_member(0.5)
+    rows = []
+    for n in sizes:
+        timeout = max(600.0, n * rounds * 0.1)
+        scalar = _run_once(n, rounds, slots, fuse=False, dag=False,
+                           timeout=timeout)
+        staged = _run_once(n, rounds, slots, fuse=True, dag=False,
+                           timeout=timeout)
+        fused = _run_once(n, rounds, slots, fuse=True, dag=True,
+                          timeout=timeout)
+        # 2 ensemble nodes of n members + 1 reduction, per round
+        n_tasks = rounds * (2 * n + 1)
+        rows.append({
+            "n_members": n,
+            "rounds": rounds,
+            "scalar_s": scalar["elapsed_s"],
+            "staged_s": staged["elapsed_s"],
+            "dag_s": fused["elapsed_s"],
+            "staged_tasks_per_s": n_tasks / staged["elapsed_s"],
+            "dag_tasks_per_s": n_tasks / fused["elapsed_s"],
+            "speedup_vs_staged": staged["elapsed_s"] / fused["elapsed_s"],
+            "speedup_vs_scalar": scalar["elapsed_s"] / fused["elapsed_s"],
+            "dag_carriers": fused["stats"]["dag_carriers"],
+            # the acceptance shape: a whole repeat_until round is ONE
+            # composed dispatch on the dag path
+            "dag_dispatches": fused["stats"]["dispatches"],
+            "dispatches_per_round": fused["stats"]["dispatches"] / rounds,
+            "staged_dispatches": staged["stats"]["dispatches"],
+            # drift vs the scalar reference: the gate that proves the
+            # fused reduction did not buy its speed with wrong values
+            "staged_drift": _drift(scalar["values"], staged["values"]),
+            "dag_drift": _drift(scalar["values"], fused["values"]),
+            "all_done": (scalar["all_done"] and staged["all_done"]
+                         and fused["all_done"]),
+        })
+    return rows

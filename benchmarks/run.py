@@ -217,6 +217,39 @@ def shard_throughput(quick: bool) -> None:
         raise RuntimeError(f"shard drift/incomplete at sizes: {bad}")
 
 
+def dag_throughput(quick: bool) -> None:
+    from benchmarks import dag
+    rows = dag.run(quick)
+    for r in rows:
+        _row(f"dag_{r['n_members']}", 1e6 / max(1e-9,
+                                                r["dag_tasks_per_s"]),
+             n_members=r["n_members"],
+             rounds=r["rounds"],
+             scalar_s=round(r["scalar_s"], 2),
+             staged_s=round(r["staged_s"], 2),
+             dag_s=round(r["dag_s"], 2),
+             staged_tasks_per_s=round(r["staged_tasks_per_s"], 1),
+             dag_tasks_per_s=round(r["dag_tasks_per_s"], 1),
+             speedup_vs_staged=round(r["speedup_vs_staged"], 2),
+             speedup_vs_scalar=round(r["speedup_vs_scalar"], 2),
+             dag_carriers=r["dag_carriers"],
+             dag_dispatches=r["dag_dispatches"],
+             dispatches_per_round=r["dispatches_per_round"],
+             staged_dispatches=r["staged_dispatches"],
+             dag_drift=r["dag_drift"],
+             staged_drift=r["staged_drift"],
+             all_done=r["all_done"])
+    # both fused paths must reproduce the scalar path's values, and a
+    # whole round must really be ONE composed dispatch — otherwise the
+    # bench (and the CI smoke job) fails outright
+    bad = [r["n_members"] for r in rows
+           if not r["all_done"] or r["dag_drift"] > 1e-4
+           or r["staged_drift"] > 1e-4 or r["dispatches_per_round"] > 1]
+    if bad:
+        raise RuntimeError(f"dag drift/incomplete/multi-dispatch at "
+                           f"sizes: {bad}")
+
+
 def fed_throughput(quick: bool) -> None:
     from benchmarks import federation
     rows = federation.run(quick)
@@ -278,6 +311,7 @@ BENCHES = {
     "fusion": fusion_throughput,
     "chain": chain_throughput,
     "shard": shard_throughput,
+    "dag": dag_throughput,
     "roofline": roofline_table,
 }
 
@@ -290,7 +324,7 @@ TRAJECTORY = "BENCH_fusion.json"
 def _append_trajectory(picks: "list[str]", quick: bool) -> None:
     import os
     rows = [r for r in _ROWS
-            if r["name"].startswith(("fusion_", "chain_", "shard_"))
+            if r["name"].startswith(("fusion_", "chain_", "shard_", "dag_"))
             and not r["name"].endswith("_ERROR")]
     if not rows:
         return

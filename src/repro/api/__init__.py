@@ -88,22 +88,24 @@ def run(
     chain: bool = True,
     min_chain: Optional[int] = None,
     shard: bool = True,
+    dag: bool = True,
     **appmanager_kwargs: Any,
 ) -> RunResult:
     """Compile and execute a declarative workflow in one call.
 
     All keyword arguments beyond ``resources``/``name``/``timeout``/
-    ``resume``/``chain``/``min_chain``/``shard`` go to
+    ``resume``/``chain``/``min_chain``/``shard``/``dag`` go to
     :class:`~repro.core.appmanager.AppManager` — ``rts_factory=`` for a
     specific runtime, a list of resource descriptions (plus optional
     factory list) for a federated fleet, ``journal_path=`` for
     durable/resumable runs. ``chain=False`` (or a higher ``min_chain``)
-    opts out of cross-stage chain fusion; ``shard=False`` opts out of SPMD
-    mesh sharding on multi-device runtimes; ``fuse=False`` on an ensemble
-    opts out of fusion entirely.
+    opts out of cross-stage chain fusion; ``dag=False`` keeps
+    ``@fusable_reduction`` gathers scalar (chains still fuse);
+    ``shard=False`` opts out of SPMD mesh sharding on multi-device
+    runtimes; ``fuse=False`` on an ensemble opts out of fusion entirely.
     """
     compile_kwargs: Dict[str, Any] = {"name": name, "chain": chain,
-                                      "shard": shard}
+                                      "shard": shard, "dag": dag}
     if min_chain is not None:
         compile_kwargs["min_chain"] = min_chain
     compiled = compile_workflow(*nodes, **compile_kwargs)

@@ -40,7 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Union
 from ..core import uid
 from ..core.pst import Pipeline, Stage, Task
 from ..core.results import STORE
-from ..fusion.groups import CHAIN_TAG, chain_tag
+from ..fusion.groups import (CHAIN_TAG, DAG_TAG, chain_tag, dag_tag,
+                             reduction_spec)
 from ..fusion.plans import DEFAULT_MIN_CHAIN
 from .combinators import (Branch, DecisionContext, Loop, LoopContext)
 from .errors import CompileError
@@ -106,7 +107,7 @@ class _Ctx:
 
     def __init__(self, ns: str, wf_name: str, chain: bool = True,
                  min_chain: int = DEFAULT_MIN_CHAIN,
-                 shard: bool = True) -> None:
+                 shard: bool = True, dag: bool = True) -> None:
         self.ns = ns
         self.wf_name = wf_name
         self.used_names: Set[str] = set()
@@ -117,6 +118,10 @@ class _Ctx:
         # documented opt-outs
         self.chain = chain
         self.min_chain = max(2, int(min_chain))
+        # DAG fusion (fan-in reductions + broadcast fan-out) rides on the
+        # same superstage machinery; dag=False keeps reductions scalar while
+        # linear chains still fuse, chain=False disables both
+        self.dag = dag
         # shard=False stamps a _no_shard tag on fused members: the RTS then
         # plans micro-batch lanes only, never an SPMD mesh
         self.shard = shard
@@ -297,6 +302,11 @@ def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
         # superstage scheduler and a chain-capable RTS read this tag to
         # hand off / compose whole chains instead of one stage at a time
         task.tags[CHAIN_TAG] = dict(spec._chain_tag)
+    if spec._dag_tag is not None:
+        # DAG detection placed this task on a fused fan-in/fan-out DAG:
+        # same hand-off machinery, with the reduction executed device-side
+        # inside the carrier
+        task.tags[DAG_TAG] = dict(spec._dag_tag)
     spec.task = task
     spec.ns = ctx.ns
     return task
@@ -354,6 +364,230 @@ def _elementwise_pred(ens) -> Optional["tuple[Any, str]"]:
     return pred, names.pop()
 
 
+# --------------------------------------------------------------------------- #
+# DAG detection (perf: fan-in/fan-out fusion — reductions inside the carrier)
+# --------------------------------------------------------------------------- #
+
+def _whole_ensembles(units: List[TaskSpec]) -> List[Any]:
+    """Fusable ensembles FULLY contained in this unit set, in unit order,
+    none of whose members are already claimed by a chain or a DAG."""
+    member = {id(u) for u in units}
+    present: Dict[int, int] = {}
+    ensembles: List[Any] = []
+    for u in units:
+        ens = u._ens
+        if (ens is None or u.fusion_group is None or u.dynamic is not None
+                or u._chain_tag is not None or u._dag_tag is not None):
+            continue
+        if id(ens) not in present:
+            present[id(ens)] = 0
+            ensembles.append(ens)
+        present[id(ens)] += 1
+    return [e for e in ensembles
+            if present[id(e)] == len(e.specs)
+            and all(id(s) in member for s in e.specs)]
+
+
+def _reduce_edge(spec: TaskSpec, whole_ids: Set[int]
+                 ) -> Optional["tuple[Any, Any]"]:
+    """If ``spec`` is a fusable reduction consuming exactly one whole
+    ensemble, return ``(ensemble, ReductionSpec)``; else None.
+
+    The fan-in anchor is the ``api.gather`` shape: a single positional
+    argument that is the full, index-aligned list of one ensemble's member
+    futures — nothing else flows in (no kwargs futures, no ``after=``),
+    and the reducer is ``@fusable_reduction``-marked (commutative). The
+    reducer must share the ensemble's slots/backend so one lease shape
+    (and one Emgr width bucket) covers the whole DAG.
+    """
+    if (spec._ens is not None or spec.dynamic is not None
+            or spec._chain_tag is not None or spec._dag_tag is not None
+            or isinstance(spec.fn, str)):
+        return None
+    rspec = reduction_spec(spec.fn)
+    if rspec is None or spec.after or _has_future(spec.kwargs):
+        return None
+    if len(spec.args) != 1 or not isinstance(spec.args[0], (list, tuple)):
+        return None
+    futs = list(spec.args[0])
+    if not futs or not all(isinstance(f, Future) and f.key is None
+                           for f in futs):
+        return None
+    ens = getattr(futs[0].owner, "_ens", None)
+    if ens is None or id(ens) not in whole_ids:
+        return None
+    if len(futs) != len(ens.specs) or any(
+            f.owner is not s for f, s in zip(futs, ens.specs)):
+        return None
+    first = ens.specs[0]
+    if spec.slots != first.slots or spec.backend != first.backend:
+        return None
+    return ens, rspec
+
+
+def _dag_fanout_edge(ens, red_by_id: Dict[int, "tuple[Any, Any, Any]"]
+                     ) -> Optional["tuple[Any, Optional[str], Any, str]"]:
+    """If every member of ``ens`` consumes one reducer's output under one
+    common kwarg, return ``(reducer spec, carry kwarg | None,
+    carry pred ensemble | None, broadcast kwarg)``; else None.
+
+    This is the fan-out shape: the reduction's scalar/array value enters
+    every member as a *shared* (broadcast) argument. Members may
+    additionally carry elementwise from an upstream ensemble (the diamond
+    ``A → reduce → B`` with ``A → B`` member-aligned), under one common
+    kwarg with index-aligned owners — exactly the chain-carry discipline.
+    """
+    rows = []
+    for s in ens.specs:
+        if s.after or _has_future(s.args):
+            return None
+        c = b = None
+        for k, v in s.kwargs.items():
+            if isinstance(v, Future):
+                if v.key is not None:
+                    return None
+                if id(v.owner) in red_by_id:
+                    if b is not None:
+                        return None
+                    b = (k, v.owner)
+                else:
+                    if c is not None:
+                        return None
+                    c = (k, v.owner)
+            elif _has_future(v):
+                return None
+        if b is None:
+            return None
+        rows.append((c, b))
+    reducer, bname = rows[0][1][1], rows[0][1][0]
+    if any(b[1] is not reducer or b[0] != bname for _, b in rows):
+        return None
+    carries = [c for c, _ in rows]
+    carry_name = carry_pred = None
+    if any(c is not None for c in carries):
+        if any(c is None for c in carries):
+            return None
+        names = {c[0] for c in carries}
+        if len(names) != 1:
+            return None
+        carry_name = names.pop()
+        owners = [c[1] for c in carries]
+        carry_pred = getattr(owners[0], "_ens", None)
+        if (carry_pred is None or carry_pred is ens
+                or len(carry_pred.specs) != len(ens.specs)
+                or any(o is not p for o, p in zip(owners,
+                                                  carry_pred.specs))):
+            return None
+    if any(s.slots != reducer.slots or s.backend != reducer.backend
+           for s in ens.specs):
+        return None
+    return reducer, carry_name, carry_pred, bname
+
+
+def _detect_dags(units: List[TaskSpec], ctx: _Ctx) -> None:
+    """Tag linear node sequences with fan-in/fan-out reductions as DAGs.
+
+    A fused DAG is a path of NODES — fusable ensembles (role "e") and
+    marked reductions (role "r") — where consecutive nodes are connected
+    by elementwise carries, whole-ensemble fan-in, or broadcast fan-out.
+    At least one reduction must be on the path (pure elementwise runs stay
+    chains, see :func:`_detect_chains`, which runs after this and skips
+    DAG-claimed specs). Runs per ``_plan`` call, so adaptive rounds get
+    their round DAG (``ensemble → gather → broadcast → ensemble``) tagged
+    exactly like the static prefix. Tagging is advisory, same contract as
+    chains: a DAG-incapable RTS executes the stages per-stage-fused.
+    """
+    if not (ctx.dag and ctx.chain):
+        return
+    whole = _whole_ensembles(units)
+    if not whole:
+        return
+    whole_ids = {id(e) for e in whole}
+
+    # fan-in edges; an ensemble reduced by two gathers is a genuine
+    # fan-out of its member values — ambiguous, drop both reducers
+    red_by_id: Dict[int, "tuple[Any, Any, Any]"] = {}  # id(spec)->(spec,ens,rspec)
+    fan_in_of: Dict[int, TaskSpec] = {}
+    conflicted: Set[int] = set()
+    for u in units:
+        got = _reduce_edge(u, whole_ids)
+        if got is None:
+            continue
+        ens, rspec = got
+        if id(ens) in fan_in_of:
+            conflicted.add(id(ens))
+            continue
+        fan_in_of[id(ens)] = u
+        red_by_id[id(u)] = (u, ens, rspec)
+    for eid in conflicted:
+        r = fan_in_of.pop(eid, None)
+        if r is not None:
+            red_by_id.pop(id(r), None)
+    if not red_by_id:
+        return
+
+    # linearize: one successor per node, chain-style fan-out discipline
+    succ: Dict[int, Any] = {}
+    pred_edge: Dict[int, Dict[str, Any]] = {}
+    fanout: Set[int] = set()
+
+    def add_edge(src, dst, a=None, b=None):
+        if id(src) in succ:
+            fanout.add(id(src))
+            return
+        succ[id(src)] = dst
+        pred_edge[id(dst)] = {"pred": src, "a": a, "b": b}
+
+    for u, ens, _rspec in red_by_id.values():
+        add_edge(ens, u)
+    for ens in whole:
+        out_edge = _dag_fanout_edge(ens, red_by_id)
+        if out_edge is not None:
+            reducer, carry_name, carry_pred, bname = out_edge
+            # a diamond's elementwise carry must come from the ensemble
+            # the reduction consumed (the node right before it on the
+            # path) — anything else is not a linear node sequence
+            src_ens = red_by_id[id(reducer)][1]
+            if carry_name is not None and carry_pred is not src_ens:
+                continue
+            add_edge(reducer, ens, a=carry_name, b=bname)
+            continue
+        in_edge = _elementwise_pred(ens)
+        if in_edge is not None and id(in_edge[0]) in whole_ids:
+            add_edge(in_edge[0], ens, a=in_edge[1])
+    for src in fanout:
+        dst = succ.pop(src, None)
+        if dst is not None:
+            pred_edge.pop(id(dst), None)
+
+    # maximal paths from ensemble heads; tag only reduction-bearing ones
+    for head in whole:
+        if id(head) in pred_edge or id(head) not in succ:
+            continue
+        path: List[Any] = [head]
+        cur = head
+        while id(cur) in succ:
+            cur = succ[id(cur)]
+            path.append(cur)
+        if not any(id(n) in red_by_id for n in path):
+            continue
+        did = ctx.fresh(f"{ctx.wf_name}-dag")
+        n = len(path)
+        for k, node in enumerate(path):
+            if id(node) in red_by_id:
+                _, _, rspec = red_by_id[id(node)]
+                node._dag_tag = dag_tag(
+                    did, k, 0, n, width=1, role="r",
+                    kind=None if rspec.combine is not None else rspec.kind)
+            else:
+                edge = pred_edge.get(id(node)) or {}
+                w = len(node.specs)
+                for m, spec in enumerate(node.specs):
+                    spec._dag_tag = dag_tag(
+                        did, k, m, n, width=w, role="e",
+                        carry=edge.get("a"), broadcast=edge.get("b"))
+
+
 def _detect_chains(units: List[TaskSpec], ctx: _Ctx) -> None:
     """Tag linear chains of fusable elementwise ensemble stages.
 
@@ -366,21 +600,8 @@ def _detect_chains(units: List[TaskSpec], ctx: _Ctx) -> None:
     if not ctx.chain:
         return
     # fusable ensembles fully contained in this unit set, in unit order
-    present: Dict[int, int] = {}
-    ensembles: List[Any] = []
-    member = {id(u) for u in units}
-    for u in units:
-        ens = u._ens
-        if (ens is None or u.fusion_group is None or u.dynamic is not None
-                or u._chain_tag is not None):
-            continue
-        if id(ens) not in present:
-            present[id(ens)] = 0
-            ensembles.append(ens)
-        present[id(ens)] += 1
-    whole = [e for e in ensembles
-             if present[id(e)] == len(e.specs)
-             and all(id(s) in member for s in e.specs)]
+    # (DAG detection ran first and claimed its nodes — skipped here)
+    whole = _whole_ensembles(units)
     if len(whole) < 2:
         return
     whole_ids = {id(e) for e in whole}
@@ -444,9 +665,11 @@ def _plan(units: List[TaskSpec], ctx: _Ctx, prefix: str,
         return []
     member = {id(u) for u in units}
 
-    # chain fusion: tag linear runs of fusable elementwise ensemble stages
-    # before tasks are built (adaptive rounds re-enter here at runtime, so
-    # their chains are detected too)
+    # fusion detection before tasks are built (adaptive rounds re-enter
+    # here at runtime, so their round DAGs/chains are detected too): DAGs
+    # first — they claim reduction-bearing paths — then linear chains over
+    # whatever is left
+    _detect_dags(units, ctx)
     _detect_chains(units, ctx)
 
     # names first: every error message and placeholder needs them
@@ -722,7 +945,8 @@ def compile_workflow(*nodes: Union[Node, Future],
                      name: Optional[str] = None,
                      chain: bool = True,
                      min_chain: int = DEFAULT_MIN_CHAIN,
-                     shard: bool = True) -> Compiled:
+                     shard: bool = True,
+                     dag: bool = True) -> Compiled:
     """Compile a declarative description into PST pipelines.
 
     Weakly-connected components of the task DAG become separate (and
@@ -740,20 +964,29 @@ def compile_workflow(*nodes: Union[Node, Future],
     groups then execute as per-device micro-batch lanes even on a
     multi-device runtime (``JaxRTS(shard_min_members=n)`` is the
     runtime-side knob for tuning rather than disabling).
+
+    ``dag``: node paths carrying a ``@fusable_reduction`` fan-in (and an
+    optional broadcast fan-out into the next ensemble) are tagged as
+    fusion *DAGs*, which a DAG-capable RTS executes as ONE composed
+    dispatch — the reduction runs device-side inside the carrier.
+    ``dag=False`` keeps reductions scalar (chains still fuse);
+    ``chain=False`` disables both cross-stage tiers.
     """
     if not nodes:
         raise CompileError("compile() needs at least one node")
     ns = uid.generate("wf")
     wf_name = name or ns
-    ctx = _Ctx(ns, wf_name, chain=chain, min_chain=min_chain, shard=shard)
+    ctx = _Ctx(ns, wf_name, chain=chain, min_chain=min_chain, shard=shard,
+               dag=dag)
     units = _collect_units(list(nodes), ns)
     if not units:
         raise CompileError("compile() found no tasks to run — every input "
                            "was already compiled elsewhere")
-    # chain detection over the FULL unit graph, before the component split
-    # below partitions independent member chains into separate pipelines
-    # (each member's a->b->c run is its own weakly-connected component when
-    # nothing downstream joins them)
+    # DAG + chain detection over the FULL unit graph, before the component
+    # split below partitions independent member chains into separate
+    # pipelines (each member's a->b->c run is its own weakly-connected
+    # component when nothing downstream joins them)
+    _detect_dags(units, ctx)
     _detect_chains(units, ctx)
 
     # weakly-connected components -> independent pipelines

@@ -120,11 +120,12 @@ class TaskSpec(Node):
         self._claimed = False             # name registered with the compiler
         # adaptive combinators attach themselves here (compiler internals)
         self.dynamic = None
-        # chain-fusion bindings (compiler internals): the Ensemble this spec
-        # is a member of, and the CHAIN_TAG dict once chain detection has
-        # placed the member on a fused chain
+        # chain/DAG-fusion bindings (compiler internals): the Ensemble this
+        # spec is a member of, and the CHAIN_TAG / DAG_TAG dict once
+        # detection has placed the member on a fused chain or fused DAG
         self._ens = None
         self._chain_tag: Optional[Dict[str, Any]] = None
+        self._dag_tag: Optional[Dict[str, Any]] = None
 
     # -- Node --------------------------------------------------------------- #
 

@@ -26,7 +26,7 @@ import numpy as np
 
 from ... import api
 from ...core import AppManager, register_executable
-from ...fusion import fusable
+from ...fusion import fusable, fusable_reduction
 from ...rts.base import ResourceDescription
 from ...rts.jax_rts import JaxRTS
 from .anen import (AnEnConfig, compute_analogs, gradient_magnitude,
@@ -120,6 +120,40 @@ def analog_refine(values, lo: float = 0.0, hi: float = 1.0):
 
 
 register_executable("analog_refine", analog_refine)
+
+
+@fusable_reduction(kind="max")
+def round_spread(values) -> float:
+    """Round fan-in: the largest analog estimate of the round — a cheap
+    convergence statistic (the adaptive criterion watches the estimate's
+    dynamic range tighten as fronts get resolved).
+
+    ``kind="max"`` makes the whole round a fusable DAG
+    (``analog_values → analog_refine → max``): a DAG-capable RTS runs one
+    composed dispatch per round, with the reduction executing device-side
+    over the refined member values (``psum``-free — max is also safe over
+    the engine's edge-replicated pad rows). Scalar execution keeps the
+    plain ``np.max`` body bit-for-bit.
+    """
+    return float(np.max([np.max(np.asarray(v)) for v in values]))
+
+
+register_executable("round_spread", round_spread)
+
+
+class _RoundNode(api.Node):
+    """What :meth:`_SearchState.make_round` returns: the refine ensemble's
+    member futures PLUS the round's spread reduction. The loop's check
+    stage collects all of them (``absorb`` zips results against the round's
+    location slices, so the trailing spread value is simply extra), while
+    the gather's presence is what turns the round into a fusable DAG."""
+
+    def __init__(self, refine: api.Ensemble, spread) -> None:
+        self.refine = refine
+        self.spread = spread
+
+    def futures(self):
+        return list(self.refine.futures()) + list(self.spread.futures())
 
 
 class _SearchState:
@@ -236,16 +270,19 @@ class _SearchState:
 
     # ---- declarative description ------------------------------------------- #
 
-    def make_round(self, ctx: api.LoopContext) -> api.Ensemble:
-        """One iteration: a 2-link chain of ensembles over location slices
-        (``analog_values → analog_refine``, elementwise per slice).
+    def make_round(self, ctx: api.LoopContext) -> api.Node:
+        """One iteration: a fusable DAG over location slices
+        (``analog_values → analog_refine → max``, elementwise between the
+        first two links, whole-round fan-in at the spread gather).
 
         ``ctx.results`` (the previous round's values) were absorbed by
         :meth:`converged` before this builder runs, so proposals always see
         the up-to-date estimate — including on journal resume, where rounds
-        replay in order through the same two hooks. Chain detection runs
-        when the round is planned at runtime, so every adaptive round gets
-        the composed-dispatch data plane, not just static workflows.
+        replay in order through the same two hooks. DAG/chain detection
+        runs when the round is planned at runtime, so every adaptive round
+        gets the composed-dispatch data plane — a DAG-capable RTS executes
+        the whole round (both links plus the device-side reduction) as ONE
+        dispatch — not just static workflows.
         """
         locs = self.propose(self.per_iter)
         slices = [sl for sl in np.array_split(locs, self.n_tasks)
@@ -258,11 +295,15 @@ class _SearchState:
                    "locations": sl.tolist()} for sl in slices],
             name=f"{self.method}-it{ctx.round}-{self.seed}",
             max_retries=1, fuse=self.fuse)
-        return search.then(
+        refine = search.then(
             analog_refine,
             over=[{"lo": self.obs_lo, "hi": self.obs_hi} for _ in slices],
             name=f"{self.method}-it{ctx.round}-{self.seed}-ref",
             max_retries=1, fuse=self.fuse)
+        spread = api.gather(
+            refine, round_spread,
+            name=f"{self.method}-it{ctx.round}-{self.seed}-spread")
+        return _RoundNode(refine, spread)
 
     def converged(self, ctx: api.LoopContext) -> bool:
         """repeat_until predicate: absorb the finished round, then decide."""

@@ -18,7 +18,7 @@ import numpy as np
 
 from ... import api
 from ...core import AppManager, Pipeline, Stage, Task, register_executable
-from ...fusion import fusable
+from ...fusion import fusable, fusable_reduction
 from ...rts.base import ResourceDescription
 from ...rts.jax_rts import JaxRTS
 from ...rts.local import LocalRTS
@@ -187,8 +187,15 @@ def run_misfit_chain(n_events: int, slots: int = 4, *, nx: int = 64,
     return out
 
 
+@fusable_reduction(kind="sum")
 def total_misfit(values: List) -> float:
-    """Gather: the ensemble objective Σ_sources misfit(source)."""
+    """Gather: the ensemble objective Σ_sources misfit(source).
+
+    ``@fusable_reduction(kind="sum")`` lets ``api.compile`` fold this
+    fan-in into the sweep's ``_fusion_dag`` plan: the whole
+    forward → misfit → Σ aggregation becomes one device-side dispatch
+    (sharded sweeps reduce via ``psum`` across the mesh), while the scalar
+    body keeps running unchanged everywhere fusion is off."""
     return float(np.sum([np.asarray(v) for v in values]))
 
 

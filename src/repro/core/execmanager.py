@@ -42,9 +42,22 @@ from .state_service import StateService
 from .wfprocessor import DONE_QUEUE, PENDING_QUEUE
 from ..rts.base import RTS, ResourceDescription, TaskCompletion
 
-#: Task.tags key of a fused-chain link (literal: the core never imports the
-#: fusion package; the api compiler stamps it, the JaxRTS consumes it).
+#: Task.tags keys of a fused-chain link / fused-DAG node (literals: the core
+#: never imports the fusion package; the api compiler stamps them, the
+#: JaxRTS consumes them).
 CHAIN_TAG = "_fusion_chain"
+DAG_TAG = "_fusion_dag"
+
+
+def _flow_tag(task: Task) -> Optional[dict]:
+    """The task's chain OR DAG tag (a task is on at most one flow). Both
+    carry ``c``/``k``/``m`` and an ``ss`` superstage extent; a DAG tag
+    additionally carries ``w`` (its node's full width), which is what the
+    readiness rule keys on."""
+    tag = task.tags.get(CHAIN_TAG)
+    if tag is None:
+        tag = task.tags.get(DAG_TAG)
+    return tag if isinstance(tag, dict) else None
 
 
 class ExecManager:
@@ -232,9 +245,11 @@ class ExecManager:
                                 task.slots, deque()).append(
                                     (next(self._backlog_seq), task))
                             self._backlog_uids.add(uid)
-                            if CHAIN_TAG in task.tags:
-                                # arms the whole-chain hand-off machinery;
-                                # chain-free workloads never pay its scan
+                            if (CHAIN_TAG in task.tags
+                                    or DAG_TAG in task.tags):
+                                # arms the whole-chain/DAG hand-off
+                                # machinery; flow-free workloads never pay
+                                # its scan
                                 self._has_chain_backlog = True
                 self.broker.ack_many(PENDING_QUEUE, [t for t, _ in msgs])
                 self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
@@ -376,17 +391,26 @@ class ExecManager:
         seen: set = set()
         waiting: Dict[str, set] = {}
         arrived: Dict[str, set] = {}
+        dag_ids: set = set()
+        dag_width: Dict[str, int] = {}   # DAG id -> terminal node width
         for dq in self._backlog.values():
             for _, task in dq:
-                tag = task.tags.get(CHAIN_TAG)
-                if not isinstance(tag, dict):
+                tag = _flow_tag(task)
+                if tag is None:
                     continue
-                seen.add(tag.get("c"))
+                c = tag.get("c")
+                seen.add(c)
+                if "w" in tag:
+                    dag_ids.add(c)
                 ss = tag.get("ss")
                 if not isinstance(ss, int):
                     continue  # never co-published: nothing to wait for
-                side = arrived if tag.get("k") == ss else waiting
-                side.setdefault(tag.get("c"), set()).add(tag.get("m"))
+                if tag.get("k") == ss:
+                    arrived.setdefault(c, set()).add(tag.get("m"))
+                    if isinstance(tag.get("w"), int):
+                        dag_width[c] = tag["w"]
+                else:
+                    waiting.setdefault(c, set()).add(tag.get("m"))
         if not seen:
             # the last chain drained: stop paying the scan until the next
             # chain-tagged task enters the backlog
@@ -404,16 +428,29 @@ class ExecManager:
         # the in-flight links' result routing exactly like a split fragment
         busy = set()
         for task in self._submitted.values():
-            tag = task.tags.get(CHAIN_TAG)
-            if isinstance(tag, dict):
+            tag = _flow_tag(task)
+            if tag is not None:
                 busy.add(tag.get("c"))
-        return {c for c in set(waiting) | set(arrived)
-                if c not in busy
-                and waiting.get(c, set()) <= arrived.get(c, set())}
+        ready = set()
+        for c in set(waiting) | set(arrived):
+            if c in busy:
+                continue
+            if c in dag_ids:
+                # count-based rule for DAGs: node widths change across a
+                # fan-in (k members -> 1 reducer -> k members), so the
+                # chains' member-subset rule cannot transfer. The whole
+                # TERMINAL node being in the backlog implies — by FIFO
+                # delivery of the superstage's single batched publish —
+                # that every earlier node's task arrived too.
+                if len(arrived.get(c, ())) >= dag_width.get(c, 1 << 30):
+                    ready.add(c)
+            elif waiting.get(c, set()) <= arrived.get(c, set()):
+                ready.add(c)
+        return ready
 
     def _chain_held_locked(self, task: Task, chain_ready: set) -> bool:
-        tag = task.tags.get(CHAIN_TAG)
-        if not isinstance(tag, dict):
+        tag = _flow_tag(task)
+        if tag is None:
             return False
         if not isinstance(tag.get("ss"), int):
             return False  # never superstaged: stage gating orders it
@@ -492,8 +529,8 @@ class ExecManager:
         Non-chain tasks keep their relative FIFO order.
         """
         group = first.tags.get("_fusion_group")
-        ftag = first.tags.get(CHAIN_TAG)
-        chain = ftag.get("c") if isinstance(ftag, dict) else None
+        ftag = _flow_tag(first)
+        chain = ftag.get("c") if ftag is not None else None
         if chain is not None:
             if not dq:
                 return
@@ -504,8 +541,8 @@ class ExecManager:
                 if nxt.is_final:
                     self._backlog_uids.discard(nxt.uid)
                     continue
-                ntag = nxt.tags.get(CHAIN_TAG)
-                if isinstance(ntag, dict) and ntag.get("c") == chain:
+                ntag = _flow_tag(nxt)
+                if ntag is not None and ntag.get("c") == chain:
                     self._backlog_uids.discard(nxt.uid)
                     take(nxt)
                 else:
@@ -520,7 +557,7 @@ class ExecManager:
                 dq.popleft()
                 self._backlog_uids.discard(nxt.uid)
                 continue
-            ntag = nxt.tags.get(CHAIN_TAG)
+            ntag = _flow_tag(nxt)
             if ntag is not None or nxt.tags.get("_fusion_group") != group:
                 return
             dq.popleft()
@@ -927,12 +964,12 @@ class ExecManager:
         # drop the federation placement hint: the clone should be free to
         # land on a different (less loaded / healthier) member than the
         # straggling original; the affinity constraint itself is kept.
-        # The chain tag is dropped too: a lone clone must run as an
+        # The chain/DAG tags are dropped too: a lone clone must run as an
         # ordinary (scalar/group) task against the result store — by
         # speculation time its upstream links are long routed — instead of
         # waiting in the chain assembler for siblings that never come.
         tags = {k: v for k, v in task.tags.items()
-                if k not in ("_fed_member", CHAIN_TAG)}
+                if k not in ("_fed_member", CHAIN_TAG, DAG_TAG)}
         clone = Task(
             name=f"{task.name}#spec",
             executable=task._fn if task._fn is not None else task.executable,

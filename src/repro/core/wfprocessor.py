@@ -302,22 +302,37 @@ class WFProcessor:
         # A stage whose every task was resumed completes immediately.
         self._maybe_finalize_stage(pipe, stage, sink=sink)
 
-    # -- superstage (chain fusion) -------------------------------------------#
+    # -- superstage (chain/DAG fusion) ---------------------------------------#
 
-    #: Task.tags key stamped by the api compiler's chain detection (kept as
-    #: a literal here: the core must not import the fusion package).
+    #: Task.tags keys stamped by the api compiler's chain/DAG detection
+    #: (kept as literals here: the core must not import the fusion package).
     CHAIN_TAG = "_fusion_chain"
+    DAG_TAG = "_fusion_dag"
+
+    @classmethod
+    def _flow_tag(cls, task) -> Optional[Dict[str, Any]]:
+        """The task's chain OR DAG tag — both carry ``c``/``k`` and both
+        superstage identically (a DAG is a chain of *nodes*: ensembles and
+        fan-in reductions; node indices advance exactly like link
+        indices). A task is on at most one flow."""
+        tag = task.tags.get(cls.CHAIN_TAG)
+        if tag is None:
+            tag = task.tags.get(cls.DAG_TAG)
+        if (isinstance(tag, dict) and isinstance(tag.get("c"), str)
+                and isinstance(tag.get("k"), int)):
+            return tag
+        return None
 
     @classmethod
     def _stage_chain_links(cls, stage: Stage) -> Optional[Dict[str, set]]:
-        """``{chain id: {link indices}}`` when EVERY task of the stage is a
-        chain link, else None (a mixed stage never superstages — its
-        untagged tasks would be submitted ahead of their input routing)."""
+        """``{chain/DAG id: {link indices}}`` when EVERY task of the stage
+        is a chain link or DAG node member, else None (a mixed stage never
+        superstages — its untagged tasks would be submitted ahead of their
+        input routing)."""
         sig: Dict[str, set] = {}
         for task in stage.tasks:
-            tag = task.tags.get(cls.CHAIN_TAG)
-            if not (isinstance(tag, dict) and isinstance(tag.get("c"), str)
-                    and isinstance(tag.get("k"), int)):
+            tag = cls._flow_tag(task)
+            if tag is None:
                 return None
             sig.setdefault(tag["c"], set()).add(tag["k"])
         return sig or None
@@ -365,13 +380,13 @@ class WFProcessor:
         extent: Dict[str, int] = {}
         for s in published:
             for task in s.tasks:
-                tag = task.tags.get(self.CHAIN_TAG)
-                if isinstance(tag, dict):
+                tag = self._flow_tag(task)
+                if tag is not None:
                     extent[tag["c"]] = max(extent.get(tag["c"], 0), tag["k"])
         for s in published:
             for task in s.tasks:
-                tag = task.tags.get(self.CHAIN_TAG)
-                if isinstance(tag, dict):
+                tag = self._flow_tag(task)
+                if tag is not None:
                     tag["ss"] = extent[tag["c"]]
 
     # -- Dequeue ------------------------------------------------------------#

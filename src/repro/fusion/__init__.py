@@ -29,15 +29,19 @@ The ExecManager hands whole groups to any RTS advertising
 member does), charging pilot slots per *batch* instead of per member.
 """
 
-from .groups import (CHAIN_TAG, FUSION_ATTR, GROUP_TAG, FusionSpec,  # noqa: F401
-                     chain_tag, fusable, fusion_group_key, fusion_spec,
-                     parse_chain_tag)
+from .groups import (CHAIN_TAG, DAG_TAG, FUSION_ATTR, GROUP_TAG,  # noqa: F401
+                     REDUCTION_ATTR, REDUCTION_KINDS, FusionSpec,
+                     ReductionSpec, chain_tag, dag_tag, fusable,
+                     fusable_reduction, fusion_group_key, fusion_spec,
+                     parse_chain_tag, parse_dag_tag, reduction_spec)
 from .handles import ArrayResult  # noqa: F401
 from .plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_BATCH,  # noqa: F401
                     DEFAULT_MIN_CHAIN, GroupPlan, plan_chain, plan_group)
 
 __all__ = ["FusionSpec", "fusable", "fusion_spec", "fusion_group_key",
+           "ReductionSpec", "fusable_reduction", "reduction_spec",
            "ArrayResult", "GroupPlan", "plan_group", "plan_chain",
            "GROUP_TAG", "CHAIN_TAG", "chain_tag", "parse_chain_tag",
-           "FUSION_ATTR", "DEFAULT_MIN_BATCH", "DEFAULT_MAX_BATCH",
-           "DEFAULT_MIN_CHAIN"]
+           "DAG_TAG", "dag_tag", "parse_dag_tag",
+           "FUSION_ATTR", "REDUCTION_ATTR", "REDUCTION_KINDS",
+           "DEFAULT_MIN_BATCH", "DEFAULT_MAX_BATCH", "DEFAULT_MIN_CHAIN"]

@@ -68,7 +68,7 @@ import numpy as np
 
 from ..core.pst import Task, resolve_executable
 from ..rts.base import TaskCompletion
-from .groups import FusionSpec, fusion_spec
+from .groups import FusionSpec, fusion_spec, parse_dag_tag, reduction_spec
 from .handles import ArrayResult, LazySlice
 
 Deliver = Callable[[TaskCompletion], None]
@@ -1103,3 +1103,730 @@ class ChainExecution:
                                       f"link {k}")
                     self._fail_retryable[i] = \
                         task.retries < task.max_retries
+
+
+# --------------------------------------------------------------------------- #
+# DAG execution (fan-in reductions + fan-out broadcasts, one carrier)
+# --------------------------------------------------------------------------- #
+
+def _apply_reduction(stacked, mask, kind, combine, axis_name=None):
+    """Masked device-side reduction of one ensemble node's stacked output.
+
+    ``mask`` is the ``(B,)`` bool vector of live members known host-side
+    (bucket/shard padding rows and injected faults); per-member finiteness
+    is folded in HERE, in-program, so a poisoned member drops out of the
+    reduction without a host sync — the survivors' reduction succeeds
+    while the poisoned member fails alone at its own node's fan-out.
+
+    Kinds reduce over EVERY axis of the valid members' values — the
+    list-of-values semantics of ``np.sum([...])`` / ``np.max([...])`` —
+    and an empty valid set yields NaN so the reduce task fails rather
+    than fabricating an identity element. Under ``shard_map``
+    (``axis_name``) each shard reduces locally and the partials combine
+    across the mesh with ``psum``/``pmax``/``pmin``; the result is
+    replicated on every device.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    valid = jnp.asarray(mask)
+    for leaf in jax.tree_util.tree_leaves(stacked):
+        leaf = jnp.asarray(leaf)
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            fin = jnp.isfinite(leaf.reshape(leaf.shape[0], -1)).all(axis=1)
+            valid = valid & fin
+    if combine is not None:
+        return combine(stacked, valid)
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    if axis_name is not None:
+        nvalid = jax.lax.psum(nvalid, axis_name)
+
+    def red(leaf):
+        leaf = jnp.asarray(leaf)
+        m = valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        per_member = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        if kind in ("sum", "mean"):
+            total = jnp.sum(jnp.where(m, leaf, 0))
+            if axis_name is not None:
+                total = jax.lax.psum(total, axis_name)
+            val = total / (nvalid * per_member) if kind == "mean" else total
+        else:
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                neutral = jnp.inf if kind == "min" else -jnp.inf
+            else:
+                info = jnp.iinfo(leaf.dtype)
+                neutral = info.max if kind == "min" else info.min
+            val = (jnp.min if kind == "min" else jnp.max)(
+                jnp.where(m, leaf, neutral))
+            if axis_name is not None:
+                val = (jax.lax.pmin if kind == "min" else jax.lax.pmax)(
+                    val, axis_name)
+        if jnp.issubdtype(jnp.result_type(val), jnp.floating):
+            val = jnp.where(nvalid > 0, val, jnp.nan)
+        return val
+
+    return jax.tree_util.tree_map(red, stacked)
+
+
+def _reduce_host(leaf) -> Any:
+    """Host-side form of one reduced leaf: Python scalar for 0-d values
+    (what a ``float(np.sum([...]))`` scalar reducer returns), ndarray
+    otherwise."""
+    arr = np.asarray(leaf)
+    return arr.item() if arr.ndim == 0 else arr
+
+
+def _dag_continuation_calls(tasks: Sequence[Task],
+                            prev_tasks: Optional[Sequence[Task]],
+                            carry_name: Optional[str],
+                            bcast_name: Optional[str],
+                            bcast_source: Optional[str]
+                            ) -> List[Tuple[Callable, list, dict]]:
+    """Resolve a DAG ensemble node's members WITHOUT touching the carried
+    or broadcast inputs — both arrive device-resident inside the composed
+    program. Unlike the chain's :func:`_continuation_calls` there is no
+    inference: the compiler's tags name the edge kwargs, so the
+    ``carry_name`` kwarg must hold the aligned previous member's future and
+    the ``bcast_name`` kwarg the source reduction's future; any other
+    future is foreign to the DAG and refuses composition."""
+    from ..api.runtime import FUTURE_KEY
+    from ..api.runtime import resolve as resolve_placeholders
+
+    calls: List[Tuple[Callable, list, dict]] = []
+    for i, t in enumerate(tasks):
+        if t.executable != TRAMPOLINE:
+            raise Incongruent("DAG node is not a data-flow task")
+        if t.kwargs.get("__args__"):
+            raise Incongruent("DAG node has positional args")
+        ns = t.kwargs["__ns__"]
+        fn = resolve_executable(t.kwargs["__fn__"])
+        other: Dict[str, Any] = {}
+        for k, v in (t.kwargs.get("__kwargs__") or {}).items():
+            if isinstance(v, dict) and set(v) == {FUTURE_KEY}:
+                name = v[FUTURE_KEY]
+                if (carry_name is not None and k == carry_name
+                        and prev_tasks is not None
+                        and name == prev_tasks[i].name):
+                    continue
+                if (bcast_name is not None and k == bcast_name
+                        and name == bcast_source):
+                    continue
+                raise Incongruent("DAG node consumes a foreign future")
+            other[k] = _unwrap(resolve_placeholders(v, ns))
+        calls.append((fn, [], other))
+    return calls
+
+
+class _DagNodeMeta:
+    """Per-node routing parsed from the ``_fusion_dag`` tags: role, edge
+    kwarg names, and the reduction semantics of ``"r"`` nodes (``combine``
+    is resolved lazily at dispatch time from the reduce task's kernel)."""
+
+    __slots__ = ("role", "carry_name", "bcast_name", "kind", "combine")
+
+    def __init__(self, role: str, carry_name: Optional[str],
+                 bcast_name: Optional[str], kind: Optional[str]) -> None:
+        self.role = role
+        self.carry_name = carry_name
+        self.bcast_name = bcast_name
+        self.kind = kind
+        self.combine: Optional[Callable[..., Any]] = None
+
+
+class DagExecution(ChainExecution):
+    """One whole fused DAG — ``ensemble → then → gather → broadcast →
+    ensemble`` — through one carrier, asynchronously.
+
+    ``links`` holds one aligned task list per DAG *node* in node order:
+    ensemble nodes their member tasks (width w), reduction nodes exactly
+    one reduce task. Roles and edge kwargs come from the ``_fusion_dag``
+    tags the compiler stamped. The dispatcher composes maximal runs of
+    traceable nodes — ensemble nodes without a hand-batched impl, plus
+    every reduction node — into single jitted programs threading the
+    member-stacked ``carry`` and the replicated ``bcast`` (the last
+    reduction's output) between nodes as XLA values; a hand-batched
+    ensemble node executes eagerly between segments with both values
+    staying device-resident. A diamond (``A → reduce → B`` with an
+    elementwise ``A → B`` carry) therefore runs as ONE dispatch.
+
+    Reductions execute masked (:func:`_apply_reduction`): padding and
+    injected faults are excluded host-side, non-finite members in-program,
+    so a poisoned member fails alone at its node while the reduction
+    succeeds over the survivors; a reduction with NO live members (or a
+    genuinely non-finite result) FAILS, and every downstream broadcast
+    consumer fails with an upstream marker. On the sharded tier the same
+    program runs under ``shard_map``: ensemble nodes stay split on the
+    member axis, reductions combine shard partials with psum/pmax/pmin
+    and come back replicated (out-spec ``P()``).
+
+    Degrade ladder: any preparation or dispatch failure falls back to
+    sequential per-node execution INSIDE the carrier — per-stage fused
+    ensembles (then per-member scalar, inside :func:`execute_fused`) and
+    *scalar* reductions resolving member values from the carrier's own
+    overrides, with store-parity semantics: a scalar reduce over a failed
+    member is a failed reduce, exactly like the un-fused gather path.
+    """
+
+    def __init__(self, links: Sequence[Sequence[Task]],
+                 devices: Sequence[Any],
+                 cancel_event: threading.Event,
+                 deliver: Deliver,
+                 *,
+                 canceled: Optional[set] = None,
+                 fault_injector: Optional[Callable[[Task], bool]] = None,
+                 compose: bool = True,
+                 mesh_devices: Optional[Sequence[Any]] = None) -> None:
+        super().__init__(links, devices, cancel_event, deliver,
+                         canceled=canceled, fault_injector=fault_injector,
+                         compose=compose, mesh_devices=mesh_devices)
+        self.stats["dag_links"] = 0
+        self._meta: List[_DagNodeMeta] = []
+        self._cols: List[List[int]] = []
+        for tasks in self.links:
+            tag = parse_dag_tag(tasks[0].tags) if tasks else None
+            tag = tag or {}
+            self._meta.append(_DagNodeMeta(
+                tag.get("r", "e"), tag.get("a"), tag.get("b"),
+                tag.get("rk")))
+            # member COLUMN of each task: a resumed fragment's node list
+            # can be partial, so list position and member index diverge —
+            # per-member state (ok / injected / retryable) keys on the
+            # tag's member index, which aligns columns across nodes
+            cols = []
+            for i, t in enumerate(tasks):
+                tg = parse_dag_tag(t.tags)
+                cols.append(tg["m"] if tg else i)
+            self._cols.append(cols)
+        self._masks: List[Optional[Any]] = [None] * len(self.links)
+        self._injected_reduce: set = set()   # node index of injected "r"
+        self._bcast_ok = True
+        self._bcast_reason: Optional[str] = None
+        self._bcast_retryable = False
+
+    # -- worker side ------------------------------------------------------ #
+
+    def _dispatch_links(self) -> None:
+        if not self.links or not self.links[0]:
+            return
+        if self.cancel_event.is_set():
+            self._push(("canceled",))
+            return
+        # injection: ensemble members key by member COLUMN (first injected
+        # node wins, downstream poisons); a reduce node keys by NODE index
+        # so its single task cannot collide with member 0's column
+        for k, tasks in enumerate(self.links):
+            if self._meta[k].role == "r":
+                if (self.fault_injector is not None and tasks
+                        and self.fault_injector(tasks[0])):
+                    self._injected_reduce.add(k)
+                continue
+            for i, t in enumerate(tasks):
+                col = self._cols[k][i]
+                if (self.fault_injector is not None
+                        and col not in self._injected
+                        and self.fault_injector(t)):
+                    self._injected[col] = k
+        self._fail_link = 0
+        if not self.compose:
+            # composition declined (dag knob off at the RTS): sequential
+            # per-node INSIDE the carrier — the carrier still owns the
+            # ordering, so the reduce never races its members' routing
+            self._push(("degrade", 0, None))
+            return
+        self._prepare_nodes()
+        mesh = self._mesh
+        if mesh is not None:
+            self._place_dag(mesh)
+        idx = 0
+        carry = None
+        bcast = None
+        n = len(self.links)
+        while idx < n:
+            self._fail_link = idx
+            meta = self._meta[idx]
+            plan = self._plans[idx]
+            if meta.role == "e" and plan.spec.batched is not None:
+                kw = dict(plan.stacked)
+                if meta.carry_name is not None:
+                    kw[meta.carry_name] = carry
+                if meta.bcast_name is not None:
+                    plan.shared_kw = dict(plan.shared_kw)
+                    plan.shared_kw[meta.bcast_name] = bcast
+                if mesh is not None:
+                    out = self._sharded_batched(plan, kw)
+                    self.stats["sharded_dispatches"] += 1
+                else:
+                    out = plan.spec.batched(**kw, **plan.static_kw,
+                                            **plan.shared_kw)
+                self.stats["dispatches"] += 1
+                self._push(("link", idx, out))
+                carry = out
+                idx += 1
+                continue
+            j = idx
+            while j < n and not (self._meta[j].role == "e"
+                                 and self._plans[j].spec.batched
+                                 is not None):
+                j += 1
+            outs = self._dag_segment(idx, j, carry, bcast, mesh)
+            self.stats["dispatches"] += 1
+            if mesh is not None:
+                self.stats["sharded_dispatches"] += 1
+            for off, out in enumerate(outs):
+                self._push(("link", idx + off, out))
+                if self._meta[idx + off].role == "e":
+                    carry = out
+                else:
+                    bcast = out
+            idx = j
+
+    def _prepare_nodes(self) -> None:
+        """Build every node's plan, reduction mask and combine; raises
+        :class:`Incongruent` on any unsupported shape — caught by
+        :meth:`dispatch`, which degrades the WHOLE DAG to sequential
+        per-node execution (prep happens before any dispatch)."""
+        mesh = self._mesh
+        if self._meta[0].role != "e":
+            raise Incongruent("DAG does not start at an ensemble node")
+        if mesh is not None:
+            widths = {len(t) for t, mt in zip(self.links, self._meta)
+                      if mt.role == "e"}
+            if len(widths) != 1:
+                raise Incongruent("sharded DAG requires equal node widths")
+        entry_calls = [member_call(t) for t in self.links[0]]
+        entry_pad = None if mesh is None else shard_pad(
+            len(entry_calls), mesh.devices.size)
+        fn, spec, static_kw, shared_kw, stacked, valid_lens, padded_b = \
+            _prepare(entry_calls, pad_to=entry_pad)
+        self._plans[0] = _LinkPlan(self.links[0], fn, spec, static_kw,
+                                   shared_kw, stacked, valid_lens, None)
+        pad_of = {0: padded_b}       # e-node index -> padded batch axis
+        lens_of = {0: valid_lens}    # e-node index -> row-pad lengths
+        last_e = 0
+        last_r_name: Optional[str] = None
+        for k in range(1, len(self.links)):
+            meta = self._meta[k]
+            tasks = self.links[k]
+            if meta.role == "r":
+                if len(tasks) != 1:
+                    raise Incongruent("reduction node must have one task")
+                meta.combine = self._reduce_combine(k)
+                if meta.combine is not None and mesh is not None:
+                    raise Incongruent(
+                        "custom combine cannot run under shard_map")
+                if meta.combine is None and meta.kind is None:
+                    raise Incongruent("reduction node lost its kind")
+                if lens_of.get(last_e) is not None and (
+                        meta.combine is not None
+                        or meta.kind not in ("max", "min")):
+                    # edge-replicated pad ROWS inside a member duplicate
+                    # real values: harmless under max/min, wrong in a sum
+                    raise Incongruent(
+                        "row-padded member values only reduce safely "
+                        "under max/min")
+                self._masks[k] = self._node_mask(last_e, pad_of[last_e])
+                last_r_name = tasks[0].name
+                continue
+            if meta.bcast_name is not None and last_r_name is None:
+                raise Incongruent("broadcast precedes any reduction")
+            calls = _dag_continuation_calls(
+                tasks,
+                self.links[last_e] if meta.carry_name is not None else None,
+                meta.carry_name, meta.bcast_name, last_r_name)
+            if (meta.carry_name is not None
+                    and len(tasks) != len(self.links[last_e])):
+                raise Incongruent("carry nodes disagree on member count")
+            if meta.carry_name is not None:
+                pad_to: Optional[int] = pad_of[last_e]
+            else:
+                pad_to = None if mesh is None else shard_pad(
+                    len(tasks), mesh.devices.size)
+            fnk, speck, st_kw, sh_kw, stk, vl, pb = _prepare(
+                calls, pad_to=pad_to)
+            if vl is None and meta.carry_name is not None:
+                vl = lens_of[last_e]   # padded rows ride the carry through
+            self._plans[k] = _LinkPlan(tasks, fnk, speck, st_kw, sh_kw,
+                                       stk, vl, meta.carry_name)
+            last_e = k
+            pad_of[k] = pb
+            lens_of[k] = vl
+
+    def _reduce_combine(self, k: int) -> Optional[Callable[..., Any]]:
+        task = self.links[k][0]
+        if task.executable == TRAMPOLINE:
+            fn = resolve_executable(task.kwargs["__fn__"])
+        else:
+            fn = task.resolve()
+        spec = reduction_spec(fn)
+        if spec is None:
+            raise Incongruent("reduction node lost its fusable marker")
+        return spec.combine
+
+    def _node_mask(self, src: int, padded_b: int) -> np.ndarray:
+        """Host-known live mask over the source node's padded member axis:
+        bucket/shard pad rows off, injected members at or before the
+        source node off (their poison reaches the reduced values)."""
+        mask = np.zeros(padded_b, bool)
+        for i, col in enumerate(self._cols[src]):
+            k_inj = self._injected.get(col)
+            mask[i] = k_inj is None or k_inj > src
+        return mask
+
+    def _place_dag(self, mesh) -> None:
+        """Place every ensemble node's stacked kwargs and every reduction
+        mask across the mesh member axis (shared kwargs replicate)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sharded = NamedSharding(mesh, P("m"))
+        for k, plan in enumerate(self._plans):
+            if plan is None:
+                if self._masks[k] is not None:
+                    self._masks[k] = jax.device_put(self._masks[k], sharded)
+                continue
+            plan.stacked = {kk: jax.device_put(v, sharded)
+                            for kk, v in plan.stacked.items()}
+            plan.shared_kw = jax.tree_util.tree_map(
+                jnp.asarray, plan.shared_kw)
+
+    def _dag_segment(self, start: int, stop: int, carry, bcast, mesh):
+        """Run nodes ``[start, stop)`` as one jitted program — ensemble
+        nodes vmap, reduction nodes reduce — with carry and bcast threaded
+        inside the program as XLA values (one dispatch for the run)."""
+        import jax
+
+        plans = [self._plans[k] for k in range(start, stop)]
+        metas = self._meta[start:stop]
+        stacked_list = [p.stacked for p, mt in zip(plans, metas)
+                        if mt.role == "e"]
+        shared_list = [p.shared_kw for p, mt in zip(plans, metas)
+                       if mt.role == "e"]
+        masks = [self._masks[k] for k in range(start, stop)
+                 if self._meta[k].role == "r"]
+
+        steps: List[Tuple] = []
+        key_parts: Optional[List[Tuple]] = []
+        for p, mt in zip(plans, metas):
+            if mt.role == "e":
+                steps.append(("e", p.fn, dict(p.static_kw), mt.carry_name,
+                              mt.bcast_name))
+                if key_parts is not None and p.statics_key is not None:
+                    key_parts.append(
+                        ("e", p.fn, p.statics_key, tuple(sorted(p.stacked)),
+                         mt.carry_name, mt.bcast_name,
+                         tuple(sorted(p.shared_kw))))
+                else:
+                    key_parts = None
+            else:
+                steps.append(("r", mt.kind, mt.combine))
+                if key_parts is not None:
+                    key_parts.append(("r", mt.kind, mt.combine))
+        axis = None if mesh is None else "m"
+
+        def seg(stacked_l, shared_l, masks_l, carry_, bcast_):
+            outs = []
+            si = mi = 0
+            for step in steps:
+                if step[0] == "e":
+                    _, fn, static_kw, carry_name, bcast_name = step
+                    kw = dict(stacked_l[si])
+                    shb = shared_l[si]
+                    si += 1
+                    if carry_name is not None:
+                        kw[carry_name] = carry_
+
+                    def call(kw_, sh_, bc_, fn=fn, static_kw=static_kw,
+                             bname=bcast_name):
+                        if bname is not None:
+                            kw_ = dict(kw_)
+                            kw_[bname] = bc_
+                        return fn(**kw_, **sh_, **static_kw)
+
+                    out = jax.vmap(call, in_axes=(0, None, None))(
+                        kw, shb, bcast_)
+                    outs.append(out)
+                    carry_ = out
+                else:
+                    _, kind, combine = step
+                    out = _apply_reduction(carry_, masks_l[mi], kind,
+                                           combine, axis_name=axis)
+                    mi += 1
+                    outs.append(out)
+                    bcast_ = out
+            return outs
+
+        key = tuple(key_parts) if key_parts is not None else None
+        if mesh is None:
+            seg_fn = _jit_cached(("dag", key) if key else None,
+                                 lambda: jax.jit(seg))
+            return seg_fn(stacked_list, shared_list, masks, carry, bcast)
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        out_specs = [P("m") if mt.role == "e" else P() for mt in metas]
+
+        def build():
+            # check_rep=False: node kernels may contain pallas_call (no
+            # replication rule); reductions come back replicated via the
+            # in-program psum/pmax, which P() out-specs rely on
+            return jax.jit(shard_map(
+                seg, mesh=mesh,
+                in_specs=(P("m"), P(), P("m"), P("m"), P()),
+                out_specs=out_specs, check_rep=False))
+
+        seg_fn = _jit_cached(
+            ("dag-shard", _mesh_key(mesh), key) if key else None, build)
+        return seg_fn(stacked_list, shared_list, masks, carry, bcast)
+
+    # -- drainer side ----------------------------------------------------- #
+
+    def drain(self, stop_event: Optional[threading.Event] = None
+              ) -> Dict[str, int]:
+        """Chain drain loop over NODE records; member state is sized to the
+        highest member column (widths change across a fan-in, and resumed
+        fragments can hold sparse columns)."""
+        width = max((max(c) + 1 for c in self._cols if c), default=1)
+        ok = np.ones(width, bool)
+        fail_reason: Dict[int, str] = {}
+        overrides: Dict[str, Any] = {}
+        fanned = 0
+        degraded = False
+        while True:
+            rec = self._pop(stop_event)
+            if rec is None:
+                return self.stats
+            kind = rec[0]
+            if kind == "link":
+                _, k, out = rec
+                if degraded:
+                    continue
+                if not self._fan_node(k, out, ok, fail_reason, overrides):
+                    degraded = True
+                    fanned = len(self.links)
+                else:
+                    fanned = k + 1
+            elif kind == "degrade":
+                _, start, _exc = rec
+                if not degraded:
+                    start = max(start, fanned)
+                    self._degrade(start, ok, fail_reason, overrides)
+                    degraded = True
+                    fanned = len(self.links)
+            elif kind == "canceled":
+                for tasks in self.links:
+                    for t in tasks:
+                        self._finish(t, -2)
+                fanned = len(self.links)
+            elif kind == "end":
+                break
+        if fanned < len(self.links):
+            self._degrade(fanned, ok, fail_reason, overrides)
+        return self.stats
+
+    def _fan_node(self, k: int, out: Any, ok: np.ndarray,
+                  fail_reason: Dict[int, str],
+                  overrides: Dict[str, Any]) -> bool:
+        if self._meta[k].role == "r":
+            return self._fan_reduce(k, out, ok, fail_reason, overrides)
+        import jax
+
+        plan = self._plans[k]
+        meta = self._meta[k]
+        tasks = self.links[k]
+        n = len(tasks)
+        try:
+            out = jax.block_until_ready(out)
+            fan = _FanOut(out, n, plan.spec.check_finite,
+                          plan.valid_lens if plan.spec.trim_outputs else None,
+                          treedef_key=(plan.fn, plan.statics_key))
+        except Exception:  # noqa: BLE001 - degrade this node and the rest
+            self._degrade(k, ok, fail_reason, overrides)
+            return False
+        self.stats["dag_links"] += 1
+        bcast_bad = meta.bcast_name is not None and not self._bcast_ok
+        has_carry = meta.carry_name is not None
+        for i, task in enumerate(tasks):
+            col = self._cols[k][i]
+            if self.cancel_event.is_set():
+                self._finish(task, -2)
+                continue
+            if bcast_bad:
+                ok[col] = False
+                fail_reason[col] = (self._bcast_reason
+                                    or "upstream DAG reduction failed")
+                self._finish(task, 1, exception=fail_reason[col], n_live=n,
+                             pilot_lost=self._bcast_retryable)
+                continue
+            if has_carry and not ok[col]:
+                self._finish(task, 1, exception=fail_reason.get(
+                    col, "upstream DAG member failed"), n_live=n,
+                    pilot_lost=self._fail_retryable.get(col, False))
+                continue
+            if self._injected.get(col) == k:
+                ok[col] = False
+                fail_reason[col] = (f"upstream DAG member failed at node "
+                                    f"{k} (injected fault)")
+                self._fail_retryable[col] = task.retries < task.max_retries
+                self._finish(task, 1, exception="injected fault", n_live=n)
+                continue
+            if not fan.ok[i]:
+                ok[col] = False
+                fail_reason[col] = (f"upstream DAG member failed at node "
+                                    f"{k} (non-finite output)")
+                self._fail_retryable[col] = task.retries < task.max_retries
+                self._finish(task, 1, exception=(
+                    "non-finite values in fused dispatch output "
+                    f"(member {task.name})"), n_live=n)
+                continue
+            # explicit True: a node WITHOUT a carry starts a fresh member
+            # lineage — an earlier failure in a dead lineage must not leak
+            ok[col] = True
+            value = fan.member(i)
+            overrides[task.name] = value
+            self._finish(task, 0, result=value, n_live=n)
+            self.stats["fused"] += 1
+        return True
+
+    def _fan_reduce(self, k: int, out: Any, ok: np.ndarray,
+                    fail_reason: Dict[int, str],
+                    overrides: Dict[str, Any]) -> bool:
+        import jax
+
+        task = self.links[k][0]
+        try:
+            out = jax.block_until_ready(out)
+            value = jax.tree_util.tree_map(_reduce_host, out)
+        except Exception:  # noqa: BLE001 - degrade this node and the rest
+            self._degrade(k, ok, fail_reason, overrides)
+            return False
+        self.stats["dag_links"] += 1
+        if self.cancel_event.is_set():
+            self._finish(task, -2)
+            return True
+        if k in self._injected_reduce:
+            self._set_bcast_bad(k, task, "injected fault")
+            self._finish(task, 1, exception="injected fault")
+            return True
+        finite = all(
+            np.isfinite(np.asarray(leaf)).all()
+            for leaf in jax.tree_util.tree_leaves(value)
+            if np.issubdtype(np.asarray(leaf).dtype, np.floating))
+        if not finite:
+            msg = (f"fused reduction produced non-finite values at node "
+                   f"{k} (poisoned inputs or no live members)")
+            self._set_bcast_bad(k, task, msg)
+            self._finish(task, 1, exception=msg)
+            return True
+        self._bcast_ok = True      # a later reduction refreshes the bcast
+        self._bcast_retryable = False
+        overrides[task.name] = value
+        self._finish(task, 0, result=value)
+        self.stats["fused"] += 1
+        return True
+
+    def _set_bcast_bad(self, k: int, task: Task, msg: str) -> None:
+        self._bcast_ok = False
+        self._bcast_reason = (f"upstream DAG reduction failed at node {k}: "
+                              f"{msg}")
+        self._bcast_retryable = task.retries < task.max_retries
+
+    def _degrade(self, start: int, ok: np.ndarray,
+                 fail_reason: Dict[int, str],
+                 overrides: Dict[str, Any]) -> None:
+        """Sequential per-node fallback for nodes ``start..N-1``, in node
+        order inside the carrier: ensemble nodes per-stage fused (then
+        per-member scalar inside :func:`execute_fused`), reduction nodes
+        SCALAR — resolving member values from the carrier's own overrides
+        first, then the store, so a failed member makes the reduce fail
+        exactly like the un-fused gather path."""
+        for k in range(start, len(self.links)):
+            meta = self._meta[k]
+            if meta.role == "r":
+                self._degrade_reduce(k, overrides)
+                continue
+            tasks = self.links[k]
+            n = len(tasks)
+            bcast_bad = meta.bcast_name is not None and not self._bcast_ok
+            has_carry = meta.carry_name is not None
+            todo: List[Tuple[int, Task]] = []
+            for i, task in enumerate(tasks):
+                col = self._cols[k][i]
+                if self.cancel_event.is_set():
+                    self._finish(task, -2)
+                    continue
+                if bcast_bad:
+                    ok[col] = False
+                    fail_reason[col] = (self._bcast_reason
+                                        or "upstream DAG reduction failed")
+                    self._finish(task, 1, exception=fail_reason[col],
+                                 n_live=n, pilot_lost=self._bcast_retryable)
+                    continue
+                if has_carry and not ok[col]:
+                    self._finish(task, 1, exception=fail_reason.get(
+                        col, "upstream DAG member failed"), n_live=n,
+                        pilot_lost=self._fail_retryable.get(col, False))
+                    continue
+                if self._injected.get(col) == k:
+                    ok[col] = False
+                    fail_reason[col] = (f"upstream DAG member failed at "
+                                        f"node {k} (injected fault)")
+                    self._fail_retryable[col] = \
+                        task.retries < task.max_retries
+                    self._finish(task, 1, exception="injected fault",
+                                 n_live=n)
+                    continue
+                todo.append((col, task))
+            if not todo:
+                continue
+            outcomes: Dict[str, TaskCompletion] = {}
+
+            def dl(c: TaskCompletion) -> None:
+                outcomes[c.uid] = c
+                if c.uid in self.canceled or c.uid in self._delivered:
+                    return
+                self._delivered.add(c.uid)
+                self.deliver(c)
+
+            sub = execute_fused(
+                [t for _, t in todo], self.devices, self.cancel_event, dl,
+                canceled=self.canceled, fault_injector=None,
+                overrides=overrides)
+            for key in ("fused", "scalar_fallback", "failed", "dispatches"):
+                self.stats[key] += sub.get(key, 0)
+            for col, task in todo:
+                c = outcomes.get(task.uid)
+                if c is not None and c.exit_code == 0:
+                    ok[col] = True
+                    overrides[task.name] = c.result
+                elif c is None or c.exit_code != -2:
+                    ok[col] = False
+                    fail_reason[col] = (f"upstream DAG member failed at "
+                                        f"node {k}")
+                    self._fail_retryable[col] = \
+                        task.retries < task.max_retries
+
+    def _degrade_reduce(self, k: int, overrides: Dict[str, Any]) -> None:
+        task = self.links[k][0]
+        if self.cancel_event.is_set():
+            self._finish(task, -2)
+            return
+        if k in self._injected_reduce:
+            self._set_bcast_bad(k, task, "injected fault")
+            self._finish(task, 1, exception="injected fault")
+            return
+        try:
+            fn, args, kwargs = member_call(task, overrides)
+            value = fn(*args, **kwargs)
+        except Exception:  # noqa: BLE001 - store-parity: missing member
+            self._set_bcast_bad(k, task,
+                                f"scalar reduction failed at node {k}")
+            self._finish(task, 1,
+                         exception=traceback.format_exc(limit=10))
+            return
+        self._bcast_ok = True
+        self._bcast_retryable = False
+        overrides[task.name] = value
+        self._finish(task, 0, result=value)
+        self.stats["scalar_fallback"] += 1

@@ -26,8 +26,10 @@ import hashlib
 from typing import Any, Callable, Dict, Optional, Sequence
 
 FUSION_ATTR = "__fusion__"
+REDUCTION_ATTR = "__fusion_reduction__"
 GROUP_TAG = "_fusion_group"   # Task.tags key the Emgr / RTS read
 CHAIN_TAG = "_fusion_chain"   # Task.tags key marking one link of a chain
+DAG_TAG = "_fusion_dag"       # Task.tags key marking one node of a fused DAG
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +136,93 @@ def fusion_group_key(fn: Callable[..., Any], kwargs: Dict[str, Any],
 
 
 # --------------------------------------------------------------------------- #
+# Reductions — the fan-in half of a fused DAG
+# --------------------------------------------------------------------------- #
+#
+# ``api.gather(ensemble, reducer)`` is a k→1 edge: the reducer consumes the
+# whole ensemble's member values. Scalar execution always works; the DAG
+# data plane can additionally run a *marked* reducer device-side inside the
+# carrier (a masked segment reduction over the stacked member axis — and a
+# psum/pmax across the mesh on the sharded tier). The marker is strictly
+# opt-in because the fused form must be a commutative reduction over the
+# member set: order of members must not matter, and members excluded by
+# padding or failure must drop out cleanly.
+
+#: jnp defaults the engine implements for plain commutative reducers. Each
+#: reduces over the member axis AND every element of each member's value —
+#: the list-of-values equivalents are ``np.sum(values)``, ``np.mean(...)``,
+#: ``np.max(...)``, ``np.min(...)``.
+REDUCTION_KINDS = ("sum", "mean", "max", "min")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionSpec:
+    """How a gather reducer participates in fused DAG execution.
+
+    ``kind`` — one of :data:`REDUCTION_KINDS`: the jnp-based default
+    implementation, a full masked reduction of the valid members' stacked
+    values to one scalar. Pick the kind that matches the scalar body
+    (``kind="sum"`` for ``float(np.sum([...]))`` etc.) — the drift gates
+    compare the two paths.
+
+    ``combine`` — optional custom batched implementation, called as
+    ``combine(stacked, mask)`` where ``stacked`` is the previous node's
+    output pytree with a leading member axis and ``mask`` is a boolean
+    ``(B,)`` vector of the members that are live (not padding, not failed).
+    Must be jit-traceable; overrides ``kind``. Custom combines run on the
+    unsharded tiers only (the engine cannot split an opaque combine across
+    a mesh, so a sharded carrier degrades such a DAG to micro-batches).
+
+    ``commutative`` — the fusion precondition. ``False`` documents a
+    reducer that depends on member order: it keeps its scalar semantics
+    everywhere and REFUSES device-side fusion (the DAG degrades to
+    per-stage fused execution with identical values).
+    """
+
+    kind: str = "sum"
+    combine: Optional[Callable[..., Any]] = None
+    commutative: bool = True
+
+
+def fusable_reduction(fn: Optional[Callable[..., Any]] = None, *,
+                      kind: str = "sum",
+                      combine: Optional[Callable[..., Any]] = None,
+                      commutative: bool = True) -> Callable[..., Any]:
+    """Mark a gather reducer as fusable into the DAG data plane.
+
+    Like :func:`fusable`, the function itself is unchanged — it still runs
+    scalar as ``fn(list_of_values)`` anywhere a plain reducer runs. The
+    marker is what lets ``api.compile`` fold the fan-in edge into a
+    ``_fusion_dag`` plan executed device-side.
+    """
+    if kind not in REDUCTION_KINDS:
+        raise ValueError(
+            f"unknown reduction kind {kind!r}; expected one of "
+            f"{REDUCTION_KINDS} (or pass combine=)")
+    spec = ReductionSpec(kind=kind, combine=combine,
+                         commutative=bool(commutative))
+
+    def mark(f: Callable[..., Any]) -> Callable[..., Any]:
+        setattr(f, REDUCTION_ATTR, spec)
+        return f
+
+    return mark(fn) if fn is not None else mark
+
+
+def reduction_spec(fn: Any) -> Optional[ReductionSpec]:
+    """The *fusable* :class:`ReductionSpec` of a marked reducer, else None.
+
+    Non-commutative specs return None here on purpose: to every consumer
+    (the compiler's DAG detection, the engine) such a reducer is
+    indistinguishable from an unmarked one — scalar semantics only.
+    """
+    spec = getattr(fn, REDUCTION_ATTR, None)
+    if isinstance(spec, ReductionSpec) and spec.commutative:
+        return spec
+    return None
+
+
+# --------------------------------------------------------------------------- #
 # Chain tags
 # --------------------------------------------------------------------------- #
 #
@@ -170,7 +259,61 @@ def parse_chain_tag(tags: Dict[str, Any]) -> Optional[Dict[str, Any]]:
     fusion, never crash the packer)."""
     tag = tags.get(CHAIN_TAG)
     if (isinstance(tag, dict) and isinstance(tag.get("c"), str)
-            and all(isinstance(tag.get(f), int) for f in ("k", "m", "n"))
+        and all(isinstance(tag.get(f), int) for f in ("k", "m", "n"))
             and 0 <= tag["k"] < tag["n"]):
+        return tag
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# DAG tags
+# --------------------------------------------------------------------------- #
+#
+# A *fusion DAG* generalizes a chain with fan-in and fan-out nodes: a linear
+# sequence of NODES where each node is either a fusable ensemble (width k,
+# role "e") or a fusable reduction (width 1, role "r") consuming the whole
+# previous ensemble. An ensemble node may carry elementwise from the last
+# ensemble node (kwarg ``a``, like a chain link) and/or consume the last
+# reduction's broadcast value (kwarg ``b``, shared across its members). The
+# compiler detects the shape (api/compiler._detect_dags) and stamps every
+# task with a DAG_TAG dict; a DAG-capable RTS re-assembles the nodes and
+# executes the whole round — ensemble → then → gather → broadcast →
+# ensemble — as ONE composed dispatch.
+
+def dag_tag(dag_id: str, node: int, member: int, n_nodes: int, *,
+            width: int, role: str = "e", carry: Optional[str] = None,
+            broadcast: Optional[str] = None,
+            kind: Optional[str] = None) -> Dict[str, Any]:
+    """The DAG_TAG value for one task of one DAG node.
+
+    ``c``/``k``/``m``/``n`` mirror the chain tag (id, node index, member
+    index within the node, total nodes) so the superstaging and drain
+    machinery treat both flows uniformly. ``w`` — the node's full member
+    width (readiness is count-based: node widths change across a fan-in,
+    so the chain rule "waiting ⊆ arrived" does not transfer). ``r`` — node
+    role, ``"e"`` ensemble or ``"r"`` reduction. ``a`` — elementwise carry
+    kwarg; ``b`` — broadcast kwarg fed from the last reduction; ``rk`` —
+    the reduction kind of an ``"r"`` node (``None`` = custom combine).
+    JSON-scalar throughout, like the chain tag.
+    """
+    tag: Dict[str, Any] = {"c": dag_id, "k": int(node), "m": int(member),
+                           "n": int(n_nodes), "w": int(width), "r": role}
+    if carry is not None:
+        tag["a"] = carry
+    if broadcast is not None:
+        tag["b"] = broadcast
+    if kind is not None:
+        tag["rk"] = kind
+    return tag
+
+
+def parse_dag_tag(tags: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """The validated DAG_TAG of a task, else None — same degrade-don't-crash
+    contract as :func:`parse_chain_tag`."""
+    tag = tags.get(DAG_TAG)
+    if (isinstance(tag, dict) and isinstance(tag.get("c"), str)
+        and all(isinstance(tag.get(f), int) for f in ("k", "m", "n", "w"))
+        and tag.get("r") in ("e", "r")
+            and 0 <= tag["k"] < tag["n"] and tag["w"] >= 1):
         return tag
     return None

@@ -96,6 +96,45 @@ class MeshPlan:
                 "dispatches": len(self.batches)}
 
 
+@dataclasses.dataclass(frozen=True)
+class DagPlan:
+    """How one fused DAG executes: always ONE carrier spanning every node.
+
+    A DAG is never micro-batched — its reduction needs the whole member
+    set in one place — so the only decisions are whether the carrier may
+    *compose* (one device program across the nodes; refused when the
+    widest node exceeds ``max_batch`` or the RTS's dag knob is off, in
+    which case the carrier runs its nodes sequentially per-stage inside
+    the same lease) and whether it shards across the mesh.
+    """
+
+    n_nodes: int
+    width: int
+    composed: bool
+    n_shards: int = 0
+
+    def record(self) -> Dict[str, Any]:
+        """JSON-able plan summary for the carrier's journal record."""
+        rec: Dict[str, Any] = {"kind": "dag", "nodes": self.n_nodes,
+                               "width": self.width,
+                               "composed": self.composed}
+        if self.n_shards:
+            rec["mesh"] = self.n_shards
+        return rec
+
+
+def plan_dag(n_nodes: int, width: int, *, dag: bool = True,
+             max_batch: int = DEFAULT_MAX_BATCH,
+             n_shards: int = 0) -> DagPlan:
+    """Plan one fused DAG of ``n_nodes`` nodes whose widest ensemble node
+    has ``width`` members. ``dag=False`` (the RTS knob) or an over-wide
+    node refuses composition; the carrier then executes its nodes
+    sequentially, preserving ordering and reduction semantics."""
+    composed = bool(dag) and 0 < width <= max(1, max_batch)
+    return DagPlan(n_nodes=n_nodes, width=width, composed=composed,
+                   n_shards=n_shards if composed else 0)
+
+
 def plan_mesh(n_members: int, free_slots: Optional[int], member_slots: int,
               *, max_batch: int = DEFAULT_MAX_BATCH,
               shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,

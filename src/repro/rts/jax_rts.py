@@ -54,6 +54,19 @@ lane count — is stamped on every member completion for postmortem
 debugging, and :meth:`planned_group_slots` lets the ExecManager charge the
 whole mesh when packing its submission backlog.
 
+DAG fusion (PR 7): tasks tagged ``_fusion_dag`` are nodes of a fusable
+fan-in/fan-out DAG — ensembles feeding a ``@fusable_reduction`` gather whose
+output broadcasts into the next ensemble. The packer re-assembles the nodes
+(``supports_dag_fusion``) and builds exactly ONE carrier per DAG arrival:
+the reduction consumes every member future, so the round is never scattered
+into concurrent lanes. A complete round composes into one device program
+(``ensemble → segment-reduce → broadcast → ensemble``; sharded rounds
+reduce via ``psum``/``pmax`` across the mesh), while resume fragments and
+``dag=False`` run the nodes sequentially inside the same carrier —
+preserving ordering, per-member journal records and reduction semantics on
+the degrade ladder (DAG → in-carrier sequential → per-stage fused →
+scalar).
+
 On this CPU container the inventory is logical (``slot_oversubscribe``
 logical slots share the physical CPU device) — the accounting, leasing and
 isolation logic is identical to the pod case; only the device objects differ.
@@ -72,10 +85,11 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 
 from ..core.pst import Task, resolve_executable
 from ..fusion import engine as fusion_engine
-from ..fusion.groups import GROUP_TAG, FusionSpec, fusion_spec, parse_chain_tag
+from ..fusion.groups import (GROUP_TAG, FusionSpec, fusion_spec,
+                             parse_chain_tag, parse_dag_tag)
 from ..fusion.plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_CHAIN,
                             DEFAULT_SHARD_MIN_MEMBERS, MeshPlan, plan_chain,
-                            plan_group, plan_mesh)
+                            plan_dag, plan_group, plan_mesh)
 from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
 
@@ -84,24 +98,28 @@ class _FusedBatch:
     """Carrier-side bookkeeping for one fused micro-batch.
 
     ``links`` — one aligned task list per chain link (a plain fused group
-    is a 1-link chain); ``members`` — every member task across links;
-    ``pending`` — member uids still owing a completion; ``mesh_shards`` —
-    device count of a planned SPMD mesh (0 = plain micro-batch carrier);
-    ``plan`` — the JSON-able plan record stamped onto member completions.
+    is a 1-link chain); for a DAG carrier (``dag=True``) one task list per
+    DAG *node* instead, with reduction nodes holding a single reduce task;
+    ``members`` — every member task across links; ``pending`` — member
+    uids still owing a completion; ``mesh_shards`` — device count of a
+    planned SPMD mesh (0 = plain micro-batch carrier); ``plan`` — the
+    JSON-able plan record stamped onto member completions.
     """
 
     __slots__ = ("links", "members", "pending", "compose", "mesh_shards",
-                 "plan")
+                 "plan", "dag")
 
     def __init__(self, links: List[List[Task]], compose: bool = True,
                  mesh_shards: int = 0,
-                 plan: Optional[Dict[str, Any]] = None) -> None:
+                 plan: Optional[Dict[str, Any]] = None,
+                 dag: bool = False) -> None:
         self.links = links
         self.members = [t for link in links for t in link]
         self.pending: Set[str] = {m.uid for m in self.members}
         self.compose = compose
         self.mesh_shards = mesh_shards
         self.plan = plan
+        self.dag = dag
 
 
 class JaxRTS(LocalRTS):
@@ -110,6 +128,7 @@ class JaxRTS(LocalRTS):
                  fusion_min_batch: Optional[int] = None,
                  fusion_max_batch: int = DEFAULT_MAX_BATCH,
                  fusion_min_chain: int = DEFAULT_MIN_CHAIN,
+                 dag: bool = True,
                  shard: bool = True,
                  shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,
                  shard_hold_s: float = 0.25,
@@ -129,6 +148,11 @@ class JaxRTS(LocalRTS):
         self.fusion_min_batch = fusion_min_batch
         self.fusion_max_batch = fusion_max_batch
         self.fusion_min_chain = max(2, fusion_min_chain)
+        # dag=False declines DAG *composition* only: DAG-tagged tasks still
+        # execute inside one carrier (sequential per-node — the carrier is
+        # what orders the reduce after its members), just never as one
+        # composed device program
+        self.dag = dag
         self.shard = shard
         self.shard_min_members = shard_min_members
         self.shard_hold_s = shard_hold_s
@@ -155,7 +179,8 @@ class JaxRTS(LocalRTS):
         self.fusion_stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
                              "dispatches": 0, "chain_links": 0,
                              "chain_carriers": 0, "sharded_dispatches": 0,
-                             "shard_carriers": 0}
+                             "shard_carriers": 0, "dag_carriers": 0,
+                             "dag_links": 0}
         # -- async data plane -------------------------------------------------#
         # dispatched-but-undrained carriers flow through this queue to a
         # small pool of drainer threads, which own unlease + release: the
@@ -247,6 +272,16 @@ class JaxRTS(LocalRTS):
         ordering keeps gating submissions exactly as before."""
         return self.fusion
 
+    def supports_dag_fusion(self) -> bool:
+        """True when this RTS assembles ``_fusion_dag``-tagged nodes into
+        whole-round carriers. The WFProcessor only superstages a fusable
+        DAG (ensembles + gather + broadcast consumers in one batch) against
+        an RTS that answers True. Note this gates *routing*, not
+        composition: ``dag=False`` still routes DAG tasks through a
+        carrier (sequential per-node) because the reduce must be ordered
+        after its member inputs."""
+        return self.fusion
+
     # -- submission -----------------------------------------------------------#
 
     def submit(self, tasks: List[Task]) -> None:
@@ -283,8 +318,20 @@ class JaxRTS(LocalRTS):
         inventory, not a fresh lock round-trip per micro-batch."""
         groups: Dict[str, List[Task]] = {}
         chains: Dict[str, Dict[int, Dict[int, Task]]] = {}  # c->member->link
+        dags: Dict[str, Dict[int, Dict[int, Task]]] = {}    # c->node->member
         order: List[Any] = []   # tasks / group keys / chain ids, in order
         for task in tasks:
+            dtag = parse_dag_tag(task.tags)
+            if dtag is not None:
+                # like chains, ALWAYS routed through the assembler — even
+                # with the dag knob off, a reduce task must execute inside
+                # a carrier that orders it after its members
+                per_node = dags.get(dtag["c"])
+                if per_node is None:
+                    dags[dtag["c"]] = per_node = {}
+                    order.append(("dag", dtag["c"]))
+                per_node.setdefault(dtag["k"], {})[dtag["m"]] = task
+                continue
             chain = parse_chain_tag(task.tags)
             if chain is not None:
                 # ALWAYS routed through the assembler — even chains the
@@ -306,13 +353,16 @@ class JaxRTS(LocalRTS):
                 groups[key] = bucket = []
                 order.append((GROUP_TAG, key))
             bucket.append(task)
-        if not groups and not chains:
+        if not groups and not chains and not dags:
             return tasks
         free = self.free_slots()
         out: List[Task] = []
         for entry in order:
             if isinstance(entry, Task):
                 out.append(entry)
+                continue
+            if entry[0] == "dag":
+                self._assemble_dag(dags[entry[1]], out, free)
                 continue
             if entry[0] == "chain":
                 self._assemble_chain(chains[entry[1]], out, free)
@@ -544,6 +594,59 @@ class JaxRTS(LocalRTS):
                                               plan=record))
                 idx += size
 
+    def _assemble_dag(self, per_node: Dict[int, Dict[int, Task]],
+                      out: List[Task], free: Optional[int] = None) -> None:
+        """Build ONE carrier from whatever nodes of a DAG round arrived.
+
+        Unlike chains, a DAG is never split into lanes or scattered into
+        per-stage groups: its reduction node consumes every member future,
+        so any concurrent split would race the reduce against its own
+        inputs. Every arrival — complete round or resume fragment — becomes
+        a single carrier. The carrier *composes* (one device program over
+        ``ensemble → reduce → broadcast → ensemble``) only when the round
+        is complete (all ``n`` nodes present at their tagged width) and
+        within the batch bound; otherwise it runs its nodes sequentially
+        in-carrier, which preserves ordering and per-member semantics for
+        fragments re-entering mid-round.
+        """
+        node_ids = sorted(per_node)
+        links: List[List[Task]] = []
+        for k in node_ids:
+            links.append([per_node[k][m] for m in sorted(per_node[k])])
+        first = links[0][0]
+        tag = parse_dag_tag(first.tags) or {}
+        n_total = int(tag.get("n") or len(node_ids))
+        complete = node_ids == list(range(n_total))
+        e_widths = set()
+        if complete:
+            for k, node in zip(node_ids, links):
+                t = parse_dag_tag(node[0].tags) or {}
+                want = int(t.get("w") or 1)
+                if len(node) != want:
+                    complete = False
+                    break
+                if t.get("r") != "r":
+                    e_widths.add(want)
+        width = max(len(node) for node in links)
+        plan = plan_dag(n_total, width, dag=self.dag,
+                        max_batch=self.fusion_max_batch)
+        mesh = None
+        if plan.composed and complete and len(e_widths) == 1:
+            # custom combine fns (no "rk" tag) can't cross the mesh — the
+            # batched combine sees only its shard's members
+            if all((parse_dag_tag(node[0].tags) or {}).get("rk")
+                   for node in links
+                   if (parse_dag_tag(node[0].tags) or {}).get("r") == "r"):
+                mesh = self._plan_mesh(width, free, first.slots, first.tags)
+        if mesh is not None:
+            plan = plan_dag(n_total, width, dag=self.dag,
+                            max_batch=self.fusion_max_batch,
+                            n_shards=mesh.n_shards)
+        out.append(self._make_carrier(
+            links, compose=plan.composed and complete,
+            mesh_shards=mesh.n_shards if mesh is not None else 0,
+            plan=plan.record(), dag=True))
+
     @staticmethod
     def _kernel_spec(task: Task) -> Optional[FusionSpec]:
         """The member's FusionSpec, looking through the API trampoline."""
@@ -558,13 +661,20 @@ class JaxRTS(LocalRTS):
 
     def _make_carrier(self, links: List[List[Task]],
                       compose: bool = True, mesh_shards: int = 0,
-                      plan: Optional[Dict[str, Any]] = None) -> Task:
+                      plan: Optional[Dict[str, Any]] = None,
+                      dag: bool = False) -> Task:
         batch = _FusedBatch(links, compose=compose, mesh_shards=mesh_shards,
-                            plan=plan)
+                            plan=plan, dag=dag)
         hints = [m.duration_hint for m in batch.members
                  if m.duration_hint is not None]
-        n, width = len(links), len(links[0])
-        if mesh_shards:
+        n = len(links)
+        width = (max(len(node) for node in links) if dag else len(links[0]))
+        if dag:
+            name = f"dag[{n}x{width}]:{links[0][0].name}"
+            if mesh_shards:
+                name = f"dag-shard[{mesh_shards}x{n}x{width}]:" \
+                       f"{links[0][0].name}"
+        elif mesh_shards:
             name = f"shard[{mesh_shards}x{n}x{width}]:{links[0][0].name}"
         else:
             name = (f"fused[{width}]:{links[0][0].name}" if n == 1
@@ -579,7 +689,9 @@ class JaxRTS(LocalRTS):
             self._fused[carrier.uid] = batch
             for m in batch.members:
                 self._member_carrier[m.uid] = carrier.uid
-            if n > 1:
+            if dag:
+                self.fusion_stats["dag_carriers"] += 1
+            elif n > 1:
                 self.fusion_stats["chain_carriers"] += 1
             if mesh_shards:
                 self.fusion_stats["shard_carriers"] += 1
@@ -741,7 +853,9 @@ class JaxRTS(LocalRTS):
             uniq = list(dict.fromkeys(devices))
             if len(uniq) >= batch.mesh_shards:
                 mesh_devices = uniq[:batch.mesh_shards]
-        exe = fusion_engine.ChainExecution(
+        cls = (fusion_engine.DagExecution if batch.dag
+               else fusion_engine.ChainExecution)
+        exe = cls(
             batch.links, devices, cancel_event, deliver,
             canceled=self._fused_canceled,
             fault_injector=self.fault_injector, compose=batch.compose,

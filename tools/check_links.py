@@ -1,0 +1,76 @@
+"""Check every relative markdown link (and anchor) in the repo's docs.
+
+CI runs this so README/ROADMAP/docs can never silently drift from the
+tree: a link to a moved file, a renamed example, or a heading that no
+longer exists fails the build. Stdlib only.
+
+    python tools/check_links.py            # repo root inferred from this file
+    python tools/check_links.py /some/repo
+
+Checked: inline ``[text](target)`` links in all tracked *.md files at
+the repo root and under docs/. ``http(s)://``/``mailto:`` targets are
+skipped (no network in CI); bare ``#anchor`` targets resolve against the
+current file's headings; ``path#anchor`` against the target's headings.
+
+Exit 0 = all links resolve; exit 1 = broken links (each one listed).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading: lowercase, markup stripped,
+    every space a hyphen, punctuation dropped."""
+    text = re.sub(r"[*_`]|\[|\]|\(#?[^)]*\)", "", heading).strip().lower()
+    text = "".join(c for c in text if c.isalnum() or c in " -")
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> "set[str]":
+    body = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {github_slug(h) for h in HEADING_RE.findall(body)}
+
+
+def check_file(md: Path, root: Path) -> List[str]:
+    errors = []
+    body = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(body):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                errors.append(f"{md.relative_to(root)}: missing anchor "
+                              f"-> {target}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    files = sorted(root.glob("*.md")) + sorted((root / "docs").glob("*.md"))
+    errors: List[str] = []
+    for md in files:
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(f"[links] {e}")
+    print(f"[links] {len(files)} files checked, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
