@@ -21,6 +21,15 @@ Two gates share this entry point, selected with ``--bench``:
   fusion with a scalar reduction: dag-fused throughput may not regress
   more than ``--factor`` versus the PR-7 baseline AND the within-run
   dag/per-stage speedup must stay above ``--min-speedup``.
+* ``serve`` — the multi-tenant serving layer must keep amortizing its
+  continuous-batching window across tenants: concurrent aggregate
+  throughput may not regress more than ``--factor`` versus the PR-8
+  baseline, the within-run concurrent/serial speedup must stay above
+  ``--min-speedup``, AND the concurrent run must have packed at least
+  ``--min-cross-tenant`` carriers spanning >= 2 tenants (a serving layer
+  that stops sharing carriers degrades into serial mode silently — the
+  carrier floor catches that even when the runner is too noisy for the
+  throughput gates to).
 * ``shard`` — whole-mesh SPMD dispatch must keep up with per-device
   fused dispatch on multi-device hosts: sharded throughput may not
   regress more than ``--factor`` versus the PR-6 baseline AND the
@@ -157,6 +166,24 @@ def check_dag(args) -> int:
                             speedup_label="dag/per-stage")
 
 
+def check_serve(args) -> int:
+    rc = _check_dataplane(args, bench="serve",
+                          rate_field="serve_tasks_per_s",
+                          speedup_field="speedup_vs_serial",
+                          rate_label="concurrent",
+                          speedup_label="concurrent/serial")
+    cur = _rows(args.current, "serve_", "n_members")
+    if not cur:
+        return 1
+    row = cur[max(cur)]
+    cross = int(row.get("cross_tenant_carriers", 0) or 0)
+    ok = cross >= args.min_cross_tenant
+    print(f"[check] serve @ {max(cur)} members: cross-tenant carriers "
+          f"{cross} (floor {args.min_cross_tenant}) "
+          f"{'OK' if ok else 'REGRESSION'}")
+    return rc if ok else 1
+
+
 def check_shard(args) -> int:
     cur = _rows(args.current, "shard_", "n_members")
     if not cur:
@@ -182,13 +209,16 @@ def main() -> int:
     ap.add_argument("current", help="bench JSON from this run")
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--bench", choices=("sched", "fusion", "chain",
-                                        "shard", "dag"),
+                                        "shard", "dag", "serve"),
                     default="sched")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed regression ratio vs the baseline")
     ap.add_argument("--min-speedup", type=float, default=3.0,
                     help="fusion/chain: min within-run speedup vs the "
                          "scalar (fusion) or per-stage-fused (chain) path")
+    ap.add_argument("--min-cross-tenant", type=int, default=1,
+                    help="serve: min carriers spanning >= 2 tenants in "
+                         "the concurrent run")
     args = ap.parse_args()
     if args.bench == "sched":
         return check_sched(args)
@@ -196,6 +226,8 @@ def main() -> int:
         return check_shard(args)
     if args.bench == "dag":
         return check_dag(args)
+    if args.bench == "serve":
+        return check_serve(args)
     return check_fusion(args) if args.bench == "fusion" else check_chain(args)
 
 

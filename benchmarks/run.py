@@ -299,6 +299,23 @@ def roofline_table(quick: bool) -> None:
              note="no dry-run artifacts; run python -m repro.launch.dryrun")
 
 
+def serve_throughput(quick: bool) -> None:
+    from benchmarks import serve
+    r = serve.run(quick)
+    _row(f"serve_{r['n_members']}",
+         r["concurrent_s"] / r["n_members"] * 1e6,
+         n_members=r["n_members"], n_tenants=r["n_tenants"],
+         members_per_tenant=r["members_per_tenant"],
+         serial_s=r["serial_s"], concurrent_s=r["concurrent_s"],
+         serial_tasks_per_s=r["serial_tasks_per_s"],
+         serve_tasks_per_s=r["serve_tasks_per_s"],
+         speedup_vs_serial=r["speedup_vs_serial"],
+         cross_tenant_carriers=r["cross_tenant_carriers"],
+         dispatches=r["dispatches"],
+         shared_dispatches=r["shared_dispatches"],
+         max_drift=r["max_drift"], all_done=r["all_done"])
+
+
 BENCHES = {
     "fig6": fig6_prototype,
     "fig7": fig7_overheads,
@@ -312,6 +329,7 @@ BENCHES = {
     "chain": chain_throughput,
     "shard": shard_throughput,
     "dag": dag_throughput,
+    "serve": serve_throughput,
     "roofline": roofline_table,
 }
 
@@ -324,7 +342,8 @@ TRAJECTORY = "BENCH_fusion.json"
 def _append_trajectory(picks: "list[str]", quick: bool) -> None:
     import os
     rows = [r for r in _ROWS
-            if r["name"].startswith(("fusion_", "chain_", "shard_", "dag_"))
+            if r["name"].startswith(("fusion_", "chain_", "shard_", "dag_",
+                                     "serve_"))
             and not r["name"].endswith("_ERROR")]
     if not rows:
         return

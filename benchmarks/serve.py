@@ -1,0 +1,158 @@
+"""Multi-tenant serving benchmark: serial tenants vs continuous batching.
+
+Four tenants submit sweeps of the SAME fusable kernel to a persistent
+:class:`~repro.serve.service.EnsembleService`. Two modes:
+
+* **serial** — one tenant at a time (submit, wait, next): every sweep pays
+  its own continuous-batching hold window and its own dispatch, exactly
+  like four single-workflow AppManager runs sharing a process.
+* **concurrent** — all four submitted together: the serving hold packs the
+  tenants' key-compatible members into shared carriers, so the window and
+  the dispatch overhead are amortized across the fleet.
+
+The bench verifies the serving path end-to-end before reporting a number:
+every member of every tenant must finish DONE, every value must match the
+scalar expectation within ``1e-4`` (tenant isolation — a cross-routed
+result shows up as a huge drift), and the concurrent run must have packed
+at least one carrier spanning >= 2 tenants. Any violation raises, which
+the harness turns into a ``serve_ERROR`` row and a red CI job.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict
+
+import numpy as np
+
+WAIT_S = 180.0
+
+
+def _value(v: Any) -> float:
+    # fusion results arrive as ArrayResult (``.value()`` method) or, after
+    # a journal-spill round-trip, as a bare ndarray attribute
+    val = getattr(v, "value", None)
+    if callable(val):
+        v = val()
+    elif val is not None:
+        v = val
+    return float(np.asarray(v).reshape(-1)[0])
+
+
+def _sweep(api: Any, kernel: Any, base: float, members: int,
+           name: str) -> Any:
+    return api.ensemble(kernel,
+                        over=[{"a": 2.0, "x": base + i}
+                              for i in range(members)],
+                        name=name, slots=1)
+
+
+def _verify(handles: Dict[int, Any], members: int) -> float:
+    """Every tenant's every member: present, DONE, and exactly its own
+    tenant's value (base 1000*i keeps cross-tenant mixups unmissable)."""
+    drift = 0.0
+    for idx, handle in handles.items():
+        if not handle.succeeded():
+            raise RuntimeError(
+                f"tenant {idx} did not finish: {handle.task_states()}")
+        results = handle.results()
+        for j in range(members):
+            key = f"{handle.name}-{j}"
+            if key not in results:
+                raise RuntimeError(f"tenant {idx} missing result {key}")
+            expect = 2.0 * (1000.0 * idx + j) + 1.0
+            drift = max(drift, abs(_value(results[key]) - expect))
+    if drift > 1e-4:
+        raise RuntimeError(f"serving path drifted from scalar expectation "
+                           f"by {drift} (tenant isolation broken?)")
+    return drift
+
+
+def _run_mode(concurrent: bool, n_tenants: int, members: int,
+              hold_s: float, repeats: int) -> Dict[str, Any]:
+    import repro.core  # noqa: F401  (import-order: core before rts/serve)
+    from repro import api
+    from repro.fusion import fusable
+    from repro.serve import EnsembleService
+
+    @fusable()
+    def serve_bench_kernel(a, x):
+        import jax.numpy as jnp
+        return (jnp.asarray(a, jnp.float32)
+                * jnp.asarray(x, jnp.float32) + 1.0)
+
+    service = EnsembleService(serve_hold_s=hold_s).start()
+    try:
+        # warm the JIT cache so neither mode's first dispatch pays compile
+        warm = service.submit(
+            _sweep(api, serve_bench_kernel, -1000.0, members, "warm"),
+            tenant="warmup", name="warm")
+        if not warm.wait(WAIT_S):
+            raise RuntimeError("warmup sweep timed out")
+
+        best = None
+        drift = 0.0
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            if concurrent:
+                handles = {
+                    i: service.submit(
+                        _sweep(api, serve_bench_kernel, 1000.0 * i,
+                               members, f"t{i}"),
+                        tenant=f"tenant-{i}", name=f"t{i}")
+                    for i in range(n_tenants)}
+                for h in handles.values():
+                    if not h.wait(WAIT_S):
+                        raise RuntimeError("concurrent submission timed out")
+            else:
+                handles = {}
+                for i in range(n_tenants):
+                    h = service.submit(
+                        _sweep(api, serve_bench_kernel, 1000.0 * i,
+                               members, f"t{i}"),
+                        tenant=f"tenant-{i}", name=f"t{i}")
+                    if not h.wait(WAIT_S):
+                        raise RuntimeError("serial submission timed out")
+                    handles[i] = h
+            elapsed = time.perf_counter() - t0
+            drift = max(drift, _verify(handles, members))
+            best = elapsed if best is None else min(best, elapsed)
+        stats = service.stats()
+    finally:
+        service.stop(drain=False)
+    return {"elapsed_s": best, "drift": drift,
+            "fusion": stats["fusion"], "tenants": stats["tenants"]}
+
+
+def run(quick: bool, n_tenants: int = 4, members: int = 0,
+        hold_s: float = 0.2) -> Dict[str, Any]:
+    members = members or (16 if quick else 32)
+    serial = _run_mode(False, n_tenants, members, hold_s, repeats=2)
+    conc = _run_mode(True, n_tenants, members, hold_s, repeats=2)
+
+    cross = int(conc["fusion"].get("cross_tenant_carriers", 0) or 0)
+    if cross < 1:
+        raise RuntimeError(
+            "concurrent tenants never shared a carrier — the continuous-"
+            f"batching window is not packing across workflows: "
+            f"{conc['fusion']}")
+
+    total = n_tenants * members
+    return {
+        "n_tenants": n_tenants,
+        "members_per_tenant": members,
+        "n_members": total,
+        "serial_s": round(serial["elapsed_s"], 3),
+        "concurrent_s": round(conc["elapsed_s"], 3),
+        "serial_tasks_per_s": round(total / serial["elapsed_s"], 1),
+        "serve_tasks_per_s": round(total / conc["elapsed_s"], 1),
+        "speedup_vs_serial": round(
+            serial["elapsed_s"] / conc["elapsed_s"], 2),
+        "cross_tenant_carriers": cross,
+        "dispatches": int(conc["fusion"].get("dispatches", 0) or 0),
+        "shared_dispatches": sum(
+            int(t.get("shared_dispatches", 0) or 0)
+            for t in conc["tenants"].values()),
+        "max_drift": max(serial["drift"], conc["drift"]),
+        "all_done": True,
+    }

@@ -1,0 +1,57 @@
+"""Serving quickstart: embed the ensemble service in your own process.
+
+No socket, no daemon — the :class:`~repro.serve.client.InProcessClient`
+speaks the same protocol straight into the service, which is the simplest
+way to give one application many concurrently-running workflows with
+admission control and fair share.
+
+    PYTHONPATH=src python examples/serve_quickstart.py
+"""
+
+from repro.core.pst import register_executable
+from repro.fusion import fusable
+from repro.serve import (AdmissionController, EnsembleService,
+                         InProcessClient, TenantQuota)
+
+
+@fusable()
+def square(x):
+    import jax.numpy as jnp
+    v = jnp.asarray(x, jnp.float32)
+    return v * v
+
+
+register_executable("quickstart_square", square)
+
+
+def main() -> None:
+    admission = AdmissionController(
+        default_quota=TenantQuota(max_in_flight_members=256, max_active=4))
+    service = EnsembleService(admission=admission,
+                              serve_hold_s=0.1).start()
+    try:
+        client = InProcessClient(service)
+        print(client.hello())
+
+        handles = {
+            tenant: client.submit(
+                "reg://quickstart_square",
+                [{"x": float(base + i)} for i in range(8)],
+                tenant=tenant, name="sq")
+            for tenant, base in [("research", 0), ("prod", 100)]}
+
+        for tenant, handle in handles.items():
+            client.wait(handle, timeout=120)
+            results = client.result(handle)
+            print(f"{tenant}: sq-0={results['sq-0']} sq-7={results['sq-7']}")
+
+        stats = client.stats()
+        print(f"cross-tenant carriers: "
+              f"{stats['fusion'].get('cross_tenant_carriers', 0)}")
+        print(f"admission: {stats['admission']}")
+    finally:
+        service.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -291,6 +291,7 @@ def _build_task(spec: TaskSpec, ctx: _Ctx) -> Task:
             slots=spec.slots, backend=spec.backend,
             max_retries=spec.max_retries, duration_hint=spec.duration_hint)
     task.tags["_wf_ns"] = ctx.ns
+    task.ns = ctx.ns
     if spec.fusion_group is not None:
         # the Emgr packer and a fusion-capable RTS read this tag to batch
         # congruent ensemble members into one device dispatch
@@ -766,6 +767,7 @@ def _layer_stages(units: List[TaskSpec], level: Dict[int, int],
         # keeps the pilot packed without starving narrow ones
         specs.sort(key=lambda s: -s.slots)
         stage = Stage(ctx.stage_name())
+        stage.ns = ctx.ns
         for spec in specs:
             stage.add_tasks(_build_task(spec, ctx))
         stages.append(stage)
@@ -793,12 +795,14 @@ def _plan_dynamic(d: TaskSpec, rest: List[TaskSpec], ctx: _Ctx,
         ctx.claim(dyn.name, "branch name (reserves its join/result key)")
         rt = _BranchRuntime(dyn, ctx)
         stage = Stage(ctx.stage_name())
+        stage.ns = ctx.ns
         stage.add_tasks(_build_task(d, ctx))
         rt.continuation = _plan(rest, ctx, prefix, alias)
         stage.post_exec = rt.on_decide
         return [stage]
     if isinstance(dyn, _LoopRuntime):
         stage = Stage(ctx.stage_name())
+        stage.ns = ctx.ns
         stage.add_tasks(_build_task(d, ctx))
         if rest:
             # compile-time only: runtime rounds never carry a continuation,
@@ -808,6 +812,7 @@ def _plan_dynamic(d: TaskSpec, rest: List[TaskSpec], ctx: _Ctx,
         return [stage]
     if isinstance(dyn, _JoinRuntime):
         stage = Stage(ctx.stage_name())
+        stage.ns = ctx.ns
         stage.add_tasks(_build_task(d, ctx))
         if rest:
             raise CompileError("internal: join cannot carry a continuation")
@@ -1017,6 +1022,7 @@ def compile_workflow(*nodes: Union[Node, Future],
     for ci, comp in enumerate(comps):
         suffix = f"-c{ci}" if len(comps) > 1 else ""
         pipe = Pipeline(f"{wf_name}{suffix}")
+        pipe.ns = ns
         stages = _plan(comp, ctx, "")
         if not stages:
             raise CompileError(

@@ -307,6 +307,150 @@ class AppManager:
             self._terminate()
         return self.prof.totals()
 
+    # -- serving mode (persistent multi-tenant daemon) -----------------------#
+
+    def start_service(self, journal: Optional[Journal] = None) -> None:
+        """Bring up the full component stack with no workflow attached.
+
+        The serving layer (``repro.serve``) submits workflows afterwards
+        through :meth:`submit_pipelines`; the components drain-and-wait
+        instead of drain-and-exit. ``journal`` accepts a Journal-compatible
+        router (the service's :class:`~repro.serve.journal.TenantJournals`)
+        so transitions land in per-tenant write-ahead files.
+        """
+        if self.broker is not None:
+            raise EnTKError("service already started")
+        self.prof.begin(ENTK_SETUP)
+        self.broker = Broker()
+        self.journal = (journal if journal is not None
+                        else Journal(self.journal_path,
+                                     flush_every=self.flush_every))
+        self.journal.session("start", service=True)
+        self.svc = StateService(self.broker, strict=self.strict_transactions,
+                                durable=self.journal.enabled)
+        self.sync = Synchronizer(self.broker, self.journal, self.state_table)
+        self.sync.start()
+        self.wfp = WFProcessor(
+            self.broker, self.svc, self.prof, self._workflow, self.index,
+            on_task_failure=self.on_task_failure,
+            spill_dir=(f"{self.journal_path}.spill"
+                       if self.journal_path else None))
+        self.emgr = ExecManager(
+            self.broker, self.svc, self.prof, self.rts_factory,
+            self.resources, self.index,
+            heartbeat_interval=self.heartbeat_interval,
+            max_rts_restarts=self.max_rts_restarts,
+            straggler_factor=self.straggler_factor)
+        self.prof.end(ENTK_SETUP)
+        self.emgr.acquire_resources()
+        chain_ok = getattr(self.emgr.rts, "supports_chain_fusion", None)
+        try:
+            self.wfp.chain_scheduling = bool(chain_ok and chain_ok())
+        except Exception:  # noqa: BLE001 - a dying RTS answers like "no"
+            self.wfp.chain_scheduling = False
+        self.wfp.start()
+        self.emgr.start()
+        if self.component_supervision:
+            self._stop.clear()
+            self._supervisor = threading.Thread(
+                target=self._supervise, daemon=True, name="am-supervisor")
+            self._supervisor.start()
+
+    def submit_pipelines(
+        self,
+        pipelines: List[Pipeline],
+        ns: Optional[str] = None,
+        resumed_done: Optional[set] = None,
+        resumed_results: Optional[Dict[str, object]] = None,
+        result_omitted: Optional[set] = None,
+        resumed_retries: Optional[Dict[str, int]] = None,
+        spill_dir: Optional[str] = None,
+    ) -> None:
+        """Admit a workflow into the running service.
+
+        Bypasses the ``workflow`` setter's cross-workflow task-name
+        uniqueness check deliberately: each submission's names are unique
+        within its own compile namespace (``_Ctx.claim``) and all routing —
+        results, journals, resume — is keyed ``(namespace, name)``.
+        """
+        if self.wfp is None:
+            raise EnTKError("start_service() before submit_pipelines()")
+        for entry in pipelines:
+            if not isinstance(entry, Pipeline):
+                raise ValueError_(
+                    f"submit_pipelines expects Pipeline, got "
+                    f"{type(entry).__name__}")
+        if resumed_retries:
+            for p in pipelines:
+                for s in p.stages:
+                    for t in s.tasks:
+                        if t.name in resumed_retries:
+                            t.retries = min(t.max_retries,
+                                            resumed_retries[t.name])
+        if ns is not None and (resumed_done or resumed_results
+                               or result_omitted or spill_dir):
+            self.wfp.add_resumed_namespace(
+                ns, resumed_done or set(), resumed_results or {},
+                result_omitted or set(), spill_dir=spill_dir)
+        for p in pipelines:
+            self.index.add_pipeline(p)
+        self._workflow.extend(pipelines)
+        self.wfp.add_pipelines(pipelines)
+
+    def cancel_pipelines(self, pipelines: List[Pipeline]) -> None:
+        """Cancel one submission's pipelines without touching the others.
+
+        Mirrors :meth:`cancel`'s locking, then finalizes each pipeline to
+        CANCELED itself (the RTS drops queued/held members without emitting
+        completions, so the normal closure chain would never fire)."""
+        import contextlib
+
+        uids = [t.uid for p in pipelines for s in p.stages for t in s.tasks
+                if not t.is_final]
+        if self.emgr is not None and self.emgr.rts is not None and uids:
+            self.emgr.rts.cancel(uids)
+        emgr_lock = (self.emgr._lock if self.emgr is not None
+                     else contextlib.nullcontext())
+        for p in pipelines:
+            canceled_now = False
+            with p.lock, emgr_lock:
+                if p.is_final:
+                    continue
+                for s in p.stages:
+                    for t in s.tasks:
+                        if not t.is_final and self.svc is not None:
+                            try:
+                                self.svc.advance(t, st.CANCELED)
+                            except Exception:  # noqa: BLE001
+                                pass
+                    if not s.is_final and self.svc is not None:
+                        try:
+                            self.svc.advance(s, st.STAGE_CANCELED)
+                        except Exception:  # noqa: BLE001
+                            pass
+                if self.svc is not None:
+                    try:
+                        self.svc.advance(p, st.PIPELINE_CANCELED)
+                        canceled_now = True
+                    except Exception:  # noqa: BLE001
+                        pass
+            if canceled_now and self.wfp is not None:
+                self.wfp.note_pipeline_closed(p)
+        if self.emgr is not None and uids:
+            # canceled members the RTS dropped without a completion (queued
+            # or parked in a batching hold) would otherwise stay in Emgr
+            # custody forever and block its quiescence accounting; a member
+            # actually mid-execution still completes, and its late callback
+            # is a harmless duplicate after this purge
+            with self.emgr._lock:
+                for u in uids:
+                    self.emgr._submitted.pop(u, None)
+
+    def stop_service(self) -> Dict[str, float]:
+        """Tear the service down; returns the overhead report."""
+        self._terminate()
+        return self.prof.totals()
+
     def cancel(self) -> None:
         """Cancel all outstanding work and finalize.
 

@@ -60,6 +60,30 @@ def _flow_tag(task: Task) -> Optional[dict]:
     return tag if isinstance(tag, dict) else None
 
 
+class _Lane:
+    """One tenant's private slice of the submission backlog (fair share).
+
+    Everything the single-tenant packer keeps as instance state that must
+    not leak between tenants lives here: the width buckets, the starvation
+    guard's skip count, and the chain-hold bookkeeping (``_chain_ready_locked``
+    clears the released set when a lane holds no chains — per-lane state
+    keeps one tenant's chain-free round from wiping another's valve
+    release). ``deficit`` is the weighted deficit-round-robin credit in
+    MEMBERS; an atomic whole-group drain may overdraw it, and the debt
+    carries — the oversized-packet rule that stops a 1M-member sweep from
+    starving interactive tenants."""
+
+    __slots__ = ("backlog", "head_skips", "has_chain_backlog",
+                 "chain_released", "deficit")
+
+    def __init__(self) -> None:
+        self.backlog: Dict[int, Deque] = {}
+        self.head_skips = 0
+        self.has_chain_backlog = False
+        self.chain_released: set = set()
+        self.deficit = 0.0
+
+
 class ExecManager:
     def __init__(
         self,
@@ -107,6 +131,15 @@ class ExecManager:
         self._chain_held_ids: set = set()
         self._chain_released: set = set()
         self._chain_stalls = 0
+        # Fair share (serving mode, opt-in via set_fair_share): tasks are
+        # bucketed into per-tenant lanes keyed on tags["_tenant"] and packed
+        # by weighted deficit-round-robin; None keeps the classic
+        # single-backlog path byte-identical.
+        self._fair_policy = None
+        self._lanes: Dict[str, _Lane] = {}
+        self._lane_cursor = 0
+        self.fair_quantum = 256     # DRR credit (members) per visit per weight
+        self._picked_slots = 0      # slots charged by the last pick round
         self._spec_of: Dict[str, str] = {}      # clone uid -> original uid
         self._spec_for: Dict[str, str] = {}     # original uid -> clone uid
         self._speculated: set = set()           # originals already cloned
@@ -146,8 +179,9 @@ class ExecManager:
 
     def _on_capacity_change(self) -> None:
         # same contract as the completion kick: only wake the Emgr when it
-        # actually holds tasks back for capacity
-        if self._backlog:
+        # actually holds tasks back for capacity (_backlog_uids spans the
+        # classic backlog AND the fair-share tenant lanes)
+        if self._backlog_uids:
             self.broker.kick(PENDING_QUEUE)
 
     def release_resources(self) -> None:
@@ -241,6 +275,16 @@ class ExecManager:
                         if (task is not None and not task.is_final
                                 and uid not in self._backlog_uids
                                 and uid not in self._submitted):
+                            if self._fair_policy is not None:
+                                lane = self._lane_for(task)
+                                lane.backlog.setdefault(
+                                    task.slots, deque()).append(
+                                        (next(self._backlog_seq), task))
+                                self._backlog_uids.add(uid)
+                                if (CHAIN_TAG in task.tags
+                                        or DAG_TAG in task.tags):
+                                    lane.has_chain_backlog = True
+                                continue
                             self._backlog.setdefault(
                                 task.slots, deque()).append(
                                     (next(self._backlog_seq), task))
@@ -288,6 +332,11 @@ class ExecManager:
             fusing = (set(fuse_members()) if fuse_members is not None
                       else (set(known) if fusion else set()))
             with self._lock:
+                if self._fair_policy is not None:
+                    # fair share + federation is not packed per-tenant this
+                    # release: the lanes fold back into the classic backlog
+                    # and the placement-aware packer runs as before
+                    self._merge_lanes_locked()
                 placements = self._pick_batch_federated_locked(
                     slots_map, set(known), fusing=fusing)
                 batch = []
@@ -301,7 +350,10 @@ class ExecManager:
             except Exception:  # noqa: BLE001 - dying RTS: heartbeat handles it
                 return
             with self._lock:
-                batch = self._pick_batch_locked(free, fusion=fusion)
+                if self._fair_policy is not None:
+                    batch = self._pick_batch_fair_locked(free, fusion=fusion)
+                else:
+                    batch = self._pick_batch_locked(free, fusion=fusion)
                 for task in batch:
                     self._submitted[task.uid] = task
                 self._chain_valve_locked(bool(batch), quiescent)
@@ -581,6 +633,7 @@ class ExecManager:
         self._prune_fronts_locked()
         self._chain_holding = False
         self._chain_held_ids = set()
+        self._picked_slots = 0
         if not self._backlog:
             return []
         if free is None:
@@ -602,6 +655,7 @@ class ExecManager:
                 # the head can never fit: hand it over, let the RTS decide
                 self._pop_head_locked(head)
                 self._head_skips = 0
+                self._picked_slots = free
                 return [head]
             if self._head_skips >= self.starvation_limit:
                 return []  # hold everything: drain until the head fits
@@ -631,10 +685,134 @@ class ExecManager:
                                           chain_ready=chain_ready)
         if not batch:
             return []
+        self._picked_slots = free - remaining   # slot charge (group-aware)
         if any(t.uid == head.uid for t in batch):
             self._head_skips = 0
         else:
             self._head_skips += 1
+        return batch
+
+    # -- fair share (serving mode) ---------------------------------------------#
+
+    def set_fair_share(self, policy) -> None:
+        """Install a weighted fair-share policy (duck-typed: anything with
+        ``weight(tenant) -> float``; see ``repro.serve.fair_share``). The
+        backlog then packs tenants by deficit-round-robin; ``None`` restores
+        the classic single-backlog packer."""
+        with self._lock:
+            self._fair_policy = policy
+            if policy is not None and self._backlog:
+                # migrate anything already backlogged into its tenant's lane
+                for dq in self._backlog.values():
+                    for seq, task in dq:
+                        lane = self._lane_for(task)
+                        lane.backlog.setdefault(task.slots, deque()).append(
+                            (seq, task))
+                        if CHAIN_TAG in task.tags or DAG_TAG in task.tags:
+                            lane.has_chain_backlog = True
+                self._backlog = {}
+            elif policy is None and self._lanes:
+                self._merge_lanes_locked()
+
+    def _lane_for(self, task: Task) -> _Lane:
+        # untagged tasks (dynamic stages minted mid-run, non-serve
+        # submissions) lane by workflow namespace so they still round-robin
+        # fairly rather than pooling into one anonymous lane
+        tenant = str(task.tags.get("_tenant")
+                     or task.tags.get("_wf_ns") or "")
+        lane = self._lanes.get(tenant)
+        if lane is None:
+            lane = self._lanes[tenant] = _Lane()
+        return lane
+
+    def _merge_lanes_locked(self) -> None:
+        """Fold every tenant lane back into the classic backlog in seq
+        order (federated fallback / fair share switched off)."""
+        entries = [e for lane in self._lanes.values()
+                   for dq in lane.backlog.values() for e in dq]
+        for lane in self._lanes.values():
+            lane.backlog.clear()
+            lane.has_chain_backlog = False
+        for seq, task in sorted(entries):
+            self._backlog.setdefault(task.slots, deque()).append((seq, task))
+            if CHAIN_TAG in task.tags or DAG_TAG in task.tags:
+                self._has_chain_backlog = True
+
+    def _pick_batch_fair_locked(self, free: Optional[int],
+                                fusion: bool = False) -> List[Task]:
+        """Weighted deficit-round-robin over the tenant lanes.
+
+        Each lane visit grants ``fair_quantum × weight`` members of credit,
+        then runs the UNCHANGED single-tenant packer against that lane's
+        private backlog (its width buckets, starvation guard and chain-hold
+        state context-swapped in), charging the members actually taken.
+        An atomic whole-group drain may overdraw; the debt carries and the
+        lane sits out rounds until repaid — so one tenant's huge sweep
+        interleaves with, rather than starves, everyone else. Because the
+        per-round batch spans several lanes, same-group members from
+        different tenants reach ``rts.submit`` together and pack into the
+        same carriers.
+        """
+        if free is None:
+            # capacity-blind RTS: drain every lane merged back to seq order
+            merged = heapq.merge(*(dq for lane in self._lanes.values()
+                                   for dq in lane.backlog.values()))
+            batch = []
+            for _, task in merged:
+                self._backlog_uids.discard(task.uid)
+                if not task.is_final:
+                    batch.append(task)
+            for lane in self._lanes.values():
+                lane.backlog.clear()
+                lane.has_chain_backlog = False
+            self._chain_holding = False
+            self._chain_held_ids = set()
+            return batch
+        tenants = list(self._lanes)
+        n = len(tenants)
+        merged_holding = False
+        merged_held: set = set()
+        batch: List[Task] = []
+        remaining = free
+        start = self._lane_cursor % n if n else 0
+        # two sweeps: the first grants quanta, the second lets lanes later
+        # in the rotation use slots earlier lanes left idle this round
+        for i in range(2 * n):
+            if remaining <= 0:
+                break
+            lane = self._lanes[tenants[(start + i) % n]]
+            if not lane.backlog:
+                # classic DRR: an empty lane forfeits unused credit (debt
+                # from an oversized drain is kept so a resubmitting heavy
+                # tenant cannot burst past its share)
+                lane.deficit = min(lane.deficit, 0.0)
+                continue
+            if i < n:
+                lane.deficit += (self.fair_quantum
+                                 * self._fair_policy.weight(tenants[(start + i) % n]))
+            if lane.deficit <= 0:
+                continue   # still repaying an oversized group drain
+            # context swap: the single-tenant packer runs on this lane
+            self._backlog = lane.backlog
+            self._head_skips = lane.head_skips
+            self._has_chain_backlog = lane.has_chain_backlog
+            self._chain_released = lane.chain_released
+            picked = self._pick_batch_locked(remaining, fusion=fusion)
+            lane.head_skips = self._head_skips
+            lane.has_chain_backlog = self._has_chain_backlog
+            lane.chain_released = self._chain_released
+            merged_holding = merged_holding or self._chain_holding
+            merged_held |= self._chain_held_ids
+            if picked:
+                batch.extend(picked)
+                lane.deficit -= len(picked)
+                remaining -= min(remaining, self._picked_slots)
+        if n:
+            self._lane_cursor = (start + 1) % n
+        self._backlog = {}
+        self._chain_released = set()
+        self._chain_holding = merged_holding
+        self._chain_held_ids = merged_held
         return batch
 
     def _pick_batch_federated_locked(
@@ -801,12 +979,19 @@ class ExecManager:
         self._chain_stalls += 1
         if self._chain_stalls >= 3:
             self._chain_released.update(self._chain_held_ids)
+            if self._fair_policy is not None:
+                # fair mode: the holds live in per-lane released sets (each
+                # lane prunes ids that are not its own on its next scan)
+                for lane in self._lanes.values():
+                    lane.chain_released.update(self._chain_held_ids)
             self._chain_stalls = 0
             self.broker.kick(PENDING_QUEUE)
 
     def n_backlogged(self) -> int:
         with self._lock:
-            return sum(len(dq) for dq in self._backlog.values())
+            return (sum(len(dq) for dq in self._backlog.values())
+                    + sum(len(dq) for lane in self._lanes.values()
+                          for dq in lane.backlog.values()))
 
     # -- RTSCallback -------------------------------------------------------------#
 
@@ -862,7 +1047,7 @@ class ExecManager:
         # tasks back for slots (unconditional kicks would wake it once per
         # completion for nothing). Racing a concurrent backlog append is
         # benign: the appender's own loop runs _submit_ready afterwards.
-        if self._backlog:
+        if self._backlog_uids:
             self.broker.kick(PENDING_QUEUE)
 
     # -- Heartbeat ------------------------------------------------------------#

@@ -92,7 +92,7 @@ class Task:
         "exit_code", "result", "exception", "upload_input_data",
         "copy_input_data", "copy_output_data", "tags", "backend",
         "parent_stage", "parent_pipeline", "submitted_at", "completed_at",
-        "_fn",
+        "ns", "_fn",
     )
 
     def __init__(
@@ -145,6 +145,10 @@ class Task:
         self.parent_pipeline: Optional[str] = None
         self.submitted_at: Optional[float] = None
         self.completed_at: Optional[float] = None
+        # Workflow namespace (api.compile mints one per workflow). Stamped by
+        # the compiler; journal transitions carry it so a multi-tenant service
+        # can route each record to the owning tenant's journal.
+        self.ns: Optional[str] = None
 
     # -- state ------------------------------------------------------------- #
 
@@ -223,6 +227,7 @@ class Task:
         t.parent_pipeline = d.get("parent_pipeline")
         t.submitted_at = None
         t.completed_at = None
+        t.ns = d.get("ns") or d.get("tags", {}).get("_wf_ns")
         return t
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -244,7 +249,7 @@ class Stage:
     """
 
     __slots__ = ("uid", "name", "tasks", "state", "state_history",
-                 "post_exec", "parent_pipeline", "_pending", "_nfailed")
+                 "post_exec", "parent_pipeline", "ns", "_pending", "_nfailed")
 
     def __init__(self, name: str = "",
                  post_exec: Optional[Callable[["Stage", "Pipeline"], None]] = None
@@ -261,6 +266,7 @@ class Stage:
         # pipeline (the paper's branching-as-decision-task).
         self.post_exec = post_exec
         self.parent_pipeline: Optional[str] = None
+        self.ns: Optional[str] = None   # workflow namespace (see Task.ns)
         self._pending = -1      # armed by begin_execution; -1 = not scheduled
         self._nfailed = 0
 
@@ -329,7 +335,7 @@ class Pipeline:
     """An ordered list of stages. Stage *i* starts only after *i-1* is final."""
 
     __slots__ = ("uid", "name", "stages", "state", "state_history",
-                 "_cursor", "lock", "_nfailed", "_append_listener")
+                 "_cursor", "lock", "ns", "_nfailed", "_append_listener")
 
     def __init__(self, name: str = "") -> None:
         self.uid = uid.generate("pipeline")
@@ -340,6 +346,7 @@ class Pipeline:
             {"state": self.state, "t": time.time()}
         ]
         self._cursor = 0          # index of the next stage to schedule
+        self.ns: Optional[str] = None   # workflow namespace (see Task.ns)
         # Adaptive post_exec callbacks append stages concurrently with the
         # WFProcessor reading them; both sides take this lock.
         self.lock = threading.RLock()

@@ -121,6 +121,9 @@ class StateService:
             "type": "transition", "kind": kind, "uid": obj.uid,
             "name": obj.name, "frm": frm, "to": to_state,
         }
+        ns = getattr(obj, "ns", None)
+        if ns is not None:
+            msg["ns"] = ns
         if len(to_states) > 1:
             msg["via"] = list(to_states[:-1])
         if extra:

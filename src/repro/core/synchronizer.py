@@ -73,6 +73,8 @@ class Synchronizer:
                 extra = dict(msg.get("extra", {}))
                 if "via" in msg:  # coalesced transition chain
                     extra["via"] = msg["via"]
+                if "ns" in msg:   # workflow namespace: per-tenant routing
+                    extra["ns"] = msg["ns"]
                 self.journal.transition(
                     kind=msg["kind"], uid=msg["uid"], name=msg["name"],
                     frm=msg["frm"], to=msg["to"], **extra)

@@ -99,6 +99,15 @@ class WFProcessor:
         # instead of polling workflow_final.
         self.done_event = threading.Event()
         self._open_pipelines = len(pipelines)
+        # Serving mode (multi-tenant daemon): pipelines may be added while
+        # the loops run (`add_pipelines`), per-workflow resume state is
+        # registered per namespace (`add_resumed_namespace`), and every
+        # pipeline closure is reported through this hook so submission
+        # handles can complete individually — done_event then only means
+        # "idle right now", not "drained forever".
+        self.on_pipeline_final: Optional[Callable[[Pipeline], None]] = None
+        self._ns_resume: Dict[str, tuple] = {}
+        self._ns_spill: Dict[str, str] = {}
         # Iteration counters (observability + the no-busy-wait tests): a
         # schedule pass only happens when a pipeline was actually dirty, so
         # an idle workflow performs zero passes no matter how long it idles.
@@ -139,6 +148,65 @@ class WFProcessor:
                 t.join(timeout=5.0)
         self._enqueue_thread = None
         self._dequeue_thread = None
+
+    # -- serving mode (multi-tenant daemon) ----------------------------------#
+
+    def add_pipelines(self, pipelines: List[Pipeline]) -> None:
+        """Admit pipelines into a *running* processor (serving mode).
+
+        The caller must have registered them in the WorkflowIndex first
+        (``index.add_pipeline``) so Dequeue can route their completions the
+        instant they are visible on the schedule queue.
+        """
+        with self._lock:
+            self.pipelines.extend(pipelines)
+            self._open_pipelines += len(pipelines)
+            self.done_event.clear()
+        for pipe in pipelines:
+            pipe.set_append_listener(self._mark_dirty)
+        self.broker.put_many(SCHEDULE_QUEUE, [p.uid for p in pipelines])
+
+    def add_resumed_namespace(self, ns: str, done: set,
+                              results: Dict[str, Any], omitted: set,
+                              spill_dir: Optional[str] = None) -> None:
+        """Register journal-replayed resume state scoped to one workflow
+        namespace: a resubmitted tenant workflow restores only ITS OWN
+        completed tasks even when task names collide across tenants."""
+        with self._lock:
+            self._ns_resume[ns] = (done, results, omitted)
+            if spill_dir is not None:
+                self._ns_spill[ns] = spill_dir
+
+    def _resume_for(self, task: Task) -> tuple:
+        """(done, results, omitted) governing ``task``'s resume: the
+        namespace-scoped set when its workflow registered one, else the
+        run-wide replay the classic single-workflow path installs."""
+        ns = task.tags.get("_wf_ns")
+        if ns is not None and ns in self._ns_resume:
+            return self._ns_resume[ns]
+        return self.resumed_done, self.resumed_results, self.result_omitted
+
+    def _spill_dir_for(self, task: Task) -> Optional[str]:
+        ns = task.tags.get("_wf_ns")
+        if ns is not None and ns in self._ns_spill:
+            return self._ns_spill[ns]
+        return self.spill_dir
+
+    def note_pipeline_closed(self, pipe: Pipeline) -> None:
+        """Account a pipeline finalized OUTSIDE the completion chain (the
+        service's cancel path advances it to CANCELED itself): decrement the
+        open count and fire the closure hook exactly once."""
+        with self._lock:
+            self._open_pipelines -= 1
+            if self._open_pipelines <= 0:
+                self.done_event.set()
+        if self.on_pipeline_final is not None:
+            try:
+                self.on_pipeline_final(pipe)
+            except Exception:  # noqa: BLE001 - service hook, never fatal
+                self.component_errors.append(
+                    f"on_pipeline_final[{pipe.uid}]: "
+                    f"{traceback.format_exc(limit=5)}")
 
     def threads_alive(self) -> Dict[str, bool]:
         return {
@@ -263,7 +331,8 @@ class WFProcessor:
         self.index.add_stage(stage)
         payload = []
         for task in stage.tasks:
-            if (task.name in self.resumed_done
+            resumed_done, _, _ = self._resume_for(task)
+            if (task.name in resumed_done
                     and task.state == st.INITIAL
                     and not self._result_lost(task)
                     and self._restore_resumed(task, sink)):
@@ -510,14 +579,15 @@ class WFProcessor:
         the journaled value cannot be decoded (a spilled fused-array whose
         sidecar file is missing or corrupted): consumers must never receive
         a silently-wrong input on resume."""
-        if task.result is None and task.name in self.resumed_results:
+        _, resumed_results, _ = self._resume_for(task)
+        if task.result is None and task.name in resumed_results:
             try:
                 task.result = decode_journal_value(
-                    self.resumed_results[task.name])
+                    resumed_results[task.name])
             except Exception:  # noqa: BLE001 - undecodable: re-run producer
                 return False
         ns = task.tags.get("_wf_ns")
-        if ns is not None and (task.name in self.resumed_results
+        if ns is not None and (task.name in resumed_results
                                or task.result is not None):
             RESULTS.put(ns, task.name, task.result)
         self.svc.advance_seq(
@@ -530,7 +600,8 @@ class WFProcessor:
         """True when a DONE task's value never reached the journal and a
         data-flow consumer may need it: re-run the producer on resume
         instead of resuming it value-less."""
-        return (task.name in self.result_omitted
+        _, _, result_omitted = self._resume_for(task)
+        return (task.name in result_omitted
                 and task.tags.get("_wf_ns") is not None)
 
     def _route_result(self, task: Task) -> Dict[str, Any]:
@@ -565,7 +636,7 @@ class WFProcessor:
             # encoding that would blow the result cap; with no sidecar
             # directory fall back to result_omitted → producer re-runs
             try:
-                record = encode(self.spill_dir)
+                record = encode(self._spill_dir_for(task))
             except Exception:  # noqa: BLE001 - spill failed: omit, re-run
                 record = None
             if record is not None:
@@ -595,7 +666,7 @@ class WFProcessor:
         # journal it (array values from fused kernels running on the
         # SCALAR path land here — without the spill, resume would re-run
         # every DONE member of a fuse=False run)
-        record = spill_journal_value(task.result, self.spill_dir)
+        record = spill_journal_value(task.result, self._spill_dir_for(task))
         if record is not None:
             return {"result": record}
         return {"result_omitted": True}
@@ -661,3 +732,10 @@ class WFProcessor:
             self._open_pipelines -= 1
             if self._open_pipelines <= 0:
                 self.done_event.set()
+        if self.on_pipeline_final is not None:
+            try:
+                self.on_pipeline_final(pipe)
+            except Exception:  # noqa: BLE001 - service hook, never fatal
+                self.component_errors.append(
+                    f"on_pipeline_final[{pipe.uid}]: "
+                    f"{traceback.format_exc(limit=5)}")

@@ -132,6 +132,7 @@ class JaxRTS(LocalRTS):
                  shard: bool = True,
                  shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,
                  shard_hold_s: float = 0.25,
+                 serve_hold_s: float = 0.0,
                  **kwargs: Any) -> None:
         super().__init__(**kwargs)
         if devices is None:
@@ -156,6 +157,13 @@ class JaxRTS(LocalRTS):
         self.shard = shard
         self.shard_min_members = shard_min_members
         self.shard_hold_s = shard_hold_s
+        # serving mode (PR 8): >0 opens a continuous-batching window —
+        # fusible groups are parked briefly so same-kernel members from
+        # OTHER workflows (the fusion key excludes the namespace) can land
+        # in the same carriers. The window is a hard deadline, not an idle
+        # timeout: under a steady multi-tenant stream an idle re-arm would
+        # never fire and small tenants would starve behind it.
+        self.serve_hold_s = serve_hold_s
         self._meshable: Optional[bool] = None   # lazily probed device types
         # -- shard hold buffer ----------------------------------------------#
         # members of a wide group arrive as a stream of partial submissions
@@ -180,7 +188,12 @@ class JaxRTS(LocalRTS):
                              "dispatches": 0, "chain_links": 0,
                              "chain_carriers": 0, "sharded_dispatches": 0,
                              "shard_carriers": 0, "dag_carriers": 0,
-                             "dag_links": 0}
+                             "dag_links": 0, "cross_tenant_carriers": 0}
+        # per-tenant fan-out accounting: tenant label -> {"members",
+        # "shared_dispatches", "completions"}. A member's tenant label is
+        # its ``_tenant`` tag (stamped by the serving layer) or, absent
+        # that, its workflow namespace.
+        self.tenant_stats: Dict[str, Dict[str, int]] = {}
         # -- async data plane -------------------------------------------------#
         # dispatched-but-undrained carriers flow through this queue to a
         # small pool of drainer threads, which own unlease + release: the
@@ -367,8 +380,95 @@ class JaxRTS(LocalRTS):
             if entry[0] == "chain":
                 self._assemble_chain(chains[entry[1]], out, free)
                 continue
+            if (self.serve_hold_s > 0
+                    and self._kernel_spec(groups[entry[1]][0]) is not None):
+                self._serve_hold(entry[1], groups[entry[1]], out, free)
+                continue
             self._pack_or_hold(entry[1], groups[entry[1]], out, free)
         return out
+
+    def _serve_hold(self, key: str, members: List[Task], out: List[Task],
+                    free: Optional[int]) -> None:
+        """Continuous batching (serving mode): park a fused group so
+        key-compatible members from other tenants can join its carriers.
+
+        Reuses the shard-hold buffer (``_held``) so cancellation,
+        ``in_flight`` and ``stop`` see held members with no extra plumbing
+        — but with different emission rules: capacity-sized batches go out
+        immediately (a full batch gains nothing by waiting) and the
+        remainder waits for a HARD ``serve_hold_s`` deadline rather than
+        an idle re-arm, so a lone tenant's tail is never starved by a busy
+        neighbour keeping the stream "active"."""
+        capacity = max(1, len(self._devices) * self.fusion_max_batch)
+        arm_key = None
+        with self._hold_lock:
+            held = self._held.setdefault(key, [])
+            held.extend(members)
+            self._hold_seen[key] = self._hold_seen.get(key, 0) + len(members)
+            batches: List[List[Task]] = []
+            while len(held) >= capacity:
+                batches.append(held[:capacity])
+                del held[:capacity]
+            if not held:
+                self._held.pop(key, None)
+                self._hold_seen.pop(key, None)
+                timer = self._hold_timers.pop(key, None)
+                if timer is not None:
+                    timer.cancel()
+            elif key not in self._hold_timers:
+                arm_key = key   # deadline runs from the FIRST hold
+        for batch in batches:
+            self._pack_group(self._interleave_tenants(batch), out, free)
+        if arm_key is not None:
+            timer = threading.Timer(self.serve_hold_s, self._flush_serve,
+                                    args=(arm_key,))
+            timer.daemon = True
+            with self._hold_lock:
+                if arm_key in self._held and arm_key not in self._hold_timers:
+                    self._hold_timers[arm_key] = timer
+                    timer.start()
+
+    def _flush_serve(self, key: str) -> None:
+        """Deadline flush for a serve-held group: pack whatever
+        accumulated, unconditionally — no busy/progress re-arm."""
+        if self._stop.is_set():
+            return
+        with self._hold_lock:
+            members = self._held.pop(key, None)
+            self._hold_seen.pop(key, None)
+            self._hold_timers.pop(key, None)
+        if not members:
+            return
+        out: List[Task] = []
+        self._pack_group(self._interleave_tenants(members), out,
+                         self.free_slots())
+        if out:
+            super().submit(out)
+
+    @staticmethod
+    def _interleave_tenants(members: List[Task]) -> List[Task]:
+        """Round-robin members across tenants before packing.
+
+        A hold accumulates members in arrival order — one tenant's whole
+        sweep, then the next — and the planner slices carriers off that
+        sequence, which would hand each carrier back to a single tenant.
+        Interleaving makes every carrier a cross-tenant mix AND every
+        dispatch deliver progress to every waiting tenant (per-member
+        order within a tenant is preserved)."""
+        by_tenant: Dict[Any, List[Task]] = {}
+        for m in members:
+            label = m.tags.get("_tenant") or m.tags.get("_wf_ns")
+            by_tenant.setdefault(label, []).append(m)
+        if len(by_tenant) <= 1:
+            return members
+        queues = [list(reversed(q)) for q in by_tenant.values()]
+        mixed: List[Task] = []
+        while queues:
+            queues = [q for q in queues if q]
+            for q in queues:
+                if q:
+                    mixed.append(q.pop())
+        return mixed
 
     def _pack_or_hold(self, key: str, members: List[Task], out: List[Task],
                       free: Optional[int]) -> None:
@@ -663,6 +763,15 @@ class JaxRTS(LocalRTS):
                       compose: bool = True, mesh_shards: int = 0,
                       plan: Optional[Dict[str, Any]] = None,
                       dag: bool = False) -> Task:
+        # tenant accounting: the planners REUSE one plan record dict across
+        # a group's carriers, so copy before stamping this carrier's tenant
+        # mix onto it (the stamp differs per carrier)
+        tenants = {m.tags.get("_tenant") or m.tags.get("_wf_ns")
+                   for link in links for m in link}
+        tenants.discard(None)
+        if plan is not None:
+            plan = dict(plan)
+            plan["tenants"] = max(1, len(tenants))
         batch = _FusedBatch(links, compose=compose, mesh_shards=mesh_shards,
                             plan=plan, dag=dag)
         hints = [m.duration_hint for m in batch.members
@@ -689,6 +798,18 @@ class JaxRTS(LocalRTS):
             self._fused[carrier.uid] = batch
             for m in batch.members:
                 self._member_carrier[m.uid] = carrier.uid
+            if len(tenants) > 1:
+                self.fusion_stats["cross_tenant_carriers"] += 1
+            for label in tenants:
+                ts = self.tenant_stats.setdefault(
+                    label, {"members": 0, "shared_dispatches": 0,
+                            "completions": 0})
+                ts["members"] += sum(
+                    1 for m in batch.members
+                    if (m.tags.get("_tenant") or m.tags.get("_wf_ns"))
+                    == label)
+                if len(tenants) > 1:
+                    ts["shared_dispatches"] += 1
             if dag:
                 self.fusion_stats["dag_carriers"] += 1
             elif n > 1:
@@ -836,13 +957,19 @@ class JaxRTS(LocalRTS):
                 self._requeue(carrier)   # whole group, once, at the front
             return
 
+        tenant_of = {m.uid: (m.tags.get("_tenant") or m.tags.get("_wf_ns"))
+                     for m in batch.members}
+
         def deliver(c: TaskCompletion) -> None:
             if batch.plan is not None:
                 # postmortem perf debugging: every member's journal record
                 # carries the carrier's chosen plan (mesh shape or lanes)
                 c.plan = batch.plan
+            label = tenant_of.get(c.uid)
             with self._fusion_lock:
                 batch.pending.discard(c.uid)
+                if label is not None and label in self.tenant_stats:
+                    self.tenant_stats[label]["completions"] += 1
             self._deliver(c)
 
         mesh_devices = None

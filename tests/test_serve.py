@@ -1,0 +1,337 @@
+"""Serving-layer tests: multi-tenant EnsembleService, admission control,
+fair share, cross-tenant continuous batching, per-tenant journal isolation
+and resume, cancel isolation, and the socket daemon round-trip."""
+
+import threading
+import time
+
+import pytest
+
+from repro import api
+from repro.core import states as st
+from repro.core.results import STORE
+from repro.fusion import fusable
+from repro.serve import (AdmissionController, AdmissionError, EnsembleService,
+                         FairSharePolicy, InProcessClient, ServiceDaemon,
+                         SocketClient, TenantJournals, TenantQuota)
+from repro.core.pst import register_executable
+
+
+# --------------------------------------------------------------------------- #
+# Kernels (module-level: resume-stable registration)
+# --------------------------------------------------------------------------- #
+
+@fusable()
+def k_double(x):
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * 2.0
+
+
+@fusable()
+def k_slow(x):
+    import jax.numpy as jnp
+    time.sleep(0.01)
+    return jnp.asarray(x, jnp.float32) + 1.0
+
+
+register_executable("serve_test_double", k_double)
+
+
+def _value(v):
+    import numpy as np
+    attr = getattr(v, "value", None)
+    if callable(attr):
+        v = attr()
+    return float(np.asarray(v).reshape(-1)[0])
+
+
+def _sweep(base, n=8):
+    return [{"x": float(base + i)} for i in range(n)]
+
+
+def _service(**kwargs):
+    kwargs.setdefault("serve_hold_s", 0.25)
+    return EnsembleService(**kwargs).start()
+
+
+# --------------------------------------------------------------------------- #
+# Concurrent tenants: isolation + cross-tenant batching
+# --------------------------------------------------------------------------- #
+
+def test_identical_names_isolated_across_tenants():
+    """Two tenants submit workflows with IDENTICAL task names concurrently;
+    each reads back exactly its own values."""
+    svc = _service()
+    try:
+        h1 = svc.submit(api.ensemble(k_double, over=_sweep(0), name="m"),
+                        tenant="alice")
+        h2 = svc.submit(api.ensemble(k_double, over=_sweep(100), name="m"),
+                        tenant="bob")
+        assert h1.wait(60) and h2.wait(60)
+        assert h1.ns != h2.ns
+        for i in range(8):
+            assert _value(h1.results()[f"m-{i}"]) == 2.0 * i
+            assert _value(h2.results()[f"m-{i}"]) == 2.0 * (100 + i)
+    finally:
+        svc.stop()
+
+
+def test_cross_tenant_continuous_batching():
+    """Four concurrent tenants' same-kernel sweeps pack into shared
+    carriers: at least one dispatched carrier mixes >= 2 tenants, and the
+    per-tenant fan-out accounting records the shared dispatches."""
+    svc = _service()
+    try:
+        handles = [svc.submit(
+            api.ensemble(k_double, over=_sweep(100 * t), name="m"),
+            tenant=f"t{t}") for t in range(4)]
+        for h in handles:
+            assert h.wait(60)
+        stats = svc.stats()
+        assert stats["fusion"]["cross_tenant_carriers"] >= 1
+        # every tenant took part in at least one shared dispatch and got
+        # every one of its completions back
+        for t in range(4):
+            ts = stats["tenants"][f"t{t}"]
+            assert ts["shared_dispatches"] >= 1
+            assert ts["completions"] == 8
+        # the carrier plan stamped on completions records the tenant mix
+        for t, h in enumerate(handles):
+            for i in range(8):
+                assert _value(h.results()[f"m-{i}"]) == 2.0 * (100 * t + i)
+    finally:
+        svc.stop()
+
+
+def test_admission_codes():
+    quota = TenantQuota(max_in_flight_members=8, max_active=1)
+    adm = AdmissionController(default_quota=quota, max_backlog_members=12)
+    svc = _service(admission=adm, serve_hold_s=0.5)
+    try:
+        h = svc.submit(api.ensemble(k_slow, over=_sweep(0, 6), name="m"),
+                       tenant="alice")
+        with pytest.raises(AdmissionError) as e1:
+            svc.submit(api.ensemble(k_slow, over=_sweep(0, 6), name="m2"),
+                       tenant="alice")
+        assert e1.value.code in ("member-quota", "workflow-backlog")
+        with pytest.raises(AdmissionError) as e2:
+            svc.submit(api.ensemble(k_slow, over=_sweep(0, 8), name="m"),
+                       tenant="bob")
+        assert e2.value.code == "service-backlog"
+        assert h.wait(60)
+        # quota refunded after completion: the same submission admits now
+        h2 = svc.submit(api.ensemble(k_slow, over=_sweep(0, 6), name="m2"),
+                        tenant="alice")
+        assert h2.wait(60)
+    finally:
+        svc.stop()
+
+
+def test_fair_share_no_starvation():
+    """A heavy tenant's large backlog must not starve a light tenant: with
+    weighted DRR lanes the light tenant finishes long before the heavy
+    tenant's whole backlog drains."""
+    policy = FairSharePolicy()
+    policy.set_weight("heavy", 1.0)
+    policy.set_weight("light", 1.0)
+    svc = _service(fair_share=policy, serve_hold_s=0.05)
+    try:
+        heavy = [svc.submit(
+            api.ensemble(k_slow, over=_sweep(100 * k, 16), name="m"),
+            tenant="heavy") for k in range(3)]
+        light = svc.submit(api.ensemble(k_slow, over=_sweep(0, 4), name="m"),
+                           tenant="light")
+        assert light.wait(60)
+        for h in heavy:
+            assert h.wait(60)
+        stats = svc.stats()
+        assert stats["tenants"]["light"]["completions"] == 4
+        assert stats["tenants"]["heavy"]["completions"] == 48
+    finally:
+        svc.stop()
+
+
+# --------------------------------------------------------------------------- #
+# Cancellation: a canceled tenant must not disturb its batch neighbours
+# --------------------------------------------------------------------------- #
+
+def test_cancel_mid_hold_frees_only_that_tenant():
+    """Cancel tenant A while its members are parked in the continuous-
+    batching hold; tenant B's members (same hold, same fusion key) still
+    flush and complete."""
+    svc = _service(serve_hold_s=1.0)
+    try:
+        ha = svc.submit(api.ensemble(k_double, over=_sweep(0), name="m"),
+                        tenant="alice")
+        hb = svc.submit(api.ensemble(k_double, over=_sweep(100), name="m"),
+                        tenant="bob")
+        time.sleep(0.2)   # let both reach the RTS hold
+        ha.cancel()
+        assert ha.wait(30), "canceled submission must still finish"
+        assert hb.wait(60), "neighbour tenant must be unaffected"
+        for i in range(8):
+            assert _value(hb.results()[f"m-{i}"]) == 2.0 * (100 + i)
+        states = ha.task_states()
+        assert all(s in (st.CANCELED, st.DONE) for s in states.values())
+        assert any(s == st.CANCELED for s in states.values())
+        # alice's canceled members produced no results
+        canceled = [n for n, s in states.items() if s == st.CANCELED]
+        for name in canceled:
+            assert not STORE.has(ha.ns, name)
+        # the service keeps serving after a cancel
+        hc = svc.submit(api.ensemble(k_double, over=_sweep(200), name="m"),
+                        tenant="carol")
+        assert hc.wait(60)
+        assert _value(hc.results()["m-0"]) == 400.0
+    finally:
+        svc.stop()
+
+
+# --------------------------------------------------------------------------- #
+# Per-tenant journals: spill isolation + per-tenant resume
+# --------------------------------------------------------------------------- #
+
+def test_tenant_journal_and_spill_isolation(tmp_path):
+    root = str(tmp_path / "serve-journal")
+    tj = TenantJournals(root)
+    ja = tj.register("wf.0001", "alice")
+    tj.register("wf.0002", "bob")
+    # routed records land in the owning tenant's file only
+    tj.transition(kind="task", uid="u1", name="m-0", frm="A", to="B",
+                  ns="wf.0001")
+    tj.transition(kind="task", uid="u2", name="m-0", frm="A", to="B",
+                  ns="wf.0002")
+    tj.transition(kind="task", uid="u3", name="svc", frm="A", to="B")
+    tj.flush()
+    ra = tj.replay_tenant("alice")
+    rb = tj.replay_tenant("bob")
+    assert ra["records"] == 1 and rb["records"] == 1
+    assert ja.enabled and tj.enabled
+    # spill dirs are per-tenant: identical sha256 payloads from two tenants
+    # can never collide on one file (the cross-namespace spill-leak bugfix)
+    assert tj.tenant_spill_dir("alice") != tj.tenant_spill_dir("bob")
+    assert tj.tenant_spill_dir("alice").startswith(root)
+    # hostile tenant names cannot escape the root or collide after slugging
+    evil = tj.tenant_spill_dir("../../etc")
+    assert evil.startswith(root)
+    assert tj.tenant_spill_dir("a/b") != tj.tenant_spill_dir("a_b")
+    tj.close()
+
+
+def test_killed_service_resume_restores_only_requesting_tenant(tmp_path):
+    """Run two tenants to completion, tear the service down (simulated
+    daemon kill: journals survive), bring a fresh service up and resume
+    ONE tenant: its completed tasks are skipped with results restored,
+    and the other tenant's journal is untouched."""
+    root = str(tmp_path / "serve-journal")
+    svc = _service(journal_root=root)
+    try:
+        ha = svc.submit(api.ensemble(k_double, over=_sweep(0), name="m",
+                                     fuse=False), tenant="alice")
+        hb = svc.submit(api.ensemble(k_double, over=_sweep(100), name="m",
+                                     fuse=False), tenant="bob")
+        assert ha.wait(60) and hb.wait(60)
+    finally:
+        svc.stop()
+    STORE.clear_namespace(ha.ns)
+    STORE.clear_namespace(hb.ns)
+
+    calls = []
+
+    def probe(x):
+        # resume is keyed on task NAMES: if alice's journaled tasks are
+        # skipped, this body never runs
+        calls.append(x)
+        return x * 2.0
+
+    svc2 = _service(journal_root=root)
+    try:
+        h2 = svc2.submit(
+            api.ensemble(probe, over=_sweep(0), name="m", fuse=False),
+            tenant="alice", resume=True)
+        assert h2.wait(60)
+        states = h2.task_states()
+        assert all(s == st.DONE for s in states.values())
+        assert not calls, "resumed-DONE tasks must not re-execute"
+        # restored from alice's journal, not re-executed: values readable
+        for i in range(8):
+            assert _value(h2.results()[f"m-{i}"]) == 2.0 * i
+        # bob's journal stayed bob's: intact and never merged into alice's
+        bob_replay = svc2.journals.replay_tenant("bob")
+        assert ("task", "m-0") in bob_replay["state"]
+    finally:
+        svc2.stop()
+
+
+def test_resume_is_per_tenant_not_global(tmp_path):
+    """A tenant WITHOUT a journal history resumes nothing even when
+    another tenant completed identically-named tasks."""
+    root = str(tmp_path / "serve-journal")
+    svc = _service(journal_root=root)
+    try:
+        ha = svc.submit(api.ensemble(k_double, over=_sweep(0), name="m",
+                                     fuse=False), tenant="alice")
+        assert ha.wait(60)
+    finally:
+        svc.stop()
+
+    svc2 = _service(journal_root=root)
+    try:
+        # carol resumes: her journal is empty, so her tasks all RUN
+        hc = svc2.submit(
+            api.ensemble(k_double, over=_sweep(50), name="m", fuse=False),
+            tenant="carol", resume=True)
+        assert hc.wait(60)
+        for i in range(8):
+            assert _value(hc.results()[f"m-{i}"]) == 2.0 * (50 + i)
+    finally:
+        svc2.stop()
+
+
+# --------------------------------------------------------------------------- #
+# Protocol: in-process and socket round-trips
+# --------------------------------------------------------------------------- #
+
+def test_in_process_client_round_trip():
+    svc = _service()
+    try:
+        client = InProcessClient(svc)
+        assert client.hello()["server"] == "repro-serve"
+        h = client.submit("reg://serve_test_double", _sweep(0, 4),
+                          tenant="alice", name="m")
+        assert client.wait(h, timeout=60)
+        results = client.result(h)
+        assert results["m-1"] == pytest.approx(2.0)
+        assert set(client.states(h).values()) == {st.DONE}
+        stats = client.stats()
+        assert stats["tenants"]["alice"]["completions"] == 4
+    finally:
+        svc.stop()
+
+
+def test_socket_daemon_round_trip():
+    svc = _service()
+    daemon = ServiceDaemon(svc, port=0).start()
+    try:
+        with SocketClient("127.0.0.1", daemon.port) as c1, \
+                SocketClient("127.0.0.1", daemon.port) as c2:
+            assert c1.hello()["version"] == 1
+            h1 = c1.submit("reg://serve_test_double", _sweep(0, 4),
+                           tenant="alice", name="m")
+            h2 = c2.submit("reg://serve_test_double", _sweep(100, 4),
+                           tenant="bob", name="m")
+            # handles are daemon-scoped, not connection-scoped
+            assert c2.wait(h1, timeout=60) and c1.wait(h2, timeout=60)
+            assert c1.result(h1)["m-0"] == pytest.approx(0.0)
+            assert c1.result(h2)["m-0"] == pytest.approx(200.0)
+            # named rejection surfaces its code over the wire
+            from repro.serve.client import ServeRequestError
+            svc.admission.register("caged", TenantQuota(max_active=0,
+                                                        max_in_flight_members=1))
+            with pytest.raises(ServeRequestError) as err:
+                c1.submit("reg://serve_test_double", _sweep(0, 4),
+                          tenant="caged")
+            assert err.value.code == "member-quota"
+    finally:
+        daemon.stop()
+        svc.stop()
