@@ -22,9 +22,31 @@ import json
 import sys
 import time
 
+from repro import telemetry
+
 # every emitted row, mirrored as dicts so --json can persist the run as a
 # machine-readable artifact (the CI uploads it per-PR)
 _ROWS: list = []
+
+
+def _telemetry_summary() -> dict:
+    """Per-kernel dispatch-latency quantiles + jit-cache hit rate for the
+    bench that just ran (the registry is zeroed between benches)."""
+    kernels = {}
+    for k in telemetry.kernels():
+        q = telemetry.quantiles(k)
+        if not q.get("count"):
+            continue
+        kernels[k] = {"p50_us": round((q["p50"] or 0.0) * 1e6, 1),
+                      "p99_us": round((q["p99"] or 0.0) * 1e6, 1),
+                      "count": q["count"]}
+    jit = {lbls.get("outcome", "?"): c.value
+           for lbls, c in telemetry.REGISTRY.collect(
+               "counter", "fusion_jit_cache_total")}
+    lookups = jit.get("hit", 0) + jit.get("miss", 0)
+    jit["hit_rate"] = (round(jit.get("hit", 0) / lookups, 3)
+                       if lookups else None)
+    return {"kernels": kernels, "jit_cache": jit}
 
 
 def _row(name: str, us_per_call: float, **derived) -> None:
@@ -374,16 +396,34 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="enable span tracing and export a Chrome-trace "
+                         "(Perfetto) JSON of the whole run")
     args = ap.parse_args()
     picks = [s for s in args.only.split(",") if s] or list(BENCHES)
+    if args.trace:
+        telemetry.enable()
     print("name,us_per_call,derived")
     for name in picks:
+        # zero the metrics (handles survive) so each bench's telemetry
+        # block reflects that bench alone; spans accumulate across the run
+        telemetry.REGISTRY.reset()
+        first = len(_ROWS)
         t0 = time.time()
         try:
             BENCHES[name](args.quick)
         except Exception as e:  # noqa: BLE001 - report, keep benching
             _row(f"{name}_ERROR", 0.0, error=f"{type(e).__name__}:{e}")
         sys.stderr.write(f"[bench] {name} took {time.time()-t0:.1f}s\n")
+        summary = _telemetry_summary()
+        if summary["kernels"] or summary["jit_cache"]["hit_rate"] is not None:
+            for r in _ROWS[first:]:
+                r["telemetry"] = summary
+    if args.trace:
+        telemetry.export_chrome_trace(args.trace)
+        sys.stderr.write(f"[bench] wrote Chrome trace to {args.trace} "
+                         f"({len(telemetry.TRACER)} spans, "
+                         f"{telemetry.TRACER.dropped_spans} dropped)\n")
     if args.json:
         with open(args.json, "w", encoding="utf-8") as fh:
             json.dump({"benchmarks": picks, "quick": args.quick,

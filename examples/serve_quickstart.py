@@ -49,6 +49,18 @@ def main() -> None:
         print(f"cross-tenant carriers: "
               f"{stats['fusion'].get('cross_tenant_carriers', 0)}")
         print(f"admission: {stats['admission']}")
+
+        # the `metrics` verb: per-tenant telemetry (queue-wait quantiles
+        # inside the serve hold window, carrier sharing, completions)
+        metrics = client.metrics()
+        for tenant, m in sorted(metrics["tenants"].items()):
+            wait = m.get("queue_wait") or {}
+            p50 = wait.get("p50")
+            print(f"metrics[{tenant}]: members={m.get('members', 0)} "
+                  f"shared_carriers={m.get('shared_carriers', 0)} "
+                  f"completions={m.get('completions', 0)} "
+                  f"queue_wait_p50="
+                  f"{f'{p50 * 1e3:.1f}ms' if p50 is not None else 'n/a'}")
     finally:
         service.stop()
 

@@ -25,6 +25,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Union
 
+from .. import telemetry as tel
 from . import states as st
 from .broker import Broker
 from .exceptions import EnTKError, ValueError_
@@ -225,6 +226,8 @@ class AppManager:
         """
         # ---- setup (profiled: EnTK Setup Overhead) --------------------------- #
         self.prof.begin(ENTK_SETUP)
+        setup_span = tel.span("appmanager.setup", "am",
+                              pipelines=len(self.workflow), resume=resume)
         self._validate(resume)
         resumed_done = set()
         resumed_retries: Dict[str, int] = {}
@@ -270,6 +273,7 @@ class AppManager:
             heartbeat_interval=self.heartbeat_interval,
             max_rts_restarts=self.max_rts_restarts,
             straggler_factor=self.straggler_factor)
+        setup_span.end()
         self.prof.end(ENTK_SETUP)
 
         # ---- resources + execution ---------------------------------------- #
@@ -321,6 +325,7 @@ class AppManager:
         if self.broker is not None:
             raise EnTKError("service already started")
         self.prof.begin(ENTK_SETUP)
+        setup_span = tel.span("appmanager.setup", "am", service=True)
         self.broker = Broker()
         self.journal = (journal if journal is not None
                         else Journal(self.journal_path,
@@ -341,6 +346,7 @@ class AppManager:
             heartbeat_interval=self.heartbeat_interval,
             max_rts_restarts=self.max_rts_restarts,
             straggler_factor=self.straggler_factor)
+        setup_span.end()
         self.prof.end(ENTK_SETUP)
         self.emgr.acquire_resources()
         chain_ok = getattr(self.emgr.rts, "supports_chain_fusion", None)
@@ -488,15 +494,23 @@ class AppManager:
         if self.emgr is not None:
             self.emgr.stop()
         self.prof.begin(ENTK_TEARDOWN)
-        if self.wfp is not None:
-            self.wfp.stop()
-        if self.sync is not None:
-            self.sync.stop()
-        if self.journal is not None:
-            self.journal.session("end")
-            self.journal.close()
-        if self.broker is not None:
-            self.broker.close()
+        with tel.span("appmanager.teardown", "am"):
+            if self.wfp is not None:
+                self.wfp.stop()
+            if self.sync is not None:
+                self.sync.stop()
+            if self.journal is not None:
+                self.journal.session("end")
+                self.journal.close()
+            if self.broker is not None:
+                self.broker.close()
+        if self.journal_path and tel.enabled():
+            # journal-adjacent metrics snapshot: <journal>.telemetry.jsonl
+            # lands next to the WAL so a postmortem reads both side by side
+            try:
+                tel.export_jsonl(f"{self.journal_path}.telemetry.jsonl")
+            except OSError:
+                pass
         self.prof.end(ENTK_TEARDOWN)
 
     # -- component supervision ---------------------------------------------------#

@@ -34,6 +34,7 @@ import traceback
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from .. import telemetry as tel
 from . import states as st
 from .broker import Broker
 from .profiler import ENTK_MANAGEMENT, RTS_OVERHEAD, RTS_TEARDOWN, Profiler
@@ -383,7 +384,10 @@ class ExecManager:
         self.svc.flush(sink)  # publish before the RTS can complete anything
         if not submittable:
             return
-        rts.submit(submittable)
+        with tel.span("emgr.submit", "emgr", tasks=len(submittable)):
+            rts.submit(submittable)
+        tel.counter("emgr_submit_rounds_total").inc()
+        tel.counter("emgr_submitted_tasks_total").inc(len(submittable))
         self.prof.add(RTS_OVERHEAD, time.perf_counter() - t1)
 
     def _prune_fronts_locked(self) -> None:
@@ -807,6 +811,10 @@ class ExecManager:
                 batch.extend(picked)
                 lane.deficit -= len(picked)
                 remaining -= min(remaining, self._picked_slots)
+                tel.counter("emgr_fair_grants_total",
+                            tenant=tenants[(start + i) % n]).inc()
+                tel.counter("emgr_fair_granted_tasks_total",
+                            tenant=tenants[(start + i) % n]).inc(len(picked))
         if n:
             self._lane_cursor = (start + 1) % n
         self._backlog = {}

@@ -28,6 +28,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, Optional, Union
 
+from .. import telemetry as tel
 from . import states as st
 from .broker import Broker
 from .pst import Pipeline, Stage, Task
@@ -107,6 +108,13 @@ class StateService:
         for s in to_states:
             obj.advance(s)  # validates; raises StateTransitionError
         to_state = to_states[-1]
+        if tel.enabled():
+            # gated: this is THE hottest chokepoint in the toolkit — one
+            # call per PST transition batch at O(10⁴) tasks. Off by
+            # default; when tracing is on, the counter makes the state
+            # machine's traffic visible per kind and destination state.
+            tel.counter("state_transitions_total", kind=kind,
+                        to=to_state).inc()
         if transact is None:
             transact = self.strict or (self.durable and to_state in _FINAL)
         if (not transact and not self.durable and not self.strict

@@ -27,6 +27,7 @@ import time
 import traceback
 from typing import Any, Callable, Dict, List, Optional
 
+from .. import telemetry as tel
 from . import states as st
 from .broker import Broker
 from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
@@ -252,23 +253,25 @@ class WFProcessor:
             done_tags = []
             sink: List[Any] = []
             pending: List[str] = []
-            try:
-                for tag, uid in msgs:
-                    # schedule before ack: a crash mid-batch leaves dirty
-                    # marks unacked for redelivery; re-visits are idempotent
-                    if uid not in seen:
-                        seen.add(uid)
-                        pipe = self.index.pipeline(uid)
-                        if pipe is not None:
-                            self.schedule_passes += 1
-                            self._schedule_pipeline(pipe, sink, pending)
-                    done_tags.append(tag)
-            finally:
-                self.svc.flush(sink)
-                if pending:
-                    # one pending-queue hand-off for the whole dirty batch
-                    self.broker.put_many(PENDING_QUEUE, pending)
-                self.broker.ack_many(SCHEDULE_QUEUE, done_tags)
+            with tel.span("wfp.enqueue_batch", "wfp", msgs=len(msgs)):
+                try:
+                    for tag, uid in msgs:
+                        # schedule before ack: a crash mid-batch leaves dirty
+                        # marks unacked for redelivery; re-visits are
+                        # idempotent
+                        if uid not in seen:
+                            seen.add(uid)
+                            pipe = self.index.pipeline(uid)
+                            if pipe is not None:
+                                self.schedule_passes += 1
+                                self._schedule_pipeline(pipe, sink, pending)
+                        done_tags.append(tag)
+                finally:
+                    self.svc.flush(sink)
+                    if pending:
+                        # one pending-queue hand-off for the whole dirty batch
+                        self.broker.put_many(PENDING_QUEUE, pending)
+                    self.broker.ack_many(SCHEDULE_QUEUE, done_tags)
             self.prof.add(ENTK_MANAGEMENT, time.perf_counter() - t0)
 
     def _schedule_pipeline(self, pipe: Pipeline,
@@ -441,6 +444,8 @@ class WFProcessor:
             sig = nsig
         if len(published) < 2:
             return
+        tel.counter("wfp_superstages_total").inc()
+        tel.histogram("wfp_superstage_stages").observe(len(published))
         # stamp the superstage EXTENT ("ss" = highest co-published link per
         # chain) onto every published link task: the Emgr only holds a
         # chain fragment for links it knows were co-published — a chain
@@ -476,6 +481,7 @@ class WFProcessor:
             sink: List[Any] = []
             exec_s = staging_s = 0.0
             n_handled = 0
+            span = tel.span("wfp.dequeue_batch", "wfp", msgs=len(msgs))
             try:
                 for tag, msg in msgs:
                     # tag first: a message that crashes the handler is acked
@@ -490,6 +496,7 @@ class WFProcessor:
                 # one lock round for the whole batch; a crash mid-batch
                 # leaves only the untouched suffix for redelivery
                 self.broker.ack_many(DONE_QUEUE, done_tags)
+                span.set(handled=n_handled).end()
             if n_handled:
                 # per-batch accumulation: Profiler.add takes a global lock
                 self.prof.add(TASK_EXECUTION, exec_s, count=n_handled)
@@ -682,10 +689,12 @@ class WFProcessor:
         if stage.failed_tasks and self.on_task_failure == "fail_stage":
             self.svc.advance(stage, st.STAGE_FAILED, sink=sink)
             pipe.mark_stage_final(stage.uid)
+            tel.counter("wfp_stage_closures_total", outcome="failed").inc()
             self._finalize_pipeline(pipe, failed=True, sink=sink)
             return
         self.svc.advance(stage, st.STAGE_DONE, sink=sink)
         pipe.mark_stage_final(stage.uid)
+        tel.counter("wfp_stage_closures_total", outcome="done").inc()
         if stage.post_exec is not None:
             # adaptivity: the hook may append stages to the pipeline (the
             # append listener marks it dirty for Enqueue)
@@ -728,6 +737,8 @@ class WFProcessor:
         prefix = ((st.PIPELINE_SCHEDULING,)
                   if pipe.state == st.PIPELINE_INITIAL else ())
         self.svc.advance_seq(pipe, prefix + (to,), sink=sink)
+        tel.counter("wfp_pipeline_closures_total",
+                    outcome="failed" if failed else "done").inc()
         with self._lock:  # closures arrive under different pipeline locks
             self._open_pipelines -= 1
             if self._open_pipelines <= 0:

@@ -66,12 +66,27 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import telemetry as tel
 from ..core.pst import Task, resolve_executable
 from ..rts.base import TaskCompletion
 from .groups import FusionSpec, fusion_spec, parse_dag_tag, reduction_spec
 from .handles import ArrayResult, LazySlice
 
 Deliver = Callable[[TaskCompletion], None]
+
+# jit-cache accounting: hit / miss (a miss IS a trace+compile — what the
+# docs call a recompile) / uncached (a non-hashable statics key bypasses
+# the cache entirely, retracing every dispatch) / eviction (LRU pressure:
+# the next same-key dispatch will recompile).
+_JIT_HITS = tel.counter("fusion_jit_cache_total", outcome="hit")
+_JIT_MISSES = tel.counter("fusion_jit_cache_total", outcome="miss")
+_JIT_UNCACHED = tel.counter("fusion_jit_cache_total", outcome="uncached")
+_JIT_EVICTIONS = tel.counter("fusion_jit_cache_evictions_total")
+
+
+def _kernel_label(fn: Any) -> str:
+    """Stable per-kernel metric label (the dispatch-latency family key)."""
+    return getattr(fn, "__name__", None) or str(fn)
 
 TRAMPOLINE = "reg://_api.call"
 
@@ -368,18 +383,22 @@ def _statics_key(static_kw: dict) -> Optional[Tuple]:
 
 def _jit_cached(cache_key: Optional[Tuple], build: Callable[[], Callable]
                 ) -> Callable:
-    if cache_key is not None:
-        with _jit_lock:
-            jitted = _jit_cache.get(cache_key)
-            if jitted is not None:
-                _jit_cache.move_to_end(cache_key)
-                return jitted
+    if cache_key is None:
+        _JIT_UNCACHED.inc()
+        return build()
+    with _jit_lock:
+        jitted = _jit_cache.get(cache_key)
+        if jitted is not None:
+            _jit_cache.move_to_end(cache_key)
+            _JIT_HITS.inc()
+            return jitted
+    _JIT_MISSES.inc()
     jitted = build()
-    if cache_key is not None:
-        with _jit_lock:
-            _jit_cache[cache_key] = jitted
-            while len(_jit_cache) > _JIT_CACHE_MAX:
-                _jit_cache.popitem(last=False)
+    with _jit_lock:
+        _jit_cache[cache_key] = jitted
+        while len(_jit_cache) > _JIT_CACHE_MAX:
+            _jit_cache.popitem(last=False)
+            _JIT_EVICTIONS.inc()
     return jitted
 
 
@@ -405,7 +424,7 @@ class _LinkPlan:
     """One prepared chain link: resolved kernel + stacked batch kwargs."""
 
     __slots__ = ("tasks", "fn", "spec", "static_kw", "shared_kw", "stacked",
-                 "valid_lens", "carry_name", "statics_key")
+                 "valid_lens", "carry_name", "statics_key", "t_dispatch")
 
     def __init__(self, tasks, fn, spec, static_kw, shared_kw, stacked,
                  valid_lens, carry_name) -> None:
@@ -418,6 +437,7 @@ class _LinkPlan:
         self.valid_lens = valid_lens
         self.carry_name = carry_name
         self.statics_key = _statics_key(static_kw)
+        self.t_dispatch: Optional[float] = None
 
 
 def _mesh_key(mesh) -> Tuple:
@@ -659,8 +679,11 @@ def execute_fused(
         calls = [member_call(t, overrides) for t in live]
         fn, spec, static_kw, shared_kw, stacked, valid_lens, _ = \
             _prepare(calls)
+        t0 = time.perf_counter()
         out = _dispatch(fn, spec, static_kw, shared_kw, stacked)
         out = jax.block_until_ready(out)
+        tel.observe_dispatch(_kernel_label(fn), "fused",
+                             time.perf_counter() - t0)
         fan = _FanOut(out, len(live), spec.check_finite,
                       valid_lens if spec.trim_outputs else None,
                       treedef_key=(fn, _statics_key(static_kw)))
@@ -695,7 +718,10 @@ def _scalar_fallback(live: Sequence[Task], cancel_event: threading.Event,
             continue
         try:
             fn, args, kwargs = member_call(task, overrides)
+            t0 = time.perf_counter()
             result = fn(*args, **kwargs)
+            tel.observe_dispatch(_kernel_label(fn), "scalar",
+                                 time.perf_counter() - t0)
             spec = fusion_spec(fn)
             if (spec is not None and spec.check_finite
                     and hasattr(result, "dtype")
@@ -755,6 +781,8 @@ class ChainExecution:
         self.fault_injector = fault_injector
         self.started = time.time()
         self._mesh = build_mesh(mesh_devices)
+        self.tier = ("shard" if self._mesh is not None
+                     else "chain" if len(self.links) > 1 else "fused")
         self.stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
                       "dispatches": 0, "chain_links": 0,
                       "sharded_dispatches": 0}
@@ -884,6 +912,7 @@ class ChainExecution:
                     out = plan.spec.batched(**kw, **plan.static_kw,
                                             **plan.shared_kw)
                 self.stats["dispatches"] += 1
+                plan.t_dispatch = time.perf_counter()
                 self._push(("link", idx, out))
                 carry = out
                 idx += 1
@@ -899,7 +928,9 @@ class ChainExecution:
             self.stats["dispatches"] += 1
             if mesh is not None:
                 self.stats["sharded_dispatches"] += 1
+            t_seg = time.perf_counter()
             for off, out in enumerate(outs):
+                segment[off].t_dispatch = t_seg
                 self._push(("link", idx + off, out))
             carry = outs[-1]
             idx = j
@@ -1008,6 +1039,9 @@ class ChainExecution:
         n = len(tasks)
         try:
             out = jax.block_until_ready(out)
+            if plan.t_dispatch is not None:
+                tel.observe_dispatch(_kernel_label(plan.fn), self.tier,
+                                     time.perf_counter() - plan.t_dispatch)
             fan = _FanOut(out, n, plan.spec.check_finite,
                           plan.valid_lens if plan.spec.trim_outputs else None,
                           treedef_key=(plan.fn, plan.statics_key))
@@ -1279,6 +1313,7 @@ class DagExecution(ChainExecution):
         super().__init__(links, devices, cancel_event, deliver,
                          canceled=canceled, fault_injector=fault_injector,
                          compose=compose, mesh_devices=mesh_devices)
+        self.tier = "dag-shard" if self._mesh is not None else "dag"
         self.stats["dag_links"] = 0
         self._meta: List[_DagNodeMeta] = []
         self._cols: List[List[int]] = []
@@ -1359,6 +1394,7 @@ class DagExecution(ChainExecution):
                     out = plan.spec.batched(**kw, **plan.static_kw,
                                             **plan.shared_kw)
                 self.stats["dispatches"] += 1
+                plan.t_dispatch = time.perf_counter()
                 self._push(("link", idx, out))
                 carry = out
                 idx += 1
@@ -1372,7 +1408,10 @@ class DagExecution(ChainExecution):
             self.stats["dispatches"] += 1
             if mesh is not None:
                 self.stats["sharded_dispatches"] += 1
+            t_seg = time.perf_counter()
             for off, out in enumerate(outs):
+                if self._plans[idx + off] is not None:   # reduce: no plan
+                    self._plans[idx + off].t_dispatch = t_seg
                 self._push(("link", idx + off, out))
                 if self._meta[idx + off].role == "e":
                     carry = out
@@ -1638,6 +1677,9 @@ class DagExecution(ChainExecution):
         n = len(tasks)
         try:
             out = jax.block_until_ready(out)
+            if plan.t_dispatch is not None:
+                tel.observe_dispatch(_kernel_label(plan.fn), self.tier,
+                                     time.perf_counter() - plan.t_dispatch)
             fan = _FanOut(out, n, plan.spec.check_finite,
                           plan.valid_lens if plan.spec.trim_outputs else None,
                           treedef_key=(plan.fn, plan.statics_key))
@@ -1695,8 +1737,12 @@ class DagExecution(ChainExecution):
         import jax
 
         task = self.links[k][0]
+        plan = self._plans[k]
         try:
             out = jax.block_until_ready(out)
+            if plan is not None and plan.t_dispatch is not None:
+                tel.observe_dispatch(_kernel_label(plan.fn), self.tier,
+                                     time.perf_counter() - plan.t_dispatch)
             value = jax.tree_util.tree_map(_reduce_host, out)
         except Exception:  # noqa: BLE001 - degrade this node and the rest
             self._degrade(k, ok, fail_reason, overrides)

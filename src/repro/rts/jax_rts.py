@@ -83,6 +83,7 @@ import time
 import traceback
 from typing import Any, Dict, List, Optional, Sequence, Set
 
+from .. import telemetry as tel
 from ..core.pst import Task, resolve_executable
 from ..fusion import engine as fusion_engine
 from ..fusion.groups import (GROUP_TAG, FusionSpec, fusion_spec,
@@ -90,8 +91,23 @@ from ..fusion.groups import (GROUP_TAG, FusionSpec, fusion_spec,
 from ..fusion.plans import (DEFAULT_MAX_BATCH, DEFAULT_MIN_CHAIN,
                             DEFAULT_SHARD_MIN_MEMBERS, MeshPlan, plan_chain,
                             plan_dag, plan_group, plan_mesh)
+from ..telemetry import MetricsRegistry
 from .base import Pilot, RequeueTask, ResourceDescription, TaskCompletion
 from .local import LocalRTS
+
+#: counter families behind the ``fusion_stats`` / ``tenant_stats`` snapshot
+#: properties (ISSUE 9 race fix: typed locked counters, not a shared dict)
+FUSION_EVENTS = "rts_fusion_events_total"
+TENANT_EVENTS = "rts_tenant_events_total"
+SERVE_HOLD_EVENTS = "rts_serve_hold_events_total"
+SERVE_QUEUE_WAIT = "serve_queue_wait_seconds"
+CARRIERS_TOTAL = "rts_carriers_total"
+
+_FUSION_STAT_KEYS = ("fused", "scalar_fallback", "failed", "dispatches",
+                     "chain_links", "chain_carriers", "sharded_dispatches",
+                     "shard_carriers", "dag_carriers", "dag_links",
+                     "cross_tenant_carriers")
+_TENANT_FIELDS = ("members", "shared_dispatches", "completions")
 
 
 class _FusedBatch:
@@ -179,21 +195,19 @@ class JaxRTS(LocalRTS):
         self._held: Dict[str, List[Task]] = {}
         self._hold_seen: Dict[str, int] = {}
         self._hold_timers: Dict[str, threading.Timer] = {}
+        self._hold_arrived: Dict[str, float] = {}   # member uid -> hold t0
         self._hold_lock = threading.Lock()
         self._fusion_lock = threading.Lock()
         self._fused: Dict[str, _FusedBatch] = {}      # carrier uid -> batch
         self._member_carrier: Dict[str, str] = {}     # member uid -> carrier
         self._fused_canceled: Set[str] = set()        # member uids
-        self.fusion_stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
-                             "dispatches": 0, "chain_links": 0,
-                             "chain_carriers": 0, "sharded_dispatches": 0,
-                             "shard_carriers": 0, "dag_carriers": 0,
-                             "dag_links": 0, "cross_tenant_carriers": 0}
-        # per-tenant fan-out accounting: tenant label -> {"members",
-        # "shared_dispatches", "completions"}. A member's tenant label is
-        # its ``_tenant`` tag (stamped by the serving layer) or, absent
-        # that, its workflow namespace.
-        self.tenant_stats: Dict[str, Dict[str, int]] = {}
+        # per-instance metrics registry (ISSUE 9). The old ``fusion_stats``
+        # and ``tenant_stats`` dicts were incremented from the packer, the
+        # carrier workers AND the drainer pool — a classic lost-update race.
+        # They are now read-only snapshot PROPERTIES assembled from typed
+        # locked counters in this registry; every writer goes through a
+        # shared counter handle instead of a plain dict cell.
+        self.metrics = MetricsRegistry()
         # -- async data plane -------------------------------------------------#
         # dispatched-but-undrained carriers flow through this queue to a
         # small pool of drainer threads, which own unlease + release: the
@@ -207,6 +221,36 @@ class JaxRTS(LocalRTS):
         self._drain_q: "queue.Queue" = queue.Queue()
         self._drainers: List[threading.Thread] = []
         self._n_drainers = 2
+
+    # -- stats snapshots (registry-backed, read-only) -------------------------#
+
+    @property
+    def fusion_stats(self) -> Dict[str, int]:
+        """Point-in-time snapshot of the fusion counters (plain dict, same
+        keys as ever — benchmarks and tests keep reading it unchanged)."""
+        out = {k: 0 for k in _FUSION_STAT_KEYS}
+        for labels, c in self.metrics.collect("counter", FUSION_EVENTS):
+            out[labels["kind"]] = c.value
+        return out
+
+    @property
+    def tenant_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant fan-out accounting snapshot: tenant label ->
+        ``{"members", "shared_dispatches", "completions"}``. A member's
+        tenant label is its ``_tenant`` tag (stamped by the serving layer)
+        or, absent that, its workflow namespace."""
+        out: Dict[str, Dict[str, int]] = {}
+        for labels, c in self.metrics.collect("counter", TENANT_EVENTS):
+            ts = out.setdefault(labels["tenant"],
+                                {f: 0 for f in _TENANT_FIELDS})
+            ts[labels["field"]] = c.value
+        return out
+
+    def _fusion_count(self, kind: str, n: int = 1) -> None:
+        self.metrics.counter(FUSION_EVENTS, kind=kind).inc(n)
+
+    def _tenant_count(self, tenant: str, field: str, n: int = 1) -> None:
+        self.metrics.counter(TENANT_EVENTS, tenant=tenant, field=field).inc(n)
 
     def start(self, resources: ResourceDescription) -> Pilot:
         n_logical = len(self._devices) * self._oversubscribe
@@ -401,9 +445,13 @@ class JaxRTS(LocalRTS):
         neighbour keeping the stream "active"."""
         capacity = max(1, len(self._devices) * self.fusion_max_batch)
         arm_key = None
+        now = time.perf_counter()
         with self._hold_lock:
+            opened = key not in self._held
             held = self._held.setdefault(key, [])
             held.extend(members)
+            for m in members:
+                self._hold_arrived[m.uid] = now
             self._hold_seen[key] = self._hold_seen.get(key, 0) + len(members)
             batches: List[List[Task]] = []
             while len(held) >= capacity:
@@ -417,7 +465,14 @@ class JaxRTS(LocalRTS):
                     timer.cancel()
             elif key not in self._hold_timers:
                 arm_key = key   # deadline runs from the FIRST hold
+        self.metrics.counter(
+            SERVE_HOLD_EVENTS, event="open" if opened else "extend").inc()
+        tel.event("serve.hold", "serve", key=key,
+                  event="open" if opened else "extend", n=len(members))
         for batch in batches:
+            self.metrics.counter(SERVE_HOLD_EVENTS,
+                                 event="capacity_flush").inc()
+            self._observe_hold_wait(batch)
             self._pack_group(self._interleave_tenants(batch), out, free)
         if arm_key is not None:
             timer = threading.Timer(self.serve_hold_s, self._flush_serve,
@@ -439,11 +494,29 @@ class JaxRTS(LocalRTS):
             self._hold_timers.pop(key, None)
         if not members:
             return
+        self.metrics.counter(SERVE_HOLD_EVENTS, event="deadline_flush").inc()
+        tel.event("serve.hold", "serve", key=key, event="deadline_flush",
+                  n=len(members))
+        self._observe_hold_wait(members)
         out: List[Task] = []
         self._pack_group(self._interleave_tenants(members), out,
                          self.free_slots())
         if out:
             super().submit(out)
+
+    def _observe_hold_wait(self, members: List[Task]) -> None:
+        """Serve-hold queue wait, per tenant: time from landing in the hold
+        buffer to being packed into a carrier."""
+        now = time.perf_counter()
+        with self._hold_lock:
+            waits = [(m, self._hold_arrived.pop(m.uid, None))
+                     for m in members]
+        for m, t0 in waits:
+            if t0 is None:
+                continue
+            label = m.tags.get("_tenant") or m.tags.get("_wf_ns") or "-"
+            self.metrics.histogram(SERVE_QUEUE_WAIT, tenant=label) \
+                .observe(now - t0)
 
     @staticmethod
     def _interleave_tenants(members: List[Task]) -> List[Task]:
@@ -798,24 +871,21 @@ class JaxRTS(LocalRTS):
             self._fused[carrier.uid] = batch
             for m in batch.members:
                 self._member_carrier[m.uid] = carrier.uid
+        # counters are individually locked: no need to hold _fusion_lock
+        if len(tenants) > 1:
+            self._fusion_count("cross_tenant_carriers")
+        for label in tenants:
+            self._tenant_count(label, "members", sum(
+                1 for m in batch.members
+                if (m.tags.get("_tenant") or m.tags.get("_wf_ns")) == label))
             if len(tenants) > 1:
-                self.fusion_stats["cross_tenant_carriers"] += 1
-            for label in tenants:
-                ts = self.tenant_stats.setdefault(
-                    label, {"members": 0, "shared_dispatches": 0,
-                            "completions": 0})
-                ts["members"] += sum(
-                    1 for m in batch.members
-                    if (m.tags.get("_tenant") or m.tags.get("_wf_ns"))
-                    == label)
-                if len(tenants) > 1:
-                    ts["shared_dispatches"] += 1
-            if dag:
-                self.fusion_stats["dag_carriers"] += 1
-            elif n > 1:
-                self.fusion_stats["chain_carriers"] += 1
-            if mesh_shards:
-                self.fusion_stats["shard_carriers"] += 1
+                self._tenant_count(label, "shared_dispatches")
+        if dag:
+            self._fusion_count("dag_carriers")
+        elif n > 1:
+            self._fusion_count("chain_carriers")
+        if mesh_shards:
+            self._fusion_count("shard_carriers")
         return carrier
 
     # -- cancellation / introspection over carriers ---------------------------#
@@ -837,6 +907,8 @@ class JaxRTS(LocalRTS):
                         timer.cancel()
                 elif len(kept) != len(self._held[k]):
                     self._held[k] = kept
+            for u in wanted:
+                self._hold_arrived.pop(u, None)
         translated: List[str] = []
         emptied: List[str] = []
         with self._fusion_lock:
@@ -959,6 +1031,12 @@ class JaxRTS(LocalRTS):
 
         tenant_of = {m.uid: (m.tags.get("_tenant") or m.tags.get("_wf_ns"))
                      for m in batch.members}
+        # one shared counter handle per distinct tenant: deliver() runs per
+        # member completion, so resolve the registry lookup once up front
+        completions_of = {
+            label: self.metrics.counter(TENANT_EVENTS, tenant=label,
+                                        field="completions")
+            for label in set(tenant_of.values()) if label is not None}
 
         def deliver(c: TaskCompletion) -> None:
             if batch.plan is not None:
@@ -968,8 +1046,9 @@ class JaxRTS(LocalRTS):
             label = tenant_of.get(c.uid)
             with self._fusion_lock:
                 batch.pending.discard(c.uid)
-                if label is not None and label in self.tenant_stats:
-                    self.tenant_stats[label]["completions"] += 1
+            counter = completions_of.get(label)
+            if counter is not None:
+                counter.inc()
             self._deliver(c)
 
         mesh_devices = None
@@ -987,11 +1066,23 @@ class JaxRTS(LocalRTS):
             canceled=self._fused_canceled,
             fault_injector=self.fault_injector, compose=batch.compose,
             mesh_devices=mesh_devices)
+        # exe.tier reflects what will ACTUALLY run ("shard" only when the
+        # lease produced a real mesh), unlike the plan's mesh_shards hint
+        self.metrics.counter(CARRIERS_TOTAL, tier=exe.tier).inc()
         # registered BEFORE the dispatches run so the drainer can fan out
         # early links of a chain while a later link is still dispatching
         # (mid-chain journal records exist the moment a link resolves)
         self._drain_q.put((carrier, batch, exe))
-        exe.dispatch()
+        with tel.span("carrier.dispatch", "rts",
+                      carrier=carrier.name, tier=exe.tier,
+                      links=len(batch.links),
+                      width=max(len(link) for link in batch.links),
+                      members=len(batch.members),
+                      mesh_shards=batch.mesh_shards,
+                      tenants=",".join(sorted(
+                          str(t) for t in set(tenant_of.values())
+                          if t is not None))):
+            exe.dispatch()
 
     def _drain_loop(self) -> None:
         """One drainer of the pool: resolve a dispatched carrier's outputs,
@@ -1005,11 +1096,17 @@ class JaxRTS(LocalRTS):
                 return
             carrier, batch, exe = item
             try:
-                stats = exe.drain(stop_event=self._stop)
-                with self._fusion_lock:
-                    for k, v in stats.items():
-                        self.fusion_stats[k] = \
-                            self.fusion_stats.get(k, 0) + v
+                with tel.span("carrier.drain", "rts",
+                              carrier=carrier.name,
+                              tier=getattr(exe, "tier", "?"),
+                              members=len(batch.members)):
+                    stats = exe.drain(stop_event=self._stop)
+                # each per-kind increment is its own locked counter — the
+                # drainer pool can merge concurrently without a lost update
+                # (the fusion_stats accumulation race this PR fixes)
+                for k, v in stats.items():
+                    if v:
+                        self._fusion_count(k, v)
             except Exception:  # noqa: BLE001 - engine failed outside guards
                 exc = traceback.format_exc(limit=10)
                 now = time.time()
@@ -1041,14 +1138,26 @@ class JaxRTS(LocalRTS):
                 fn = task.resolve()
             except Exception:  # noqa: BLE001 - sleep:// tasks have no callable
                 pass
-            if fn is not None:
-                try:
-                    sig = inspect.signature(fn)
-                    if "devices" in sig.parameters:
-                        task.kwargs = dict(task.kwargs)
-                        task.kwargs["devices"] = devices
-                except (TypeError, ValueError):
+            if fn is None:
+                return super()._execute(task, cancel_event, stall)
+            try:
+                sig = inspect.signature(fn)
+                if "devices" in sig.parameters:
+                    task.kwargs = dict(task.kwargs)
+                    task.kwargs["devices"] = devices
+            except (TypeError, ValueError):
+                pass
+            kernel = fn
+            if task.executable == fusion_engine.TRAMPOLINE:
+                try:  # label the USER kernel, not the api trampoline
+                    kernel = resolve_executable(task.kwargs["__fn__"])
+                except Exception:  # noqa: BLE001 - label only, never fatal
                     pass
-            return super()._execute(task, cancel_event, stall)
+            t0 = time.perf_counter()
+            result = super()._execute(task, cancel_event, stall)
+            tel.observe_dispatch(
+                getattr(kernel, "__name__", None) or str(kernel),
+                "scalar", time.perf_counter() - t0)
+            return result
         finally:
             self._unlease(task)

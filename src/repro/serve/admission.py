@@ -13,6 +13,7 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from .. import telemetry as tel
 from ..core.exceptions import EnTKError
 
 
@@ -81,39 +82,49 @@ class AdmissionController:
         with self._lock:
             self._stopping = True
 
+    @staticmethod
+    def _reject(tenant: str, code: str, message: str) -> None:
+        tel.counter("serve_admission_total", tenant=tenant, outcome="rejected",
+                    code=code).inc()
+        raise AdmissionError(code, message)
+
     def admit(self, tenant: str, n_members: int) -> None:
         """Charge ``n_members`` for one workflow, or raise AdmissionError."""
         with self._lock:
             if self._stopping:
-                raise AdmissionError(
-                    "service-stopping",
+                self._reject(
+                    tenant, "service-stopping",
                     "service is shutting down; not admitting new work")
             q = self._quotas.get(tenant, self.default_quota)
             held = self._members.get(tenant, 0)
             if q.max_in_flight_members and \
                     held + n_members > q.max_in_flight_members:
-                raise AdmissionError(
-                    "member-quota",
+                self._reject(
+                    tenant, "member-quota",
                     f"tenant {tenant!r}: {held} members in flight + "
                     f"{n_members} requested exceeds quota "
                     f"{q.max_in_flight_members}")
             if q.max_active and \
                     self._active.get(tenant, 0) >= q.max_active:
-                raise AdmissionError(
-                    "workflow-backlog",
+                self._reject(
+                    tenant, "workflow-backlog",
                     f"tenant {tenant!r}: {self._active[tenant]} active "
                     f"workflows at limit {q.max_active}")
             if self.max_backlog_members and \
                     self._total_members + n_members > \
                     self.max_backlog_members:
-                raise AdmissionError(
-                    "service-backlog",
+                self._reject(
+                    tenant, "service-backlog",
                     f"service backlog {self._total_members} + {n_members} "
                     f"members exceeds depth limit "
                     f"{self.max_backlog_members}")
             self._members[tenant] = held + n_members
             self._active[tenant] = self._active.get(tenant, 0) + 1
             self._total_members += n_members
+        tel.counter("serve_admission_total", tenant=tenant,
+                    outcome="accepted").inc()
+        tel.counter("serve_admitted_members_total",
+                    tenant=tenant).inc(n_members)
 
     def release(self, tenant: str, n_members: int) -> None:
         with self._lock:

@@ -66,6 +66,11 @@ class _ClientBase:
     def stats(self) -> Dict[str, Any]:
         return self._call("stats")["stats"]
 
+    def metrics(self) -> Dict[str, Any]:
+        """Telemetry snapshot: ``exposition`` (Prometheus text) plus
+        per-tenant queue-wait quantiles and carrier-sharing counts."""
+        return self._call("metrics")["metrics"]
+
     def shutdown(self, drain: bool = True) -> None:
         self._call("shutdown", drain=drain)
 

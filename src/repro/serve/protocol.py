@@ -16,6 +16,8 @@ Operations:
 * ``states``   (handle)             -> per-task state map
 * ``cancel``   (handle)             -> ok
 * ``stats``                         -> service statistics
+* ``metrics``                       -> telemetry snapshot: Prometheus text
+  exposition + per-tenant queue-wait quantiles and carrier sharing
 * ``shutdown`` ([drain])            -> ok (service stops after responding)
 
 ``kernel`` is a ``reg://<name>`` reference (a callable registered with
@@ -162,6 +164,9 @@ class ProtocolHandler:
 
     def _op_stats(self, req: Dict[str, Any]) -> Dict[str, Any]:
         return {"stats": self.service.stats()}
+
+    def _op_metrics(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        return {"metrics": self.service.metrics()}
 
     def _op_shutdown(self, req: Dict[str, Any]) -> Dict[str, Any]:
         drain = bool(req.get("drain", True))

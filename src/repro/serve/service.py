@@ -18,6 +18,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Set
 
+from .. import telemetry as tel
 from ..core import states as st
 from ..core.appmanager import AppManager
 from ..core.exceptions import EnTKError
@@ -70,6 +71,12 @@ class SubmissionHandle:
 
     def cancel(self) -> None:
         self.service.cancel(self)
+
+    def metrics(self) -> Dict[str, Any]:
+        """This tenant's slice of the service metrics (queue-wait
+        quantiles, shared-carrier counts, admission state)."""
+        return self.service.metrics().get("tenants", {}).get(
+            self.tenant, {})
 
     def close(self) -> int:
         """Drop this submission's results from the global store."""
@@ -250,4 +257,46 @@ class EnsembleService:
             "fusion": dict(getattr(rts, "fusion_stats", {}) or {}),
             "tenants": {k: dict(v) for k, v in
                         (getattr(rts, "tenant_stats", {}) or {}).items()},
+            "telemetry": {
+                "kernels": tel.kernels(),
+                "tracing_enabled": tel.enabled(),
+                "spans_buffered": len(tel.TRACER),
+                "dropped_spans": tel.TRACER.dropped_spans,
+            },
+        }
+
+    def metrics(self) -> Dict[str, Any]:
+        """Telemetry snapshot behind the serve protocol's ``metrics`` verb.
+
+        ``exposition`` is Prometheus text — the process-global families
+        (per-kernel dispatch-latency quantiles, jit cache, admission)
+        followed by this RTS's instance counters (fusion events, tenant
+        fan-out, serve-hold queue waits). ``tenants`` breaks the same data
+        out per tenant for programmatic consumers."""
+        from ..rts.jax_rts import SERVE_QUEUE_WAIT
+
+        rts = self.amgr.emgr.rts if self.amgr.emgr is not None else None
+        reg = getattr(rts, "metrics", None)
+        tenant_stats = dict(getattr(rts, "tenant_stats", {}) or {})
+        admission = self.admission.snapshot()
+        tenants: Dict[str, Any] = {}
+        for t in set(tenant_stats) | set(admission):
+            ts = tenant_stats.get(t, {})
+            tenants[t] = {
+                "queue_wait": (reg.quantiles(name=SERVE_QUEUE_WAIT, tenant=t)
+                               if reg is not None else {}),
+                "members": ts.get("members", 0),
+                "shared_carriers": ts.get("shared_dispatches", 0),
+                "completions": ts.get("completions", 0),
+                "admission": admission.get(t, {}),
+            }
+        exposition = tel.prometheus_text()
+        if reg is not None:
+            exposition += reg.prometheus_text()
+        return {
+            "exposition": exposition,
+            "tenants": tenants,
+            "tracing": {"enabled": tel.enabled(),
+                        "spans_buffered": len(tel.TRACER),
+                        "dropped_spans": tel.TRACER.dropped_spans},
         }

@@ -1,0 +1,260 @@
+"""Telemetry plane tests: tracer exactness under concurrency, bounded-ring
+overflow accounting, metric registry thread-safety and in-place reset,
+streaming quantiles, Chrome-trace round-trip, and end-to-end span/metric
+capture from a fused run."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api, telemetry
+from repro.fusion import fusable
+from repro.rts.base import ResourceDescription
+from repro.rts.jax_rts import JaxRTS
+from repro.telemetry import (DISPATCH_LATENCY, MetricsRegistry, SpanTracer,
+                             NOOP_SPAN)
+
+
+@fusable(static_argnames=("scale",))
+def k_tel(x, scale=1.0):
+    import jax.numpy as jnp
+    return jnp.asarray(x, jnp.float32) * scale
+
+
+@pytest.fixture
+def tracing():
+    """Enable tracing for one test; restore the disabled default after."""
+    telemetry.enable()
+    telemetry.TRACER.clear()
+    yield
+    telemetry.disable()
+    telemetry.TRACER.clear()
+
+
+# --------------------------------------------------------------------------- #
+# Zero-cost-when-off contract
+# --------------------------------------------------------------------------- #
+
+def test_disabled_span_is_noop_singleton():
+    telemetry.disable()
+    s = telemetry.span("anything", "cat", a=1)
+    assert s is NOOP_SPAN
+    assert s.set(b=2) is NOOP_SPAN            # chainable, allocates nothing
+    with s:
+        pass
+    s.end()
+    assert len(telemetry.TRACER) == 0         # nothing was recorded
+    telemetry.event("nothing")                # events gated too
+    assert len(telemetry.TRACER) == 0
+
+
+def test_metrics_live_even_when_tracing_off():
+    telemetry.disable()
+    c = telemetry.counter("tel_test_counter", probe="live")
+    before = c.value
+    c.inc(3)
+    assert c.value == before + 3
+
+
+# --------------------------------------------------------------------------- #
+# Tracer: nesting, concurrency, ring overflow
+# --------------------------------------------------------------------------- #
+
+def test_nested_spans_record_depth_and_attrs(tracing):
+    with telemetry.span("outer", "t", k="v"):
+        with telemetry.span("inner", "t") as inner:
+            inner.set(extra=7)
+    recs = {r["name"]: r for r in telemetry.TRACER.snapshot()}
+    assert recs["outer"]["depth"] == 0 and recs["outer"]["attrs"] == {"k": "v"}
+    assert recs["inner"]["depth"] == 1 and recs["inner"]["attrs"] == {"extra": 7}
+    assert recs["inner"]["dur"] <= recs["outer"]["dur"]
+
+
+def test_concurrent_begin_end_is_exact():
+    tracer = SpanTracer(ring_size=100_000)
+    threads, per_thread = 8, 200
+
+    def work():
+        for _ in range(per_thread):
+            outer = tracer.begin("outer")
+            inner = tracer.begin("inner")
+            inner.end()
+            outer.end()
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    recs = tracer.snapshot()
+    assert len(recs) == threads * per_thread * 2
+    assert tracer.dropped_spans == 0
+    # per-thread nesting is exact: every inner sits at depth 1, every
+    # outer at depth 0, regardless of cross-thread interleaving
+    for r in recs:
+        assert r["depth"] == (1 if r["name"] == "inner" else 0)
+
+
+def test_ring_overflow_drops_oldest_and_counts():
+    tracer = SpanTracer(ring_size=10)
+    for i in range(25):
+        tracer.begin("s", i=i).end()
+    recs = tracer.snapshot()
+    assert len(recs) == 10
+    assert tracer.dropped_spans == 15
+    # oldest-first snapshot holds exactly the newest ten
+    assert [r["attrs"]["i"] for r in recs] == list(range(15, 25))
+    tracer.clear()
+    assert len(tracer) == 0 and tracer.dropped_spans == 0
+
+
+def test_span_end_is_idempotent(tracing):
+    s = telemetry.span("once", "t")
+    s.end()
+    s.end()
+    assert sum(1 for r in telemetry.TRACER.snapshot()
+               if r["name"] == "once") == 1
+
+
+# --------------------------------------------------------------------------- #
+# Metrics: registry exactness, quantiles, reset-in-place
+# --------------------------------------------------------------------------- #
+
+def test_counter_exact_under_contention():
+    reg = MetricsRegistry()
+    threads, per_thread = 8, 5_000
+
+    def work():
+        # re-fetch the handle each time: memoization must hand every
+        # thread the same locked cell (the fusion_stats race this fixes)
+        for _ in range(per_thread):
+            reg.counter("hits", where="hot").inc()
+
+    ts = [threading.Thread(target=work) for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter("hits", where="hot").value == threads * per_thread
+
+
+def test_histogram_quantiles_bounded_error():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    values = [i / 1000.0 for i in range(1, 1001)]     # 1ms .. 1s uniform
+    for v in values:
+        h.observe(v)
+    q = h.quantiles()
+    # log-bucketed streaming estimate: <=5% relative bucket error
+    assert q["p50"] == pytest.approx(0.5, rel=0.06)
+    assert q["p90"] == pytest.approx(0.9, rel=0.06)
+    assert q["p99"] == pytest.approx(0.99, rel=0.06)
+    s = h.summary()
+    assert s["count"] == 1000 and s["min"] == 0.001 and s["max"] == 1.0
+
+
+def test_quantiles_merge_across_tiers_per_kernel():
+    reg = MetricsRegistry()
+    for v in (0.010, 0.011, 0.012):
+        reg.histogram(DISPATCH_LATENCY, kernel="k", tier="fused").observe(v)
+    for v in (0.020, 0.021):
+        reg.histogram(DISPATCH_LATENCY, kernel="k", tier="scalar").observe(v)
+    reg.histogram(DISPATCH_LATENCY, kernel="other", tier="fused").observe(9.0)
+    merged = reg.quantiles("k")
+    assert merged["count"] == 5
+    assert 0.010 <= merged["p50"] <= 0.021
+    narrowed = reg.quantiles("k", tier="scalar")
+    assert narrowed["count"] == 2
+    assert reg.kernels() == ["k", "other"]
+
+
+def test_registry_reset_zeroes_in_place():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    h = reg.histogram("h")
+    c.inc(5)
+    h.observe(1.0)
+    reg.reset()
+    # the SAME handles keep working — module-cached handles survive reset
+    assert c.value == 0 and h.count == 0
+    c.inc()
+    assert reg.counter("c").value == 1
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("jobs_total", tenant="a").inc(2)
+    reg.gauge("depth").set(3.5)
+    reg.histogram("lat", kernel="k").observe(0.25)
+    text = reg.prometheus_text()
+    assert "# TYPE jobs_total counter" in text
+    assert 'jobs_total{tenant="a"} 2' in text
+    assert "# TYPE depth gauge" in text
+    assert "# TYPE lat summary" in text
+    assert 'lat_count{kernel="k"} 1' in text
+    assert 'quantile="0.5"' in text
+
+
+# --------------------------------------------------------------------------- #
+# Chrome-trace export round-trip
+# --------------------------------------------------------------------------- #
+
+def test_chrome_trace_roundtrip(tracing, tmp_path):
+    with telemetry.span("work", "test", tier="fused", members=4):
+        telemetry.event("tick", "test", n=1)
+    path = tmp_path / "trace.json"
+    telemetry.export_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    work = [e for e in events if e["name"] == "work"]
+    assert work and work[0]["ph"] == "X" and work[0]["dur"] >= 0
+    assert work[0]["args"] == {"tier": "fused", "members": 4}
+    ticks = [e for e in events if e["name"] == "tick"]
+    assert ticks and ticks[0]["ph"] == "i" and ticks[0]["s"] == "t"
+    # thread-name metadata labels the track
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in events)
+    assert doc["otherData"]["dropped_spans"] == 0
+    assert "metrics" in doc["otherData"]
+
+
+def test_jsonl_export_roundtrip(tracing, tmp_path):
+    telemetry.counter("tel_jsonl_probe").inc()
+    path = tmp_path / "telemetry.jsonl"
+    telemetry.export_jsonl(str(path))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines[0]["kind"] == "meta"
+    assert any(r.get("name") == "tel_jsonl_probe" for r in lines[1:])
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: a fused run leaves spans with tier attrs + kernel quantiles
+# --------------------------------------------------------------------------- #
+
+def test_fused_run_emits_carrier_spans_and_kernel_quantiles(tracing):
+    telemetry.REGISTRY.reset()
+    ens = api.ensemble(k_tel, over=[{"x": float(i), "scale": 2.0}
+                                    for i in range(8)], name="tel-e2e")
+    res = api.run(ens, resources=ResourceDescription(slots=4),
+                  rts_factory=lambda: JaxRTS(devices=["d0"],
+                                             slot_oversubscribe=4),
+                  timeout=60)
+    vals = [float(np.asarray(s.out.result())) for s in ens.specs]
+    assert vals == [2.0 * i for i in range(8)]
+    assert res is not None
+
+    dispatch = [r for r in telemetry.TRACER.snapshot()
+                if r["name"] == "carrier.dispatch"]
+    assert dispatch, "fused run recorded no carrier.dispatch spans"
+    attrs = dispatch[0]["attrs"]
+    assert attrs["tier"] in ("fused", "chain", "dag", "shard")
+    assert attrs["members"] >= 1 and attrs["width"] >= 1
+    assert "tenants" in attrs
+
+    # acceptance: per-kernel latency quantiles are queryable by name
+    assert "k_tel" in telemetry.kernels()
+    q = telemetry.quantiles("k_tel")
+    assert q["count"] >= 1
+    assert q["p50"] is not None and q["p99"] is not None
+    assert q["p50"] <= (q["p99"] or float("inf"))
