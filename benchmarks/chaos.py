@@ -1,0 +1,108 @@
+"""Chaos benchmark: throughput under a seeded 5% mixed-fault schedule.
+
+Two runs of the same 1000-member federated workload (4 LocalRTS members,
+2 slots each), identical but for the fault schedule:
+
+* **clean** — no injection;
+* **faulty** — a seeded :class:`repro.chaos.FaultSchedule` drives 5% kernel
+  faults (charged task retries), a 1% straggler stall, and one seeded
+  member kill mid-run (uncharged infra failover).
+
+The row reports both absolute throughputs and ``recovery_overhead`` — the
+within-run faulty/clean wallclock ratio. That ratio is the CI gate
+(``check_regression --bench chaos``): recovery machinery that more than
+doubles the cost of a 5%-fault run has stopped paying for itself. Both
+runs must finish with zero lost completions.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.chaos import FaultSchedule
+from repro.core import AppManager, Pipeline, Stage, Task
+from repro.rts.base import ResourceDescription
+from repro.rts.local import LocalRTS
+
+#: the soak seed — pinned so the failure story (which member dies, which
+#: attempts fault) is identical run to run and machine to machine
+SEED = 1100
+
+N_MEMBERS_FED = 4
+SLOTS_PER_MEMBER = 2
+TASK_SLEEP_S = 0.01
+KILL_AFTER_S = 0.4
+
+
+def _workload(n: int) -> List[Pipeline]:
+    stg = Stage("s0")
+    stg.add_tasks([Task(name=f"t{i}", executable=f"sleep://{TASK_SLEEP_S}",
+                        max_retries=3) for i in range(n)])
+    pipe = Pipeline("p-chaos")
+    pipe.add_stages(stg)
+    return [pipe]
+
+
+def _one_run(n: int, sched: Optional[FaultSchedule]) -> Dict[str, Any]:
+    rds = [ResourceDescription(slots=SLOTS_PER_MEMBER,
+                               extra={"name": f"m{i}"})
+           for i in range(N_MEMBERS_FED)]
+    if sched is None:
+        facts = [LocalRTS] * N_MEMBERS_FED
+        victims: List[str] = []
+    else:
+        facts = [lambda: LocalRTS(
+            fault_injector=sched.kernel_fault_injector(),
+            straggler_injector=sched.straggler_injector(0.05))
+            for _ in range(N_MEMBERS_FED)]
+        victims = sched.pick_victims(
+            "member", [f"m{i}" for i in range(N_MEMBERS_FED)])
+    amgr = AppManager(resources=rds, rts_factory=facts,
+                      heartbeat_interval=0.1)
+    amgr.workflow = _workload(n)
+
+    def kill() -> None:
+        time.sleep(KILL_AFTER_S)
+        for m in amgr.emgr.rts.members:
+            if m.name in victims:
+                m.rts.simulate_dead = True
+
+    if victims:
+        threading.Thread(target=kill, daemon=True).start()
+    t0 = time.monotonic()
+    amgr.run(timeout=600)
+    wallclock = time.monotonic() - t0
+    flat = [t for p in amgr.workflow for s in p.stages for t in s.tasks]
+    return {
+        "wallclock_s": wallclock,
+        "tasks_per_s": n / wallclock,
+        "all_done": amgr.all_done,
+        "retries_charged": sum(t.retries for t in flat),
+        "members_lost": amgr.emgr.rts.members_lost,
+        "pilot_lost_requeues": amgr.emgr.rts.pilot_lost_requeues,
+    }
+
+
+def run(quick: bool) -> List[Dict[str, Any]]:
+    n = 400 if quick else 1000
+    clean = _one_run(n, None)
+    sched = FaultSchedule(SEED, {"kernel": 0.05, "member": 0.3,
+                                 "straggler": 0.01})
+    faulty = _one_run(n, sched)
+    return [{
+        "n_members": n,
+        "clean_s": round(clean["wallclock_s"], 3),
+        "faulty_s": round(faulty["wallclock_s"], 3),
+        "clean_tasks_per_s": round(clean["tasks_per_s"], 1),
+        "faulty_tasks_per_s": round(faulty["tasks_per_s"], 1),
+        # the gate: within-run cost of absorbing the fault schedule
+        "recovery_overhead": round(
+            faulty["wallclock_s"] / max(1e-9, clean["wallclock_s"]), 3),
+        "retries_charged": faulty["retries_charged"],
+        "members_lost": faulty["members_lost"],
+        "pilot_lost_requeues": faulty["pilot_lost_requeues"],
+        "fault_sites": ";".join(sorted({s for s, _ in sched.story()})),
+        "all_done": clean["all_done"] and faulty["all_done"],
+    }]

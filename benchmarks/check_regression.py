@@ -30,6 +30,11 @@ Two gates share this entry point, selected with ``--bench``:
   that stops sharing carriers degrades into serial mode silently — the
   carrier floor catches that even when the runner is too noisy for the
   throughput gates to).
+* ``chaos`` — fault recovery must keep paying for itself: the within-run
+  faulty/clean wallclock ratio under the seeded 5%-fault schedule may not
+  exceed ``--max-overhead`` (default 2x), and faulty-run throughput may
+  not regress more than ``--factor`` versus the PR-10 baseline. The bench
+  itself fails on any lost completion.
 * ``shard`` — whole-mesh SPMD dispatch must keep up with per-device
   fused dispatch on multi-device hosts: sharded throughput may not
   regress more than ``--factor`` versus the PR-6 baseline AND the
@@ -184,6 +189,45 @@ def check_serve(args) -> int:
     return rc if ok else 1
 
 
+def check_chaos(args) -> int:
+    """Fault-recovery gate. Two signals, both within-run-first:
+
+    * ``recovery_overhead`` (faulty/clean wallclock in the SAME run) must
+      stay <= ``--max-overhead`` (default 2x): recovery machinery that
+      doubles the cost of a 5%-fault run has stopped paying for itself.
+      The within-run ratio is immune to runner speed.
+    * faulty-run throughput may not regress more than ``--factor`` vs the
+      checked-in baseline at the largest common size.
+
+    The run itself already fails on any lost completion (run.py raises)."""
+    cur = _rows(args.current, "chaos_", "n_members")
+    base = _rows(args.baseline, "chaos_", "n_members")
+    common = sorted(set(cur) & set(base))
+    if not common:
+        print(f"[check] no common chaos sizes between {args.current} "
+              f"({sorted(cur)}) and {args.baseline} ({sorted(base)})")
+        return 1
+    n = common[-1]
+    overhead = _metric(cur[n], "recovery_overhead")
+    c = _metric(cur[n], "faulty_tasks_per_s")
+    b = _metric(base[n], "faulty_tasks_per_s")
+    if overhead is None or c is None or b is None:
+        print(f"[check] unusable chaos rows at {n} members: "
+              f"current={cur[n]} baseline={base[n]}")
+        return 1
+    ratio = b / c   # >1 = current slower than baseline
+    ok = overhead <= args.max_overhead and ratio <= args.factor
+    print(f"[check] chaos @ {n} members: faulty {c:.0f} tasks/s vs "
+          f"baseline {b:.0f} -> x{ratio:.2f} slower (budget "
+          f"x{args.factor:.1f}); within-run recovery overhead "
+          f"x{overhead:.2f} (budget x{args.max_overhead:.1f}) "
+          f"{'OK' if ok else 'REGRESSION'}")
+    if not cur[n].get("all_done", True):
+        print(f"[check] current run did not complete: {cur[n]}")
+        return 1
+    return 0 if ok else 1
+
+
 def check_shard(args) -> int:
     cur = _rows(args.current, "shard_", "n_members")
     if not cur:
@@ -209,7 +253,7 @@ def main() -> int:
     ap.add_argument("current", help="bench JSON from this run")
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--bench", choices=("sched", "fusion", "chain",
-                                        "shard", "dag", "serve"),
+                                        "shard", "dag", "serve", "chaos"),
                     default="sched")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed regression ratio vs the baseline")
@@ -219,9 +263,14 @@ def main() -> int:
     ap.add_argument("--min-cross-tenant", type=int, default=1,
                     help="serve: min carriers spanning >= 2 tenants in "
                          "the concurrent run")
+    ap.add_argument("--max-overhead", type=float, default=2.0,
+                    help="chaos: max within-run faulty/clean wallclock "
+                         "ratio under the seeded 5%% fault schedule")
     args = ap.parse_args()
     if args.bench == "sched":
         return check_sched(args)
+    if args.bench == "chaos":
+        return check_chaos(args)
     if args.bench == "shard":
         return check_shard(args)
     if args.bench == "dag":

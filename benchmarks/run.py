@@ -292,6 +292,28 @@ def fed_throughput(quick: bool) -> None:
         raise RuntimeError(f"federation lost completions in: {incomplete}")
 
 
+def chaos_resilience(quick: bool) -> None:
+    from benchmarks import chaos
+    rows = chaos.run(quick)
+    for r in rows:
+        _row(f"chaos_{r['n_members']}",
+             1e6 / max(1e-9, r["faulty_tasks_per_s"]),
+             n_members=r["n_members"],
+             clean_tasks_per_s=r["clean_tasks_per_s"],
+             faulty_tasks_per_s=r["faulty_tasks_per_s"],
+             clean_s=r["clean_s"], faulty_s=r["faulty_s"],
+             recovery_overhead=r["recovery_overhead"],
+             retries_charged=r["retries_charged"],
+             members_lost=r["members_lost"],
+             pilot_lost_requeues=r["pilot_lost_requeues"],
+             fault_sites=r["fault_sites"],
+             all_done=r["all_done"])
+    # zero lost completions under injected faults is the acceptance bar:
+    # an incomplete run fails the bench (and the CI smoke job) outright
+    if any(not r["all_done"] for r in rows):
+        raise RuntimeError("chaos bench lost completions")
+
+
 def roofline_table(quick: bool) -> None:
     import os
     from benchmarks import roofline
@@ -352,6 +374,7 @@ BENCHES = {
     "shard": shard_throughput,
     "dag": dag_throughput,
     "serve": serve_throughput,
+    "chaos": chaos_resilience,
     "roofline": roofline_table,
 }
 
@@ -365,7 +388,7 @@ def _append_trajectory(picks: "list[str]", quick: bool) -> None:
     import os
     rows = [r for r in _ROWS
             if r["name"].startswith(("fusion_", "chain_", "shard_", "dag_",
-                                     "serve_"))
+                                     "serve_", "chaos_"))
             and not r["name"].endswith("_ERROR")]
     if not rows:
         return

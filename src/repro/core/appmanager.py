@@ -30,6 +30,7 @@ from . import states as st
 from .broker import Broker
 from .exceptions import EnTKError, ValueError_
 from .journal import Journal
+from .policies import RetryPolicy
 from .profiler import (ENTK_SETUP, ENTK_TEARDOWN, Profiler)
 from .pst import Pipeline, WorkflowIndex
 from .execmanager import ExecManager
@@ -76,8 +77,12 @@ class AppManager:
         heartbeat_interval: float = 0.5,
         max_rts_restarts: int = 3,
         straggler_factor: float = 0.0,
+        straggler_min_seconds: float = 1.0,
+        speculation_min_samples: int = 64,
+        retry_policy: Optional["RetryPolicy"] = None,
         component_supervision: bool = True,
         flush_every: int = 32,
+        fsync_critical: bool = True,
         member_restarts: int = 0,
     ) -> None:
         if isinstance(resources, (list, tuple)):
@@ -105,8 +110,12 @@ class AppManager:
         self.heartbeat_interval = heartbeat_interval
         self.max_rts_restarts = max_rts_restarts
         self.straggler_factor = straggler_factor
+        self.straggler_min_seconds = straggler_min_seconds
+        self.speculation_min_samples = speculation_min_samples
+        self.retry_policy = retry_policy
         self.component_supervision = component_supervision
         self.flush_every = flush_every
+        self.fsync_critical = fsync_critical
 
         self._workflow: List[Pipeline] = []
         self.prof = Profiler()
@@ -250,7 +259,8 @@ class AppManager:
                                         resumed_retries[t.name])
         self.broker = Broker()
         self.journal = Journal(self.journal_path,
-                               flush_every=self.flush_every)
+                               flush_every=self.flush_every,
+                               fsync_critical=self.fsync_critical)
         self.journal.session("resume" if resume else "start",
                              pipelines=len(self.workflow))
         self.svc = StateService(self.broker, strict=self.strict_transactions,
@@ -266,13 +276,16 @@ class AppManager:
             # sidecar for results that journal as spill records (fused
             # device arrays) — only meaningful with a write-ahead journal
             spill_dir=(f"{self.journal_path}.spill"
-                       if self.journal_path else None))
+                       if self.journal_path else None),
+            retry_policy=self.retry_policy)
         self.emgr = ExecManager(
             self.broker, self.svc, self.prof, self.rts_factory,
             self.resources, self.index,
             heartbeat_interval=self.heartbeat_interval,
             max_rts_restarts=self.max_rts_restarts,
-            straggler_factor=self.straggler_factor)
+            straggler_factor=self.straggler_factor,
+            straggler_min_seconds=self.straggler_min_seconds,
+            speculation_min_samples=self.speculation_min_samples)
         setup_span.end()
         self.prof.end(ENTK_SETUP)
 
@@ -329,7 +342,8 @@ class AppManager:
         self.broker = Broker()
         self.journal = (journal if journal is not None
                         else Journal(self.journal_path,
-                                     flush_every=self.flush_every))
+                                     flush_every=self.flush_every,
+                                     fsync_critical=self.fsync_critical))
         self.journal.session("start", service=True)
         self.svc = StateService(self.broker, strict=self.strict_transactions,
                                 durable=self.journal.enabled)
@@ -339,13 +353,16 @@ class AppManager:
             self.broker, self.svc, self.prof, self._workflow, self.index,
             on_task_failure=self.on_task_failure,
             spill_dir=(f"{self.journal_path}.spill"
-                       if self.journal_path else None))
+                       if self.journal_path else None),
+            retry_policy=self.retry_policy)
         self.emgr = ExecManager(
             self.broker, self.svc, self.prof, self.rts_factory,
             self.resources, self.index,
             heartbeat_interval=self.heartbeat_interval,
             max_rts_restarts=self.max_rts_restarts,
-            straggler_factor=self.straggler_factor)
+            straggler_factor=self.straggler_factor,
+            straggler_min_seconds=self.straggler_min_seconds,
+            speculation_min_samples=self.speculation_min_samples)
         setup_span.end()
         self.prof.end(ENTK_SETUP)
         self.emgr.acquire_resources()

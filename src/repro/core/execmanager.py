@@ -38,7 +38,7 @@ from .. import telemetry as tel
 from . import states as st
 from .broker import Broker
 from .profiler import ENTK_MANAGEMENT, RTS_OVERHEAD, RTS_TEARDOWN, Profiler
-from .pst import Task, WorkflowIndex
+from .pst import Task, WorkflowIndex, resolve_executable
 from .state_service import StateService
 from .wfprocessor import DONE_QUEUE, PENDING_QUEUE
 from ..rts.base import RTS, ResourceDescription, TaskCompletion
@@ -98,6 +98,7 @@ class ExecManager:
         max_rts_restarts: int = 3,
         straggler_factor: float = 0.0,  # 0 disables speculation
         straggler_min_seconds: float = 1.0,
+        speculation_min_samples: int = 64,
         starvation_limit: int = 8,
     ) -> None:
         self.broker = broker
@@ -110,6 +111,10 @@ class ExecManager:
         self.max_rts_restarts = max_rts_restarts
         self.straggler_factor = straggler_factor
         self.straggler_min_seconds = straggler_min_seconds
+        # quantile-driven speculation (ROADMAP 4c): once a kernel has this
+        # many dispatch-latency samples, the watchdog thresholds at
+        # p99 × straggler_factor instead of the fixed duration_hint
+        self.speculation_min_samples = speculation_min_samples
         self.starvation_limit = starvation_limit
 
         self.rts: Optional[RTS] = None
@@ -153,6 +158,9 @@ class ExecManager:
         self.component_errors: List[str] = []
         self.speculations = 0
         self.speculation_wins = 0
+        self.speculations_from_quantile = 0   # thresholded at measured p99
+        self.speculations_from_hint = 0       # cold-start duration_hint path
+        self._kernel_cache: Dict = {}         # payload key -> telemetry label
         # Observability for the no-busy-wait tests: wakeups only happen on
         # pending messages or capacity kicks, never on a poll timer.
         self.emgr_wakeups = 0
@@ -1114,6 +1122,55 @@ class ExecManager:
 
     # -- Watchdog (straggler speculation) ------------------------------------#
 
+    #: the api layer's trampoline executable (literal: the core never
+    #: imports the fusion package; see fusion.engine.TRAMPOLINE)
+    _TRAMPOLINE = "reg://_api.call"
+
+    def _task_kernel(self, task: Task) -> Optional[str]:
+        """The task's per-kernel telemetry label — the key every dispatch
+        path observes DISPATCH_LATENCY under — or None for payloads with no
+        kernel identity (``sleep://`` synthetics, unresolvable refs)."""
+        if task.executable == self._TRAMPOLINE:
+            key = task.kwargs.get("__fn__")
+        else:
+            key = task._fn if task._fn is not None else task.executable
+        try:
+            return self._kernel_cache[key]
+        except (KeyError, TypeError):
+            pass
+        try:
+            if task.executable == self._TRAMPOLINE:
+                fn = resolve_executable(task.kwargs["__fn__"])
+            else:
+                fn = task.resolve()
+            label = getattr(fn, "__name__", None) or str(fn)
+        except Exception:  # noqa: BLE001 - no callable: no kernel label
+            label = None
+        try:
+            self._kernel_cache[key] = label
+        except TypeError:
+            pass
+        return label
+
+    def _expected_duration(self, task: Task,
+                           q_cache: Dict[str, Optional[float]]
+                           ) -> "tuple[Optional[float], str]":
+        """(expected seconds, source) for the straggler threshold: the
+        kernel's measured p99 once ``speculation_min_samples`` dispatches
+        exist, else the static ``duration_hint`` (cold-start fallback)."""
+        kernel = self._task_kernel(task)
+        if kernel is not None:
+            if kernel not in q_cache:
+                q = tel.quantiles(kernel)
+                q_cache[kernel] = (
+                    q.get("p99")
+                    if (q.get("count") or 0) >= self.speculation_min_samples
+                    else None)
+            p99 = q_cache[kernel]
+            if p99 is not None:
+                return p99, "p99"
+        return task.duration_hint, "hint"
+
     def _watchdog_loop(self) -> None:
         while not self._stop.is_set():
             self._stop.wait(self.heartbeat_interval)
@@ -1126,6 +1183,8 @@ class ExecManager:
                 running = rts.running_since()
             except Exception:  # noqa: BLE001
                 continue
+            # one quantile lookup per kernel per sweep, not per task
+            q_cache: Dict[str, Optional[float]] = {}
             with self._lock:
                 candidates = []
                 for uid, elapsed in running.items():
@@ -1134,20 +1193,25 @@ class ExecManager:
                         continue
                     if uid in self._spec_of:   # don't speculate on clones
                         continue
-                    expect = task.duration_hint
+                    expect, source = self._expected_duration(task, q_cache)
                     if expect is None:
                         continue
                     threshold = max(self.straggler_min_seconds,
                                     self.straggler_factor * expect)
                     if elapsed > threshold:
-                        candidates.append(task)
+                        candidates.append((task, source))
                 clones = []
-                for task in candidates:
+                for task, source in candidates:
                     clone = self._clone_for_speculation(task)
                     self._spec_of[clone.uid] = task.uid
                     self._spec_for[task.uid] = clone.uid
                     self._speculated.add(task.uid)
                     self.speculations += 1
+                    if source == "p99":
+                        self.speculations_from_quantile += 1
+                    else:
+                        self.speculations_from_hint += 1
+                    tel.counter("speculation_total", source=source).inc()
                     clones.append(clone)
             if clones:
                 rts.submit(clones)

@@ -32,6 +32,7 @@ from . import states as st
 from .broker import Broker
 from .profiler import (DATA_STAGING, ENTK_MANAGEMENT, TASK_EXECUTION,
                        Profiler)
+from .policies import INFRA, RETRY_TOTAL, TASK, RetryPolicy
 from .pst import Pipeline, Stage, Task, WorkflowIndex
 from .results import STORE as RESULTS
 from .results import decode_journal_value, spill_journal_value
@@ -60,6 +61,7 @@ class WFProcessor:
         resumed_results: Optional[Dict[str, Any]] = None,
         result_omitted: Optional[set] = None,
         spill_dir: Optional[str] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ) -> None:
         self.broker = broker
         self.svc = svc
@@ -76,6 +78,15 @@ class WFProcessor:
         # sidecar directory for results too rich to JSON onto a DONE record
         # (fused array handles journal a content hash + spill path instead)
         self.spill_dir = spill_dir
+        # Unified retry channel (chaos plane): one policy decides budgets
+        # and backoff for BOTH fault classes — infra (pilot_lost, uncharged
+        # by default) and task (charged against task.max_retries). The
+        # default policy reproduces the historical behaviour exactly.
+        self.retry_policy = retry_policy or RetryPolicy()
+        self._infra_retries: Dict[str, int] = {}     # uid -> uncharged hops
+        self._first_failure: Dict[str, float] = {}   # uid -> monotonic t0
+        self._retry_timers: List[threading.Timer] = []
+        self.backoff_requeues = 0
         # Superstage scheduling (chain fusion): when the RTS composes
         # ``_fusion_chain``-tagged stages (JaxRTS.supports_chain_fusion),
         # a chain's downstream stages are handed off TOGETHER with its
@@ -142,6 +153,10 @@ class WFProcessor:
 
     def stop(self) -> None:
         self._stop.set()
+        with self._lock:
+            timers, self._retry_timers = self._retry_timers, []
+        for timer in timers:
+            timer.cancel()
         self.broker.kick(SCHEDULE_QUEUE)
         self.broker.kick(DONE_QUEUE)
         for t in (self._enqueue_thread, self._dequeue_thread):
@@ -524,25 +539,48 @@ class WFProcessor:
             # own thread (one less hot-path synchronization point); the
             # completion chain is coalesced into a single published message
             prefix = (st.EXECUTED,) if task.state == st.SUBMITTED else ()
+            policy = self.retry_policy
             if msg.get("pilot_lost"):
                 # The pilot executing the task died (federation member
                 # failover) — an infrastructure failure, not a task failure.
                 # Re-journal FAILED (marked ``pilot_lost`` so resume does not
-                # charge it against the retry budget) and requeue
-                # unconditionally onto the surviving members: failover must
-                # lose zero completions even for max_retries=0 tasks.
+                # charge it against the retry budget) and requeue onto the
+                # surviving members: failover must lose zero completions
+                # even for max_retries=0 tasks. The infra channel is
+                # unbounded by default; a RetryPolicy with
+                # ``max_infra_retries`` caps flapping infrastructure.
                 exc = str(msg.get("exception", ""))[:500]
+                attempts = self._infra_retries.get(task.uid, 0)
+                first = self._first_failure.setdefault(
+                    task.uid, time.monotonic())
+                if policy.should_retry(task, INFRA, attempts, first):
+                    self._infra_retries[task.uid] = attempts + 1
+                    tel.counter(RETRY_TOTAL, fault_class=INFRA).inc()
+                    self.svc.advance_seq(task, prefix + (st.FAILED,), exc=exc,
+                                         pilot_lost=True, sink=sink)
+                    self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
+                                         transact=False, sink=sink)
+                    if sink is not None:
+                        self.svc.flush(sink)  # hand-off to the ExecManager
+                    self._requeue_pending(
+                        task.uid, policy.delay(task.name, attempts + 1))
+                    return True
+                # infra budget exhausted: permanent failure (still journaled
+                # pilot_lost so replay never charges the task budget)
                 self.svc.advance_seq(task, prefix + (st.FAILED,), exc=exc,
                                      pilot_lost=True, sink=sink)
-                self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
-                                     transact=False, sink=sink)
-                if sink is not None:
-                    self.svc.flush(sink)  # hand-off to the ExecManager
-                self.broker.put(PENDING_QUEUE, task.uid)
+                self._forget_retry_state(task.uid)
+                failed = True
+                if stage is not None and pipe is not None:
+                    stage.note_task_final(failed)
+                    pipe.note_task_failed()
+                    self._maybe_finalize_stage(pipe, stage, sink=sink)
                 return True
             if msg.get("canceled") or msg.get("exit_code") == -2:
+                self._forget_retry_state(task.uid)
                 self.svc.advance_seq(task, prefix + (st.CANCELED,), sink=sink)
             elif msg.get("exit_code") == 0:
+                self._forget_retry_state(task.uid)
                 extras = self._route_result(task)
                 if msg.get("plan") is not None:
                     # the fused carrier's chosen execution plan (mesh shape
@@ -553,13 +591,16 @@ class WFProcessor:
                                      sink=sink, **extras)
             else:
                 exc = str(msg.get("exception", ""))[:500]
-                if task.retries < task.max_retries:
+                first = self._first_failure.setdefault(
+                    task.uid, time.monotonic())
+                if policy.should_retry(task, TASK, task.retries, first):
                     # resubmission path (paper: multiple attempts without
                     # restarting completed tasks); the task stays pending in
                     # its stage's countdown. The FAILED hop is published as
                     # its own message — Journal.replay counts discrete
                     # to=FAILED records to restore retry budgets on resume.
                     task.retries += 1
+                    tel.counter(RETRY_TOTAL, fault_class=TASK).inc()
                     self.svc.advance_seq(task, prefix + (st.FAILED,),
                                          exc=exc, sink=sink)
                     self.svc.advance_seq(task, (st.SCHEDULING, st.SCHEDULED),
@@ -567,10 +608,12 @@ class WFProcessor:
                                          retry=task.retries, sink=sink)
                     if sink is not None:
                         self.svc.flush(sink)  # hand-off to the ExecManager
-                    self.broker.put(PENDING_QUEUE, task.uid)
+                    self._requeue_pending(
+                        task.uid, policy.delay(task.name, task.retries))
                     return True
                 self.svc.advance_seq(task, prefix + (st.FAILED,), exc=exc,
                                      sink=sink)
+                self._forget_retry_state(task.uid)
                 failed = True
             if stage is not None and pipe is not None:
                 stage.note_task_final(failed)
@@ -578,6 +621,34 @@ class WFProcessor:
                     pipe.note_task_failed()
                 self._maybe_finalize_stage(pipe, stage, sink=sink)
         return True
+
+    def _forget_retry_state(self, uid: str) -> None:
+        """Drop per-uid retry bookkeeping once a task reaches a terminal
+        state (or succeeds) — the dicts track only in-flight failures."""
+        self._infra_retries.pop(uid, None)
+        self._first_failure.pop(uid, None)
+
+    def _requeue_pending(self, uid: str, delay: float) -> None:
+        """Requeue a retried task, after the policy's backoff if any.
+
+        Backoff rides a daemon Timer rather than blocking the Dequeue loop
+        (one straggling retry must not stall the whole completion stream);
+        a processor stop cancels outstanding timers."""
+        if delay <= 0 or self._stop.is_set():
+            self.broker.put(PENDING_QUEUE, uid)
+            return
+        self.backoff_requeues += 1
+        timer = threading.Timer(delay, self._fire_requeue, args=(uid,))
+        timer.daemon = True
+        with self._lock:
+            self._retry_timers = [t for t in self._retry_timers
+                                  if t.is_alive()]
+            self._retry_timers.append(timer)
+        timer.start()
+
+    def _fire_requeue(self, uid: str) -> None:
+        if not self._stop.is_set():
+            self.broker.put(PENDING_QUEUE, uid)
 
     def _restore_resumed(self, task: Task, sink: Optional[List[Any]]) -> bool:
         """Resume one task completed in a previous session: skip execution

@@ -88,6 +88,13 @@ def _kernel_label(fn: Any) -> str:
     """Stable per-kernel metric label (the dispatch-latency family key)."""
     return getattr(fn, "__name__", None) or str(fn)
 
+#: chaos-plane hook (``repro.chaos``): when set, every carrier consults it
+#: once at dispatch time with the execution object; True ⇒ the composed
+#: dispatch raises and the carrier walks the degrade ladder (per-stage
+#: fused → per-member scalar). Members are never lost — the hook exercises
+#: the same path a real mid-dispatch device failure takes.
+CARRIER_FAULT: Optional[Callable[[Any], bool]] = None
+
 TRAMPOLINE = "reg://_api.call"
 
 # (kernel, static kwargs) -> jitted vmapped callable; bounds retracing to
@@ -785,7 +792,7 @@ class ChainExecution:
                      else "chain" if len(self.links) > 1 else "fused")
         self.stats = {"fused": 0, "scalar_fallback": 0, "failed": 0,
                       "dispatches": 0, "chain_links": 0,
-                      "sharded_dispatches": 0}
+                      "sharded_dispatches": 0, "degraded": 0}
         self._plans: List[Optional[_LinkPlan]] = [None] * len(self.links)
         self._injected: Dict[int, int] = {}   # member col -> first bad link
         self._fail_retryable: Dict[int, bool] = {}
@@ -837,6 +844,8 @@ class ChainExecution:
         after fanning out the links that did dispatch.
         """
         try:
+            if CARRIER_FAULT is not None and CARRIER_FAULT(self):
+                raise RuntimeError("injected carrier fault (chaos plane)")
             self._dispatch_links()
         except Exception:  # noqa: BLE001 - drainer owns the fallback
             self._push(("degrade", self._fail_link,
@@ -1009,6 +1018,10 @@ class ChainExecution:
             elif kind == "degrade":
                 _, start, _exc = rec
                 if not degraded:
+                    if _exc is not None:
+                        # a real dispatch failure (not a declined
+                        # composition): the breaker board keys on this
+                        self.stats["degraded"] += 1
                     start = max(start, fanned)
                     self._degrade(start, ok, fail_reason, overrides)
                     degraded = True
@@ -1046,6 +1059,7 @@ class ChainExecution:
                           plan.valid_lens if plan.spec.trim_outputs else None,
                           treedef_key=(plan.fn, plan.statics_key))
         except Exception:  # noqa: BLE001 - degrade this link and the rest
+            self.stats["degraded"] += 1
             self._degrade(k, ok, fail_reason, overrides)
             return False
         if len(self.links) > 1:
@@ -1649,6 +1663,10 @@ class DagExecution(ChainExecution):
             elif kind == "degrade":
                 _, start, _exc = rec
                 if not degraded:
+                    if _exc is not None:
+                        # a real dispatch failure (not a declined
+                        # composition): the breaker board keys on this
+                        self.stats["degraded"] += 1
                     start = max(start, fanned)
                     self._degrade(start, ok, fail_reason, overrides)
                     degraded = True
@@ -1684,6 +1702,7 @@ class DagExecution(ChainExecution):
                           plan.valid_lens if plan.spec.trim_outputs else None,
                           treedef_key=(plan.fn, plan.statics_key))
         except Exception:  # noqa: BLE001 - degrade this node and the rest
+            self.stats["degraded"] += 1
             self._degrade(k, ok, fail_reason, overrides)
             return False
         self.stats["dag_links"] += 1
@@ -1745,6 +1764,7 @@ class DagExecution(ChainExecution):
                                      time.perf_counter() - plan.t_dispatch)
             value = jax.tree_util.tree_map(_reduce_host, out)
         except Exception:  # noqa: BLE001 - degrade this node and the rest
+            self.stats["degraded"] += 1
             self._degrade(k, ok, fail_reason, overrides)
             return False
         self.stats["dag_links"] += 1

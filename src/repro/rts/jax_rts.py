@@ -84,6 +84,7 @@ import traceback
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 from .. import telemetry as tel
+from ..core.policies import BreakerBoard
 from ..core.pst import Task, resolve_executable
 from ..fusion import engine as fusion_engine
 from ..fusion.groups import (GROUP_TAG, FusionSpec, fusion_spec,
@@ -106,7 +107,7 @@ CARRIERS_TOTAL = "rts_carriers_total"
 _FUSION_STAT_KEYS = ("fused", "scalar_fallback", "failed", "dispatches",
                      "chain_links", "chain_carriers", "sharded_dispatches",
                      "shard_carriers", "dag_carriers", "dag_links",
-                     "cross_tenant_carriers")
+                     "cross_tenant_carriers", "degraded")
 _TENANT_FIELDS = ("members", "shared_dispatches", "completions")
 
 
@@ -149,6 +150,7 @@ class JaxRTS(LocalRTS):
                  shard_min_members: int = DEFAULT_SHARD_MIN_MEMBERS,
                  shard_hold_s: float = 0.25,
                  serve_hold_s: float = 0.0,
+                 breakers: Optional[BreakerBoard] = None,
                  **kwargs: Any) -> None:
         super().__init__(**kwargs)
         if devices is None:
@@ -208,6 +210,15 @@ class JaxRTS(LocalRTS):
         # locked counters in this registry; every writer goes through a
         # shared counter handle instead of a plain dict cell.
         self.metrics = MetricsRegistry()
+        # -- circuit breakers (chaos plane) ----------------------------------#
+        # per-(kernel, tier) breakers over the degrade ladder: a tier that
+        # keeps failing is skipped at PACK time (composed → fused → scalar)
+        # instead of rediscovered on every dispatch, and re-closes after a
+        # probation window through a single half-open probe carrier.
+        # Outcomes are recorded by the drainer from each carrier's stats.
+        self.breakers = (breakers if breakers is not None
+                         else BreakerBoard(registry=self.metrics))
+        self._label_cache: Dict[Any, Optional[str]] = {}
         # -- async data plane -------------------------------------------------#
         # dispatched-but-undrained carriers flow through this queue to a
         # small pool of drainer threads, which own unlease + release: the
@@ -690,8 +701,14 @@ class JaxRTS(LocalRTS):
         if spec is None:
             out.extend(members)   # unmarked kernel: never fuse
             return
+        label = self._kernel_label_of(members[0])
+        if not self.breakers.allow(label, "fused"):
+            out.extend(members)   # breaker open: run the ladder's floor
+            return
         mesh = self._plan_mesh(len(members), free, members[0].slots,
                                members[0].tags)
+        if mesh is not None and not self.breakers.allow(label, "shard"):
+            mesh = None           # breaker open: micro-batch lanes instead
         if mesh is not None:
             record = mesh.record()
             idx = 0
@@ -746,9 +763,13 @@ class JaxRTS(LocalRTS):
                     self._pack_group(members, out, free)
                 continue
             entry = per_member[member_idxs[0]][links[0]]
-            compose = len(links) >= self.fusion_min_chain
+            label = self._kernel_label_of(entry)
+            compose = (len(links) >= self.fusion_min_chain
+                       and self.breakers.allow(label, "chain"))
             mesh = self._plan_mesh(len(member_idxs), free, entry.slots,
                                    entry.tags) if compose else None
+            if mesh is not None and not self.breakers.allow(label, "shard"):
+                mesh = None
             if mesh is not None:
                 sizes, mesh_shards, record = \
                     mesh.batches, mesh.n_shards, mesh.record()
@@ -803,20 +824,26 @@ class JaxRTS(LocalRTS):
         width = max(len(node) for node in links)
         plan = plan_dag(n_total, width, dag=self.dag,
                         max_batch=self.fusion_max_batch)
+        label = self._kernel_label_of(first)
+        composed = plan.composed and complete
+        if composed and not self.breakers.allow(label, "dag"):
+            composed = False   # breaker open: sequential in-carrier nodes
         mesh = None
-        if plan.composed and complete and len(e_widths) == 1:
+        if composed and len(e_widths) == 1:
             # custom combine fns (no "rk" tag) can't cross the mesh — the
             # batched combine sees only its shard's members
             if all((parse_dag_tag(node[0].tags) or {}).get("rk")
                    for node in links
                    if (parse_dag_tag(node[0].tags) or {}).get("r") == "r"):
                 mesh = self._plan_mesh(width, free, first.slots, first.tags)
+        if mesh is not None and not self.breakers.allow(label, "shard"):
+            mesh = None
         if mesh is not None:
             plan = plan_dag(n_total, width, dag=self.dag,
                             max_batch=self.fusion_max_batch,
                             n_shards=mesh.n_shards)
         out.append(self._make_carrier(
-            links, compose=plan.composed and complete,
+            links, compose=composed,
             mesh_shards=mesh.n_shards if mesh is not None else 0,
             plan=plan.record(), dag=True))
 
@@ -831,6 +858,31 @@ class JaxRTS(LocalRTS):
         except Exception:  # noqa: BLE001 - unresolvable: run it scalar
             return None
         return fusion_spec(fn)
+
+    def _kernel_label_of(self, task: Task) -> Optional[str]:
+        """The member's telemetry kernel label (the breaker-board key),
+        looking through the API trampoline; cached per payload."""
+        if task.executable == fusion_engine.TRAMPOLINE:
+            key = task.kwargs.get("__fn__")
+        else:
+            key = task._fn if task._fn is not None else task.executable
+        try:
+            return self._label_cache[key]
+        except (KeyError, TypeError):
+            pass
+        try:
+            if task.executable == fusion_engine.TRAMPOLINE:
+                fn = resolve_executable(task.kwargs["__fn__"])
+            else:
+                fn = task.resolve()
+            label = fusion_engine._kernel_label(fn)
+        except Exception:  # noqa: BLE001 - no callable: no breaker key
+            label = None
+        try:
+            self._label_cache[key] = label
+        except TypeError:
+            pass
+        return label
 
     def _make_carrier(self, links: List[List[Task]],
                       compose: bool = True, mesh_shards: int = 0,
@@ -1084,6 +1136,21 @@ class JaxRTS(LocalRTS):
                           if t is not None))):
             exe.dispatch()
 
+    def _record_breaker(self, batch: _FusedBatch, exe: Any, ok: bool) -> None:
+        """Feed one carrier outcome to the breaker board under the tier it
+        actually ran ("dag-shard" records as "dag" — the composition is
+        what the consult gated). Never raises: breaker accounting must not
+        disturb the drainer's unconditional lease release."""
+        try:
+            tier = getattr(exe, "tier", None)
+            if tier is None or not batch.members:
+                return
+            tier = {"dag-shard": "dag"}.get(tier, tier)
+            self.breakers.record(
+                self._kernel_label_of(batch.members[0]), tier, ok)
+        except Exception:  # noqa: BLE001 - accounting only
+            pass
+
     def _drain_loop(self) -> None:
         """One drainer of the pool: resolve a dispatched carrier's outputs,
         fan out its completions (link order holds within the carrier;
@@ -1107,7 +1174,15 @@ class JaxRTS(LocalRTS):
                 for k, v in stats.items():
                     if v:
                         self._fusion_count(k, v)
+                # breaker board: a carrier that degraded (or fell back to
+                # scalar) is a failure OF ITS TIER — member task failures
+                # ("failed") are not, the tier executed them correctly
+                self._record_breaker(
+                    batch, exe,
+                    ok=not (stats.get("degraded")
+                            or stats.get("scalar_fallback")))
             except Exception:  # noqa: BLE001 - engine failed outside guards
+                self._record_breaker(batch, exe, ok=False)
                 exc = traceback.format_exc(limit=10)
                 now = time.time()
                 with self._fusion_lock:

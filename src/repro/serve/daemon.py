@@ -31,6 +31,9 @@ class ServiceDaemon:
         self._stop = threading.Event()
         self._accept_thread: Optional[threading.Thread] = None
         self._conn_threads: List[threading.Thread] = []
+        # submits whose accept response never reached the client and were
+        # cancelled to refund their admitted capacity
+        self.abandoned_submits = 0
 
     def start(self) -> "ServiceDaemon":
         self._accept_thread = threading.Thread(
@@ -79,4 +82,11 @@ class ServiceDaemon:
                         (json.dumps(resp, separators=(",", ":"),
                                     default=str) + "\n").encode("utf-8"))
                 except OSError:
-                    return   # client went away mid-response
+                    # client went away mid-response: if that response was a
+                    # successful submit, the handle id is lost forever —
+                    # cancel the orphan so admission refunds the capacity
+                    if (resp.get("ok") and req.get("op") == "submit"
+                            and resp.get("handle")):
+                        self.handler.abandon(resp["handle"])
+                        self.abandoned_submits += 1
+                    return

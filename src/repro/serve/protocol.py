@@ -93,6 +93,22 @@ class ProtocolHandler:
             self._handles[hid] = handle
         return hid
 
+    def abandon(self, hid: str) -> None:
+        """Refund a submission whose accept response never reached the
+        client. Admission charged the tenant when ``submit`` succeeded; if
+        the connection dies before the handle id is delivered, nobody can
+        ever ``wait``/``cancel`` it, so the capacity would leak until the
+        sweep finished on its own. Cancelling the orphan drives the normal
+        pipeline-final path, which releases the admitted members."""
+        with self._lock:
+            handle = self._handles.pop(hid, None)
+        if handle is None:
+            return
+        try:
+            handle.cancel()
+        except Exception:  # noqa: BLE001 - refund path must never raise
+            pass
+
     def _handle_of(self, req: Dict[str, Any]) -> Any:
         hid = req.get("handle")
         with self._lock:

@@ -29,7 +29,8 @@ def test_torn_final_write_tolerated(tmp_path):
     j.close()
     with open(path, "a") as fh:
         fh.write('{"rec": "transition", "kind": "task", "uid": "tr')  # torn
-    rep = Journal.replay(path)
+    with pytest.warns(RuntimeWarning, match="torn journal tail"):
+        rep = Journal.replay(path)
     assert rep["state"][("task", "t0")] == "DONE"
 
 
@@ -62,6 +63,145 @@ def test_none_path_journal_is_noop():
     j = Journal(None)
     j.transition("task", "u", "n", "A", "B")  # must not raise
     j.close()
+
+
+# --------------------------------------------------------------------------- #
+# Crash consistency: checksums, torn-tail truncation, fsync-on-critical
+# --------------------------------------------------------------------------- #
+
+def test_records_carry_checksums(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "DONE")
+    j.close()
+    [line] = open(path).read().splitlines()
+    rec = json.loads(line)
+    assert isinstance(rec["cs"], int)
+    assert line.rstrip("}").endswith(f'"cs":{rec["cs"]}')  # cs is last key
+
+
+def test_midfile_checksum_mismatch_raises(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "DONE")
+    j.transition("task", "task.0001", "t1", "DESCRIBED", "DONE")
+    j.close()
+    lines = open(path).read().splitlines()
+    # bit-rot the FIRST record's payload without touching its checksum:
+    # same length, still valid JSON, wrong crc
+    lines[0] = lines[0].replace('"DESCRIBED"', '"XESCRIBED"')
+    with open(path, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorruption, match="checksum"):
+        Journal.replay(path)
+
+
+def test_corrupt_final_line_truncated_and_byte_stable(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "DONE")
+    j.transition("task", "task.0001", "t1", "DESCRIBED", "DONE")
+    j.close()
+    lines = open(path).read().splitlines()
+    lines[-1] = lines[-1].replace('"DESCRIBED"', '"XESCRIBED"')
+    with open(path, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    with pytest.warns(RuntimeWarning, match="torn journal tail"):
+        rep = Journal.replay(path)
+    assert rep["state"] == {("task", "t0"): "DONE"}
+    after = open(path, "rb").read()
+    assert Journal.replay(path)["state"] == rep["state"]   # idempotent
+    assert open(path, "rb").read() == after                # byte-stable
+
+
+def test_open_for_append_recovers_torn_tail(tmp_path):
+    """A writer killed mid-append leaves a partial line; the next session
+    must truncate it BEFORE appending (otherwise its first record would be
+    concatenated onto the torn fragment, corrupting both)."""
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=1)
+    j.transition("task", "task.0000", "t0", "DESCRIBED", "DONE")
+    j.close()
+    with open(path, "a") as fh:
+        fh.write('{"rec": "transition", "kind": "task", "uid"')   # torn
+    with pytest.warns(RuntimeWarning, match="torn journal tail"):
+        j2 = Journal(path, flush_every=1)
+    assert j2.tail_recovered > 0
+    j2.transition("task", "task.0001", "t1", "DESCRIBED", "DONE")
+    j2.close()
+    rep = Journal.replay(path)     # no warning left, nothing torn
+    assert rep["state"] == {("task", "t0"): "DONE", ("task", "t1"): "DONE"}
+    assert rep["records"] == 2
+
+
+def test_writer_killed_mid_append_recovers(tmp_path):
+    """Regression for the real crash shape: a subprocess writer is killed
+    hard mid-stream; whatever the filesystem kept must replay to a prefix
+    of the writer's transactions — never an error, never a phantom state."""
+    import subprocess
+    import sys
+
+    path = str(tmp_path / "kill.jsonl")
+    src = (
+        "import sys, os\n"
+        "sys.path.insert(0, %r)\n"
+        "from repro.core.journal import Journal\n"
+        "j = Journal(%r, flush_every=1)\n"
+        "for i in range(10000):\n"
+        "    j.transition('task', f'task.{i:04d}', f't{i}', 'X', 'DONE')\n"
+        % (os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"), path))
+    proc = subprocess.Popen([sys.executable, "-c", src])
+    deadline = 0
+    while not (os.path.exists(path) and os.path.getsize(path) > 4096):
+        import time
+        time.sleep(0.01)
+        deadline += 1
+        assert deadline < 1000, "writer never produced output"
+    proc.kill()
+    proc.wait()
+    with open(path, "ab") as fh:    # simulate the torn block tail
+        fh.write(b'{"rec": "transition", "kind": "ta')
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        rep = Journal.replay(path)
+    assert rep["records"] >= 1
+    names = {n for (k, n) in rep["state"]}
+    # a contiguous prefix: if tN replayed, every earlier record did too
+    assert names == {f"t{i}" for i in range(len(names))}
+    assert all(s == "DONE" for s in rep["state"].values())
+
+
+def test_fsync_on_failed_and_pipeline_final(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, flush_every=10_000)           # batching would delay
+    j.transition("task", "task.0000", "t0", "SUBMITTED", "DONE")
+    assert j.fsyncs == 0                            # progress record: batched
+    j.transition("task", "task.0000", "t0", "SUBMITTED", "FAILED")
+    assert j.fsyncs == 1                            # terminal: on the platter
+    j.transition("pipeline", "pipe.0000", "p0", "SCHEDULING", "DONE")
+    assert j.fsyncs == 2
+    j.transition("stage", "stage.0000", "s0", "SCHEDULING", "DONE")
+    assert j.fsyncs == 2                            # stage DONE: not critical
+    j.close()
+    off = Journal(str(tmp_path / "j2.jsonl"), flush_every=1,
+                  fsync_critical=False)
+    off.transition("task", "task.0000", "t0", "SUBMITTED", "FAILED")
+    assert off.fsyncs == 0
+    off.close()
+
+
+def test_legacy_records_without_checksum_still_replay(tmp_path):
+    path = str(tmp_path / "legacy.jsonl")
+    with open(path, "w") as fh:
+        fh.write(json.dumps({"rec": "transition", "kind": "task",
+                             "uid": "task.0000", "name": "t0",
+                             "frm": "X", "to": "DONE"}) + "\n")
+        fh.write(json.dumps({"rec": "session", "event": "end"}) + "\n")
+    rep = Journal.replay(path)
+    assert rep["state"] == {("task", "t0"): "DONE"}
+    assert rep["records"] == 2
 
 
 @settings(max_examples=25, deadline=None)
